@@ -1,0 +1,44 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core.cluster import (Cluster, paper_heterogeneous,
+                                paper_homogeneous_h20,
+                                paper_homogeneous_h800)
+from repro.core.cost_model import LengthDistribution
+from repro.core.model_spec import PAPER_MODELS
+from repro.core.scheduler import SchedulerConfig, schedule
+
+# The paper's rollout length profile for math reasoning: long CoT traces
+# (AReaL trains with 16k-32k generation budgets; right-skewed lognormal).
+P = LengthDistribution(mean_len=12288.0, cv=0.6, prompt_len=512.0,
+                       max_len=32768.0)
+
+# Equal-budget settings from §3 ($5.28/h H800, $1.85/h H20):
+# 32×H800 = $169/h ≈ 88×H20 = $163/h ≈ 24+24 = $171/h.
+SETTINGS = {
+    "H800x32": paper_homogeneous_h800(32),
+    "H20x88": paper_homogeneous_h20(88),
+    "hex24+24": paper_heterogeneous(24, 24),
+}
+
+FAST_CFG = SchedulerConfig(tokens_per_step=2 ** 20, stable_iters=3,
+                           max_iters=16, adapt_delta=False)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def homogeneous_plan(spec, cluster, cfg=FAST_CFG):
+    """AReaL-on-homogeneous baseline: same scheduler, one device type
+    (the partition phase still balances D_T vs D_I)."""
+    return schedule(spec, cluster, P, cfg)
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.0f},{derived}"

@@ -1,0 +1,36 @@
+"""Figure 5: per-dollar throughput across cluster sizes 24–56 GPUs.
+
+Paper: ≈200 / 62 / 24 tokens/s/$ for 1.5B / 7B / 14B, stable across sizes.
+"""
+from __future__ import annotations
+
+from repro.core.cluster import paper_heterogeneous
+from repro.core.model_spec import PAPER_MODELS
+from .common import FAST_CFG, P, csv_row, homogeneous_plan, timed
+
+SIZES = [(12, 12), (16, 16), (20, 20), (24, 32)]    # 24..56 GPUs
+
+
+def run() -> list[str]:
+    rows = []
+    for name, spec in PAPER_MODELS.items():
+        per_dollar = []
+        for h800, h20 in SIZES:
+            cluster = paper_heterogeneous(h800, h20)
+            plan, us = timed(homogeneous_plan, spec, cluster)
+            tput = plan.throughput_tokens_per_sec(FAST_CFG.tokens_per_step)
+            ppd = tput / cluster.total_price()
+            per_dollar.append(ppd)
+            rows.append(csv_row(
+                f"fig5/{name}/{h800+h20}gpu", us,
+                f"{tput:.0f} t/s, {ppd:.1f} t/s/$"))
+        spread = (max(per_dollar) - min(per_dollar)) / max(per_dollar)
+        rows.append(csv_row(
+            f"fig5/{name}/stability", 0,
+            f"per-dollar spread {spread*100:.0f}% across 24-56 GPUs "
+            f"(paper: stable)"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

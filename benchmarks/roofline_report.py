@@ -1,0 +1,47 @@
+"""§Roofline aggregation: read experiments/dryrun/*.json and print the
+full per-(arch × shape × mesh) roofline table (used by EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import csv_row
+
+RESULTS = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells():
+    cells = []
+    if RESULTS.exists():
+        for p in sorted(RESULTS.glob("*.json")):
+            c = json.loads(p.read_text())
+            if c.get("overrides") or len(p.stem.split("__")) > 3:
+                continue    # hillclimb variants live in §Perf
+            cells.append(c)
+    return cells
+
+
+def run() -> list[str]:
+    rows = []
+    cells = load_cells()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skipped = [c for c in cells if c.get("status") == "skipped"]
+    for c in ok:
+        r = c["roofline"]
+        dom = max(("compute", "memory", "collective"),
+                  key=lambda k: r[f"t_{k}"])
+        rows.append(csv_row(
+            f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
+            c.get("compile_s", 0) * 1e6,
+            f"compute={r['t_compute']:.4f}s memory={r['t_memory']:.4f}s "
+            f"collective={r['t_collective']:.4f}s bottleneck={dom} "
+            f"useful={r['useful_flops_ratio']:.2f} "
+            f"mem/dev={r.get('memory_per_dev_gb') or 0:.1f}GB"))
+    rows.append(csv_row("roofline/summary", 0,
+                        f"{len(ok)} cells ok, {len(skipped)} skipped "
+                        f"(long_500k on full-attention archs)"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,51 @@
+"""Benchmark aggregator: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+MODULES = [
+    "table1_per_token_cost",
+    "fig2_stage_latency",
+    "fig3_end_to_end",
+    "fig4_breakdown",
+    "table2_weight_sync",
+    "table3_allocation_ablation",
+    "table4_cost_parity",
+    "fig5_cost_efficiency",
+    "table5_scheduler_speed",
+    "roofline_report",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception as e:                       # pragma: no cover
+            failures.append((mod_name, e))
+            traceback.print_exc()
+    if failures:
+        print(f"# {len(failures)} benchmark module(s) failed", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

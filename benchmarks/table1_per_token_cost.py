@@ -1,0 +1,36 @@
+"""Table 1: per-token $ cost by GPU type and stage.
+
+Paper claims: H20 ≈2.72× cheaper per inference token; H800 ≈3.12× cheaper
+per training token (averaged over model scales).
+"""
+from __future__ import annotations
+
+from repro.core.cluster import H20, H800
+from repro.core.cost_model import per_token_costs
+from repro.core.model_spec import PAPER_MODELS
+from .common import P, csv_row, timed
+
+
+def run() -> list[str]:
+    rows = []
+    inf_ratios, tr_ratios = [], []
+    for name, spec in PAPER_MODELS.items():
+        (i800, t800), us = timed(per_token_costs, spec, H800, P)
+        (i20, t20), _ = timed(per_token_costs, spec, H20, P)
+        inf_ratios.append(i800 / i20)
+        tr_ratios.append(t20 / t800)
+        rows.append(csv_row(
+            f"table1/{name}", us,
+            f"$inf H800={i800:.2e} H20={i20:.2e} (H20 {i800/i20:.2f}x "
+            f"cheaper) | $train H800={t800:.2e} H20={t20:.2e} "
+            f"(H800 {t20/t800:.2f}x cheaper)"))
+    rows.append(csv_row(
+        "table1/summary", 0,
+        f"mean H20 inference advantage {sum(inf_ratios)/3:.2f}x "
+        f"(paper 2.72x); mean H800 training advantage "
+        f"{sum(tr_ratios)/3:.2f}x (paper 3.12x)"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,46 @@
+"""Table 2: weight-update (sync) time across configurations.
+
+Paper: 1.5B/7B/14B → AReaL(H800) 4.75/14.79/26.00s; AReaL(H20)
+2.74/7.46/13.05s; AReaL-Hex 10.06/58.34/112.93s (slow 1.5 GB/s hetero
+link).  Also reports the int8-compressed variant (beyond-paper).
+"""
+from __future__ import annotations
+
+from repro.core.cluster import (paper_heterogeneous, paper_homogeneous_h20,
+                                paper_homogeneous_h800)
+from repro.core.cost_model import weight_sync_cost
+from repro.core.model_spec import PAPER_MODELS
+from .common import csv_row, timed
+
+
+def _sync(spec, cluster, frac_train=0.5, quant=2):
+    devs = cluster.devices
+    k = max(1, int(len(devs) * frac_train))
+    return weight_sync_cost(spec, cluster, devs[:k], devs[k:],
+                            quantize_bytes=quant)
+
+
+def run() -> list[str]:
+    rows = []
+    paper = {"1.5B": (4.75, 2.74, 10.06), "7B": (14.79, 7.46, 58.34),
+             "14B": (26.00, 13.05, 112.93)}
+    for name, spec in PAPER_MODELS.items():
+        t800, us = timed(_sync, spec, paper_homogeneous_h800(32))
+        t20, _ = timed(_sync, spec, paper_homogeneous_h20(88))
+        hexc = paper_heterogeneous(24, 24)
+        h800s = [d for d in hexc.devices if d.type_name == "H800"]
+        h20s = [d for d in hexc.devices if d.type_name == "H20"]
+        thex = weight_sync_cost(spec, hexc, h800s, h20s)
+        thex_int8 = weight_sync_cost(spec, hexc, h800s, h20s,
+                                     quantize_bytes=1)
+        p = paper[name]
+        rows.append(csv_row(
+            f"table2/{name}", us,
+            f"H800={t800:.1f}s(paper {p[0]}) H20={t20:.1f}s(paper {p[1]}) "
+            f"hex={thex:.1f}s(paper {p[2]}) hex-int8={thex_int8:.1f}s "
+            f"({thex/max(thex_int8,1e-9):.1f}x faster, beyond-paper)"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,53 @@
+"""Table 5: scheduling-algorithm convergence time vs exhaustive baselines.
+
+Paper: two-phase converges 20.0–44.2× faster than replacing either phase
+with exhaustive search (24–56 GPU clusters).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.cluster import paper_heterogeneous
+from repro.core.model_spec import PAPER_MODELS
+from repro.core.scheduler import (SchedulerConfig, schedule,
+                                  schedule_without_repartition,
+                                  schedule_without_search)
+from .common import P, csv_row
+
+SPEC = PAPER_MODELS["1.5B"]
+CFG = SchedulerConfig(tokens_per_step=2 ** 20, stable_iters=3,
+                      max_iters=12, adapt_delta=False)
+
+# node-granular clusters small enough that the exhaustive baselines finish
+CLUSTERS = {"16gpu": (8, 8), "24gpu": (8, 16), "32gpu": (16, 16)}
+
+
+def run() -> list[str]:
+    rows = []
+    for name, (a, b) in CLUSTERS.items():
+        cluster = paper_heterogeneous(a, b)
+        t0 = time.perf_counter()
+        schedule(SPEC, cluster, P, CFG)
+        t_ours = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        schedule_without_search(SPEC, cluster, P, CFG)
+        t_ws = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        try:
+            schedule_without_repartition(SPEC, cluster, P, CFG)
+            t_wr = time.perf_counter() - t0
+        except RuntimeError:
+            t_wr = float("inf")
+
+        rows.append(csv_row(
+            f"table5/{name}", t_ours * 1e6,
+            f"ours={t_ours:.2f}s w/o-search={t_ws:.2f}s "
+            f"({t_ws/max(t_ours,1e-9):.1f}x) w/o-repartition={t_wr:.2f}s "
+            f"({t_wr/max(t_ours,1e-9):.1f}x) — paper 20-44x"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,416 @@
+"""Analytic cost models for the AReaL-Hex scheduler.
+
+Every scheduler decision (constrained search, MILP coefficients, graph
+partition feedback) is driven by the three functions here:
+
+  * ``train_step_cost``   — C_Train(σ, D_T, δ(η))       (§4.1 / §4.2.1)
+  * ``replica_throughput``— h_ψ of a rollout replica     (§4.2.2, HexGen-style)
+  * ``weight_sync_cost``  — C_Update(σ, D_T, τ, D_I)     (Table 2)
+
+The models are *rooflines with calibrated efficiency factors*: each phase time
+is max(compute, HBM, collective) plus explicit latency terms.  The efficiency
+constants below are calibrated so the H800/H20 profiles reproduce the paper's
+Table 1 per-token cost ratios (H20 ≈2.7× cheaper per inference token, H800
+≈3.1× cheaper per training token) and Observation 2 (5×H20 < 1×H800 for
+training).  On TPU, the same constants are re-derived from the dry-run's
+``cost_analysis()`` (see launch/dryrun.py) — the model form is unchanged.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cluster import Cluster, Device, DeviceProfile, PROFILES
+from .model_spec import ModelSpec
+
+# ----------------------------------------------------------------- constants
+# Calibrated efficiency factors (fraction of peak achieved), per phase.
+TRAIN_MFU: Dict[str, float] = {
+    "H800": 0.40, "H20": 0.15, "TPUv5e": 0.45, "TPUv5p": 0.48,
+}
+PREFILL_MFU: Dict[str, float] = {
+    "H800": 0.55, "H20": 0.42, "TPUv5e": 0.55, "TPUv5p": 0.58,
+}
+DECODE_COMPUTE_EFF: Dict[str, float] = {
+    "H800": 0.75, "H20": 0.75, "TPUv5e": 0.70, "TPUv5p": 0.72,
+}
+HBM_EFF = 0.85          # achievable fraction of peak HBM bandwidth
+# Serving-engine efficiency: continuous batching gaps, sampling, ragged
+# attention, scheduler overhead.  Per-type: H800's larger SM count / faster
+# clocks hide serving-engine latency better.  Calibrated jointly so that at
+# the paper's long-CoT operating point (~12k mean rollout) the absolute
+# H800:H20 generation throughput is ≈1:1 and the per-dollar ratio ≈2.7×
+# in H20's favor — both straight from the paper's Table 1.
+DECODE_ENGINE_EFF: Dict[str, float] = {
+    "H800": 0.60, "H20": 0.30, "TPUv5e": 0.40, "TPUv5p": 0.50,
+}
+COLL_EFF = 0.80         # achievable fraction of peak link bandwidth
+KERNEL_LAUNCH_US = 25.0  # fixed per-step scheduling overhead (us) per layer-ish op
+ALLREDUCE_LAT_US = 15.0  # per-collective base latency (us)
+
+DTYPE_BYTES = 2          # bf16 activations / weights
+GRAD_BYTES = 2           # bf16 gradient all-reduce (compression doubles this win)
+MEM_UTIL = 0.90          # usable fraction of HBM
+
+
+def _mfu(table: Dict[str, float], profile: DeviceProfile) -> float:
+    return table.get(profile.name, 0.40)
+
+
+# ------------------------------------------------------------------- plans
+@dataclass(frozen=True)
+class StageSpec:
+    """One pipeline stage of a training plan: homogeneous device block."""
+
+    profile_name: str
+    dp: int
+    tp: int
+    n_layers: int
+
+    @property
+    def n_devices(self) -> int:
+        return self.dp * self.tp
+
+    @property
+    def profile(self) -> DeviceProfile:
+        return PROFILES[self.profile_name]
+
+
+@dataclass(frozen=True)
+class TrainPlan:
+    """σ — the model-training execution plan (§4.2.1).
+
+    Heterogeneous pipeline: each stage may use a different device type with its
+    own DP×TP block; layer counts are set proportional to stage compute.
+    """
+
+    stages: Tuple[StageSpec, ...]
+    microbatches: int = 8
+    zero_shard: bool = True     # shard optimizer states over DP (ZeRO-1)
+
+    @property
+    def n_devices(self) -> int:
+        return sum(s.n_devices for s in self.stages)
+
+    @property
+    def pp(self) -> int:
+        return len(self.stages)
+
+    def describe(self) -> str:
+        parts = [f"{s.profile_name}[dp={s.dp},tp={s.tp},L={s.n_layers}]"
+                 for s in self.stages]
+        return f"PP{self.pp}(" + " | ".join(parts) + f") mb={self.microbatches}"
+
+
+@dataclass(frozen=True)
+class ReplicaConfig:
+    """ψ — one rollout-replica configuration (§4.2.2).
+
+    ``tp_per_stage`` mirrors the paper's s_ψ = [tp_1..tp_S]; TP is restricted
+    to a single machine (ICI domain), so tp ≤ devices_per_node.
+    """
+
+    profile_name: str
+    tp_per_stage: Tuple[int, ...]          # pipeline stages for serving
+
+    @property
+    def n_devices(self) -> int:
+        return sum(self.tp_per_stage)
+
+    @property
+    def profile(self) -> DeviceProfile:
+        return PROFILES[self.profile_name]
+
+    def describe(self) -> str:
+        return f"{self.profile_name}xPP{len(self.tp_per_stage)}tp{list(self.tp_per_stage)}"
+
+
+# --------------------------------------------------------------- distribution
+@dataclass
+class LengthDistribution:
+    """Rollout output-length distribution P, profiled at cold start (§4.2.2).
+
+    Lognormal by default — RL reasoning rollouts are strongly right-skewed.
+    """
+
+    mean_len: float = 4096.0
+    cv: float = 0.6              # coefficient of variation (skew)
+    prompt_len: float = 512.0
+    max_len: float = 32768.0
+
+    def lognorm_params(self) -> Tuple[float, float]:
+        sigma2 = math.log(1.0 + self.cv**2)
+        mu = math.log(self.mean_len) - sigma2 / 2.0
+        return mu, math.sqrt(sigma2)
+
+    def mean(self) -> float:
+        return self.mean_len
+
+    def p95(self) -> float:
+        mu, s = self.lognorm_params()
+        return float(math.exp(mu + 1.645 * s))
+
+    def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        mu, s = self.lognorm_params()
+        out = rng.lognormal(mu, s, size=n)
+        return np.clip(out, 16, self.max_len).astype(np.int64)
+
+
+# ------------------------------------------------------------------ training
+@dataclass
+class TrainCost:
+    compute: float
+    tp_comm: float
+    dp_comm: float
+    pp_comm: float
+    bubble: float
+    total: float
+    per_device_mem: float
+    feasible: bool
+    reason: str = ""
+
+
+def _stage_param_fraction(spec: ModelSpec, n_layers: int) -> float:
+    """Fraction of total params held by a stage with n_layers layers (embeds
+    folded into first/last stage — approximated as uniform for the model)."""
+    return n_layers / max(spec.n_layers, 1)
+
+
+def train_step_cost(
+    spec: ModelSpec,
+    plan: TrainPlan,
+    *,
+    tokens_per_step: float,
+    seq_len: float = 8192.0,
+    opt_state_bytes: int = 8,   # AdamW m+v in fp32 after ZeRO cast policy
+    cross_stage_bw: Optional[float] = None,
+) -> TrainCost:
+    """C_Train: one optimizer-step latency for a global batch of
+    ``tokens_per_step`` tokens at average sequence length ``seq_len``."""
+    total_params = spec.params()
+    active_params = spec.params(active_only=True)
+
+    stage_times: List[float] = []
+    stage_tp_comm: List[float] = []
+    max_mem = 0.0
+    feasible = True
+    reason = ""
+
+    micro_tokens = tokens_per_step / plan.microbatches
+
+    for st in plan.stages:
+        prof = st.profile
+        frac = _stage_param_fraction(spec, st.n_layers)
+        # --- compute: 6·N_active·tokens plus attention quadratic term.
+        lin_flops = 6.0 * active_params * frac * tokens_per_step
+        window = spec.attn_window or seq_len
+        attn_ctx = min(seq_len, window)
+        attn_flops = (12.0 * st.n_layers * spec.hd * spec.n_heads
+                      * tokens_per_step * attn_ctx / 2.0)
+        flops = lin_flops + attn_flops
+        eff_flops = st.dp * st.tp * prof.flops * _mfu(TRAIN_MFU, prof)
+        t_compute = flops / eff_flops
+
+        # --- TP collectives: 4 all-reduces per layer (2 fwd + 2 bwd) of the
+        # microbatch activations, ring cost 2(tp-1)/tp, on intra-node links.
+        if st.tp > 1:
+            ar_bytes = micro_tokens / st.dp * spec.d_model * DTYPE_BYTES
+            per_ar = (2.0 * (st.tp - 1) / st.tp) * ar_bytes / (prof.intra_bw * COLL_EFF)
+            t_tp = plan.microbatches * st.n_layers * 4 * (per_ar + ALLREDUCE_LAT_US * 1e-6)
+        else:
+            t_tp = 0.0
+
+        stage_times.append(t_compute)
+        stage_tp_comm.append(t_tp)
+
+        # --- memory: bf16 params + grads on each TP shard; optimizer states
+        # additionally sharded over DP when zero_shard.
+        p_shard = total_params * frac / st.tp
+        mem = p_shard * (DTYPE_BYTES + GRAD_BYTES)
+        mem += p_shard * opt_state_bytes / (st.dp if plan.zero_shard else 1)
+        # activations (with checkpointing ≈ 2 × d_model bytes per token per layer)
+        mem += (micro_tokens / st.dp) * st.n_layers * spec.d_model * DTYPE_BYTES * 2
+        max_mem = max(max_mem, mem)
+        if mem > prof.hbm_cap * MEM_UTIL:
+            feasible = False
+            reason = (f"stage {st.profile_name} needs {mem/1e9:.1f} GB "
+                      f"> {prof.hbm_cap*MEM_UTIL/1e9:.1f} GB")
+
+    # --- DP gradient all-reduce, overlapped with backward up to 50%.
+    t_dp = 0.0
+    for st in plan.stages:
+        if st.dp > 1:
+            prof = st.profile
+            g_bytes = total_params * _stage_param_fraction(spec, st.n_layers) \
+                / st.tp * GRAD_BYTES
+            nodes = max(1, st.n_devices // prof.devices_per_node)
+            bw = prof.inter_bw if nodes > 1 else prof.intra_bw
+            t = (2.0 * (st.dp - 1) / st.dp) * g_bytes / (bw * COLL_EFF)
+            t_dp = max(t_dp, 0.5 * t)   # overlap credit
+
+    # --- PP: activation transfers + bubble.
+    t_pp = 0.0
+    if plan.pp > 1:
+        act_bytes = micro_tokens * spec.d_model * DTYPE_BYTES
+        for a, b in zip(plan.stages[:-1], plan.stages[1:]):
+            bw = (cross_stage_bw if cross_stage_bw is not None else
+                  min(a.profile.inter_bw, b.profile.inter_bw)
+                  if a.profile_name == b.profile_name else 1.5e9)
+            t_pp += 2.0 * plan.microbatches * act_bytes / (bw * COLL_EFF)
+
+    slowest = max(t + c for t, c in zip(stage_times, stage_tp_comm))
+    bubble = (plan.pp - 1) / plan.microbatches * slowest
+    overhead = KERNEL_LAUNCH_US * 1e-6 * spec.n_layers
+    total = slowest + bubble + t_dp + t_pp + overhead
+
+    return TrainCost(
+        compute=max(stage_times), tp_comm=max(stage_tp_comm), dp_comm=t_dp,
+        pp_comm=t_pp, bubble=bubble, total=total,
+        per_device_mem=max_mem, feasible=feasible, reason=reason,
+    )
+
+
+# ------------------------------------------------------------------- rollout
+@dataclass
+class ReplicaCost:
+    batch: int
+    prefill_time: float
+    decode_step_time: float
+    tokens_per_sec: float
+    per_device_mem: float
+    feasible: bool
+    reason: str = ""
+
+
+def replica_throughput(
+    spec: ModelSpec,
+    cfg: ReplicaConfig,
+    P: LengthDistribution,
+    *,
+    batch_cap: int = 256,
+) -> ReplicaCost:
+    """h_ψ: steady-state generated tokens/s of one rollout replica (§4.2.2).
+
+    HexGen-style: memory-derived max batch, prefill compute roofline, decode
+    max(weight-read, KV-read, compute) roofline per step, TP latency adders.
+    """
+    prof = cfg.profile
+    n = cfg.n_devices
+    p_len, o_len = P.prompt_len, P.mean()
+    total_ctx = p_len + o_len
+
+    w_bytes = spec.weight_bytes(DTYPE_BYTES)
+    w_per_dev = w_bytes / n
+    if w_per_dev > prof.hbm_cap * MEM_UTIL:
+        return ReplicaCost(0, 0, 0, 0.0, w_per_dev, False,
+                           f"weights {w_per_dev/1e9:.1f} GB/dev > cap")
+
+    kv_tok = spec.kv_bytes_per_token(DTYPE_BYTES)
+    state_b = spec.state_bytes(DTYPE_BYTES)
+    free = prof.hbm_cap * MEM_UTIL - w_per_dev
+    per_seq = (kv_tok * total_ctx + state_b) / n
+    batch = int(min(batch_cap, max(1, free / max(per_seq, 1.0))))
+
+    active = spec.params(active_only=True)
+
+    # Prefill: compute-bound.
+    pf_flops = 2.0 * active * batch * p_len \
+        + 4.0 * spec.n_layers * spec.n_heads * spec.hd * batch * p_len**2 / 2.0
+    t_prefill = pf_flops / (n * prof.flops * _mfu(PREFILL_MFU, prof))
+
+    # Decode step: one token for every sequence in the batch.
+    avg_ctx = p_len + o_len / 2.0
+    if spec.attn_window:
+        avg_ctx = min(avg_ctx, spec.attn_window)
+    t_w = w_bytes / n / (prof.hbm_bw * HBM_EFF)                       # weight read
+    t_kv = batch * (kv_tok * avg_ctx + state_b) / n / (prof.hbm_bw * HBM_EFF)
+    t_c = 2.0 * active * batch / (n * prof.flops * _mfu(DECODE_COMPUTE_EFF, prof))
+    t_lat = 0.0
+    tp = max(cfg.tp_per_stage)
+    if tp > 1:
+        # 2 all-reduces per layer per decode step, latency-dominated.
+        ar_bytes = batch * spec.d_model * DTYPE_BYTES
+        t_lat = spec.n_layers * 2 * (
+            ALLREDUCE_LAT_US * 1e-6
+            + (2.0 * (tp - 1) / tp) * ar_bytes / (prof.intra_bw * COLL_EFF))
+    if len(cfg.tp_per_stage) > 1:
+        # pipelined serving adds inter-stage hop latency per token
+        t_lat += (len(cfg.tp_per_stage) - 1) * (
+            batch * spec.d_model * DTYPE_BYTES / (prof.inter_bw * COLL_EFF))
+    t_decode = max(t_w, t_kv, t_c) + t_lat + KERNEL_LAUNCH_US * 1e-6
+
+    gen_time = t_prefill + o_len * t_decode
+    tps = batch * o_len / gen_time * DECODE_ENGINE_EFF.get(prof.name, 0.45)
+
+    mem = w_per_dev + batch * per_seq
+    return ReplicaCost(
+        batch=batch, prefill_time=t_prefill, decode_step_time=t_decode,
+        tokens_per_sec=tps, per_device_mem=mem,
+        feasible=mem <= prof.hbm_cap * MEM_UTIL,
+    )
+
+
+# --------------------------------------------------------------- weight sync
+def weight_sync_cost(
+    spec: ModelSpec,
+    cluster: Cluster,
+    d_train: Sequence[Device],
+    d_infer: Sequence[Device],
+    *,
+    quantize_bytes: int = DTYPE_BYTES,
+) -> float:
+    """C_Update: broadcast new policy weights from trainers to rollout workers.
+
+    Weights cross the narrowest cut between the two pools (the paper's 1.5 GB/s
+    hetero link), then fan out intra-pool via NCCL/ICI broadcast.  Cost model:
+    size/bw over the bottleneck + intra-pool broadcast at pool link speed.
+    """
+    if not d_infer:
+        return 0.0
+    w = spec.params() * quantize_bytes
+    # narrowest edge crossing the (D_T, D_I) cut — pick the *best* link crossing
+    # the cut (the transfer is scheduled over it), aggregated over parallel
+    # disjoint node pairs.
+    cross_links: Dict[Tuple[int, int], float] = {}
+    for a in d_train:
+        for b in d_infer:
+            key = (a.node, b.node)
+            bw = cluster.link_bw(a, b)
+            cross_links[key] = max(cross_links.get(key, 0.0), bw)
+    agg_cross = sum(cross_links.values())
+    if agg_cross <= 0:
+        agg_cross = 1.5e9
+    t_cross = w / (agg_cross * COLL_EFF)
+    # intra-pool broadcast (tree) at the pool's slowest profile inter bw
+    pool_bw = min(d.profile.inter_bw for d in d_infer)
+    n_nodes = len({d.node for d in d_infer})
+    t_fan = w / (pool_bw * COLL_EFF) * math.ceil(math.log2(max(n_nodes, 2)))
+    return t_cross + t_fan
+
+
+# ------------------------------------------------------- per-token economics
+def per_token_costs(spec: ModelSpec, profile: DeviceProfile,
+                    P: Optional[LengthDistribution] = None,
+                    n_devices: int = 8) -> Tuple[float, float]:
+    """($/inference-token, $/training-token) for one device type — Table 1."""
+    P = P or LengthDistribution()
+    tp = min(n_devices, profile.devices_per_node)
+    # pick the best single-node replica for inference
+    best_tps = 0.0
+    for t in (1, 2, 4, 8):
+        if t > tp:
+            continue
+        rc = replica_throughput(spec, ReplicaConfig(profile.name, (t,)), P)
+        if rc.feasible:
+            best_tps = max(best_tps, rc.tokens_per_sec * (n_devices // t))
+    infer_cost = (profile.price_per_hour * n_devices / 3600.0) / max(best_tps, 1e-9)
+
+    plan = TrainPlan(stages=(StageSpec(profile.name, dp=max(1, n_devices // tp),
+                                       tp=tp, n_layers=spec.n_layers),))
+    tc = train_step_cost(spec, plan, tokens_per_step=n_devices * 8192.0)
+    train_tps = n_devices * 8192.0 / tc.total
+    train_cost = (profile.price_per_hour * n_devices / 3600.0) / max(train_tps, 1e-9)
+    return infer_cost, train_cost

@@ -1,0 +1,306 @@
+"""Algorithm 1 — the two-phase AReaL-Hex scheduler.
+
+EM-style alternation:
+  Search-Phase:       σ ← Constrained_Search(D_T);  τ ← MILP(D_I, P, δ(η))
+  Repartition-Phase:  (D_T, D_I) ← Graph_Partition(C_T, C_I, D)
+until max{C_T, C_I} stable for K iterations.
+
+The γ (training compute fraction) window of the repartition phase is driven by
+binary search on the C_T vs C_I imbalance (§4.3 'Iterative refinement'):
+γ_L = γ_H = (q+r)/2 with  C_T < C_I ⇒ r ← mid,  else q ← mid, until C_T ≈ C_I.
+The node-granular partitioner receives a *widened* window around the midpoint
+(so an integral partition exists), preferring partitions closest to γ*.
+
+Exhaustive baselines for Table 5 are provided by ``schedule_exhaustive_*``.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, replace
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .cluster import Cluster, Device
+from .constrained_search import constrained_search, exhaustive_search
+from .cost_model import LengthDistribution, TrainCost, weight_sync_cost
+from .graph_partition import (PartitionResult, compute_fraction, partition,
+                              partition_exhaustive)
+from .milp import solve_rollout_milp, solve_rollout_milp_bisection
+from .model_spec import ModelSpec
+from .plan import RolloutPlan, ScheduledPlan
+from .staleness import StalenessConfig, adaptive_delta
+
+
+@dataclass
+class SchedulerConfig:
+    tokens_per_step: float = 2_097_152.0   # global batch tokens per train step
+    seq_len: float = 8192.0                # mean training sequence length
+    reward_cost_s: float = 1.0             # profiled constant (§4.2.2)
+    stable_iters: int = 20                 # K
+    max_iters: int = 64
+    gamma_width: float = 0.08              # half-width of window handed to partitioner
+    staleness: StalenessConfig = None      # type: ignore[assignment]
+    adapt_delta: bool = True
+    milp_bisection: bool = False           # paper-literal Eq. 2 path
+
+    def __post_init__(self):
+        if self.staleness is None:
+            self.staleness = StalenessConfig()
+
+
+@dataclass
+class _PhaseResult:
+    plan: ScheduledPlan
+    c_t: float
+    c_i: float
+
+
+def _evaluate_allocation(
+    spec: ModelSpec,
+    cluster: Cluster,
+    part: PartitionResult,
+    P: LengthDistribution,
+    cfg: SchedulerConfig,
+    delta: int,
+) -> Optional[ScheduledPlan]:
+    """Search-Phase: price one (D_T, D_I) allocation."""
+    sigma, tcost = constrained_search(
+        spec, cluster, part.train_devices,
+        tokens_per_step=cfg.tokens_per_step, seq_len=cfg.seq_len)
+    if sigma is None:
+        return None
+
+    rollouts_per_step = cfg.tokens_per_step / max(P.mean(), 1.0)
+    solver = (solve_rollout_milp_bisection if cfg.milp_bisection
+              else solve_rollout_milp)
+    milp_res = solver(spec, part.infer_devices, P,
+                      total_rollouts=delta * rollouts_per_step)
+    tau = milp_res.plan
+    if not tau.assignments or not math.isfinite(tau.makespan):
+        return None
+
+    c_update = weight_sync_cost(spec, cluster, part.train_devices,
+                                part.infer_devices)
+    c_t = delta * tcost.total
+    c_i = tau.makespan + cfg.reward_cost_s * delta + c_update * delta
+    return ScheduledPlan(
+        train_devices=[d.index for d in part.train_devices],
+        infer_devices=[d.index for d in part.infer_devices],
+        train_plan=sigma, rollout_plan=tau,
+        cost_train=c_t, cost_infer=c_i,
+        cost_update=c_update * delta, cost_reward=cfg.reward_cost_s * delta,
+        delta=delta, gamma=part.gamma_actual,
+    )
+
+
+def schedule(
+    spec: ModelSpec,
+    cluster: Cluster,
+    P: Optional[LengthDistribution] = None,
+    cfg: Optional[SchedulerConfig] = None,
+) -> ScheduledPlan:
+    """Run Algorithm 1 and return the best ScheduledPlan found."""
+    P = P or LengthDistribution()
+    cfg = cfg or SchedulerConfig()
+    t0 = time.perf_counter()
+
+    def solve_for_delta(delta: int) -> Tuple[Optional[ScheduledPlan], float]:
+        # --- γ binary search (repartition iterative refinement, §4.3)
+        q, r = 0.0, 1.0
+        best: Optional[ScheduledPlan] = None
+        stable = 0
+        prev_obj = math.inf
+        iters = 0
+        for it in range(cfg.max_iters):
+            iters = it + 1
+            mid = (q + r) / 2.0
+            part = partition(cluster,
+                             max(0.0, mid - cfg.gamma_width),
+                             min(1.0, mid + cfg.gamma_width))
+            if part is None:
+                # widen progressively until a node-granular partition exists
+                width = cfg.gamma_width
+                while part is None and width < 1.0:
+                    width *= 2.0
+                    part = partition(cluster, max(0.0, mid - width),
+                                     min(1.0, mid + width))
+                if part is None:
+                    break
+            plan = _evaluate_allocation(spec, cluster, part, P, cfg, delta)
+            if plan is not None:
+                if best is None or plan.objective < best.objective:
+                    best = plan
+                # --- binary search update on γ
+                if plan.cost_train < plan.cost_infer:
+                    r = mid        # training under-loaded → shrink its share
+                else:
+                    q = mid
+                obj = plan.objective
+                if abs(obj - prev_obj) <= 1e-3 * max(prev_obj, 1e-9):
+                    stable += 1
+                    if stable >= cfg.stable_iters:
+                        break
+                else:
+                    stable = 0
+                prev_obj = obj
+            else:
+                # infeasible at this γ: push compute toward training
+                q = mid
+            if r - q < 1e-4:
+                break
+        if best is not None:
+            best.iterations = iters
+        return best, (best.objective if best else math.inf)
+
+    # --- adaptive δ(η)
+    if cfg.adapt_delta:
+        cache: Dict[int, Optional[ScheduledPlan]] = {}
+
+        def run_window(delta: int) -> float:
+            plan, obj = solve_for_delta(delta)
+            cache[delta] = plan
+            return obj
+
+        delta = adaptive_delta(run_window, cfg.staleness)
+        plan = cache.get(delta)
+        if plan is None:
+            plan, _ = solve_for_delta(delta)
+    else:
+        plan, _ = solve_for_delta(cfg.staleness.delta0())
+
+    if plan is None:
+        raise RuntimeError("scheduler found no feasible plan for cluster "
+                           f"{cluster.type_counts} / model {spec.name}")
+    plan.wall_time_s = time.perf_counter() - t0
+    return plan
+
+
+# ------------------------------------------------------ Table 5 baselines
+def schedule_without_search(
+    spec: ModelSpec, cluster: Cluster,
+    P: Optional[LengthDistribution] = None,
+    cfg: Optional[SchedulerConfig] = None,
+) -> ScheduledPlan:
+    """'Ours (w/o Search)': replace the constrained search + reduced MILP with
+    exhaustive plan enumeration (paper-literal Eq. 2 bisection + exhaustive σ)."""
+    P = P or LengthDistribution()
+    cfg = cfg or SchedulerConfig()
+    cfg = replace(cfg, milp_bisection=True)
+    t0 = time.perf_counter()
+
+    best: Optional[ScheduledPlan] = None
+    q, r = 0.0, 1.0
+    delta = cfg.staleness.delta0()
+    for _ in range(cfg.max_iters):
+        mid = (q + r) / 2.0
+        width = cfg.gamma_width
+        part = partition(cluster, max(0.0, mid - width),
+                         min(1.0, mid + width))
+        while part is None and width < 1.0:   # widen until integral
+            width *= 2.0
+            part = partition(cluster, max(0.0, mid - width),
+                             min(1.0, mid + width))
+        if part is None:
+            break
+        sigma, tcost = exhaustive_search(
+            spec, cluster, part.train_devices,
+            tokens_per_step=cfg.tokens_per_step, seq_len=cfg.seq_len)
+        if sigma is None:
+            q = mid
+            continue
+        rollouts = delta * cfg.tokens_per_step / max(P.mean(), 1.0)
+        milp_res = solve_rollout_milp_bisection(
+            spec, part.infer_devices, P, total_rollouts=rollouts)
+        tau = milp_res.plan
+        if not tau.assignments:
+            q = mid
+            continue
+        c_update = weight_sync_cost(spec, cluster, part.train_devices,
+                                    part.infer_devices)
+        plan = ScheduledPlan(
+            train_devices=[d.index for d in part.train_devices],
+            infer_devices=[d.index for d in part.infer_devices],
+            train_plan=sigma, rollout_plan=tau,
+            cost_train=delta * tcost.total,
+            cost_infer=tau.makespan + cfg.reward_cost_s * delta + c_update * delta,
+            cost_update=c_update * delta, cost_reward=cfg.reward_cost_s * delta,
+            delta=delta, gamma=part.gamma_actual)
+        if best is None or plan.objective < best.objective:
+            best = plan
+        if plan.cost_train < plan.cost_infer:
+            r = mid
+        else:
+            q = mid
+        if r - q < 1e-4:
+            break
+    if best is None:
+        raise RuntimeError("no feasible plan (w/o search baseline)")
+    best.wall_time_s = time.perf_counter() - t0
+    return best
+
+
+def schedule_without_repartition(
+    spec: ModelSpec, cluster: Cluster,
+    P: Optional[LengthDistribution] = None,
+    cfg: Optional[SchedulerConfig] = None,
+    node_limit: int = 16,
+) -> ScheduledPlan:
+    """'Ours (w/o Repartition)': replace graph partition with exhaustive subset
+    enumeration over nodes (bounded by ``node_limit`` to stay runnable)."""
+    P = P or LengthDistribution()
+    cfg = cfg or SchedulerConfig()
+    t0 = time.perf_counter()
+    n_nodes = len({d.node for d in cluster.devices})
+    if n_nodes > node_limit:
+        raise RuntimeError(f"exhaustive repartition over {n_nodes} nodes "
+                           "is intractable (that is the point of Table 5)")
+    delta = cfg.staleness.delta0()
+    best: Optional[ScheduledPlan] = None
+    # enumerate every γ-unconstrained node bipartition and price it fully
+    from .graph_partition import _group_nodes  # reuse node grouping
+    groups = _group_nodes(cluster)
+    nodes = [n for t in sorted(groups) for n in groups[t]]
+    for mask in range(1, (1 << len(nodes)) - 1):
+        tr: List[Device] = []
+        inf: List[Device] = []
+        for i, node in enumerate(nodes):
+            (tr if (mask >> i) & 1 else inf).extend(node)
+        part = PartitionResult(tr, inf, 0.0, compute_fraction(cluster, tr),
+                               "exhaustive")
+        plan = _evaluate_allocation(spec, cluster, part, P, cfg, delta)
+        if plan is not None and (best is None or plan.objective < best.objective):
+            best = plan
+    if best is None:
+        raise RuntimeError("no feasible plan (w/o repartition baseline)")
+    best.wall_time_s = time.perf_counter() - t0
+    return best
+
+
+def schedule_uniform(
+    spec: ModelSpec, cluster: Cluster,
+    P: Optional[LengthDistribution] = None,
+    cfg: Optional[SchedulerConfig] = None,
+) -> ScheduledPlan:
+    """Table 3 'AReaL (u)' baseline: uniform (50/50 nodes per type) allocation,
+    no repartition optimization; search phase still picks σ, τ."""
+    P = P or LengthDistribution()
+    cfg = cfg or SchedulerConfig()
+    from .graph_partition import _group_nodes
+    groups = _group_nodes(cluster)
+    tr: List[Device] = []
+    inf: List[Device] = []
+    for t in sorted(groups):
+        nl = groups[t]
+        half = len(nl) // 2
+        for i, node in enumerate(nl):
+            (tr if i < half else inf).extend(node)
+    if not tr or not inf:
+        # single-node-per-type degenerate case: split devices instead
+        devs = list(cluster.devices)
+        tr, inf = devs[: len(devs) // 2], devs[len(devs) // 2:]
+    part = PartitionResult(tr, inf, 0.0, compute_fraction(cluster, tr), "uniform")
+    delta = cfg.staleness.delta0()
+    plan = _evaluate_allocation(spec, cluster, part, P, cfg, delta)
+    if plan is None:
+        raise RuntimeError("uniform allocation infeasible")
+    return plan

@@ -1,0 +1,111 @@
+"""Bounded-staleness control for asynchronous RL (AReaL semantics).
+
+The trainer holds weight version v.  Every rollout records the version(s) that
+generated it.  The controller enforces:
+
+  * admission  — a rollout may enter a training batch only if
+                 v_now − v_rollout ≤ η  (data staleness bound);
+  * capacity   — at most (η + 1)·B rollouts may be in flight (generating or
+                 buffered), where B is rollouts consumed per step — this is
+                 what *guarantees* the bound without discarding work;
+  * δ(η)       — the scheduling window: the number of training steps over
+                 which C_T / C_I are averaged (§4.1); adaptively grown by the
+                 scheduler until plans stabilize.
+
+This module is pure bookkeeping (no jax) so the runtime driver, the
+discrete-event simulator, and the scheduler all share it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class StalenessConfig:
+    eta: int = 4                   # max allowed version lag
+    rollouts_per_step: int = 256   # B: rollouts consumed per training step
+    delta_init: Optional[int] = None   # initial δ(η); default max(1, η)
+    delta_max: int = 64
+
+    def delta0(self) -> int:
+        return self.delta_init if self.delta_init is not None else max(1, self.eta)
+
+
+@dataclass
+class StalenessController:
+    config: StalenessConfig
+    version: int = 0                       # current trainer weight version
+    in_flight: int = 0                     # rollouts generating or buffered
+    _staleness_hist: List[int] = field(default_factory=list)
+
+    # ---------------------------------------------------------------- queries
+    @property
+    def capacity(self) -> int:
+        """Max concurrent rollouts: (η+1)·B."""
+        return (self.config.eta + 1) * self.config.rollouts_per_step
+
+    def can_launch(self, n: int = 1) -> bool:
+        return self.in_flight + n <= self.capacity
+
+    def admissible(self, rollout_version: int) -> bool:
+        return self.version - rollout_version <= self.config.eta
+
+    # ------------------------------------------------------------ transitions
+    def launch(self, n: int = 1) -> None:
+        if not self.can_launch(n):
+            raise RuntimeError(
+                f"staleness capacity exceeded: {self.in_flight}+{n} > {self.capacity}")
+        self.in_flight += n
+
+    def complete(self, n: int = 1) -> None:
+        # generation finished; rollout stays in flight (buffered) until consumed
+        pass
+
+    def consume(self, rollout_versions: List[int]) -> None:
+        """Trainer consumed a batch; record staleness, free capacity."""
+        for v in rollout_versions:
+            s = self.version - v
+            if s > self.config.eta:
+                raise RuntimeError(f"stale rollout consumed: lag {s} > η={self.config.eta}")
+            self._staleness_hist.append(s)
+        self.in_flight -= len(rollout_versions)
+        if self.in_flight < 0:
+            raise RuntimeError("consumed more rollouts than launched")
+
+    def drop(self, n: int = 1) -> None:
+        """Rollouts evicted as over-stale (should be rare under capacity ctl)."""
+        self.in_flight -= n
+        if self.in_flight < 0:
+            raise RuntimeError("dropped more rollouts than launched")
+
+    def bump_version(self) -> int:
+        self.version += 1
+        return self.version
+
+    # ------------------------------------------------------------------ stats
+    def mean_staleness(self) -> float:
+        h = self._staleness_hist
+        return sum(h) / len(h) if h else 0.0
+
+    def max_staleness(self) -> int:
+        return max(self._staleness_hist) if self._staleness_hist else 0
+
+
+def adaptive_delta(run_window, config: StalenessConfig,
+                   rel_tol: float = 0.05) -> int:
+    """§4.2.2 'Optimize across different δ(η) values': start from δ0 and double
+    until the resulting plan's *per-step* cost stabilizes.
+
+    ``run_window(delta) -> float`` returns the δ-step objective max{C_T,C_I};
+    we normalize per step and stop when successive values agree within rel_tol.
+    """
+    delta = config.delta0()
+    prev = run_window(delta) / delta
+    while delta * 2 <= config.delta_max:
+        nxt = run_window(delta * 2) / (delta * 2)
+        if abs(nxt - prev) <= rel_tol * max(abs(prev), 1e-12):
+            break
+        delta *= 2
+        prev = nxt
+    return delta

@@ -1,0 +1,4 @@
+from .tasks import MathTaskGenerator, Tokenizer
+from .packing import greedy_pack
+
+__all__ = ["MathTaskGenerator", "Tokenizer", "greedy_pack"]

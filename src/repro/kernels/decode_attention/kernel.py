@@ -1,0 +1,111 @@
+"""Pallas TPU flash-decode kernel.
+
+One query token per sequence attends over a blocked KV cache — the rollout
+stage's HBM-bound hot loop (the paper's Observation 1: decode reads the
+whole cache + weights per token, so HBM bandwidth is the roof).
+
+Tiling: grid = (B, Hkv, nC).  Per step, one (block_c × D) KV tile streams
+HBM→VMEM; the G query heads of the group score against it on the MXU;
+fp32 (acc, m, l) accumulators live in VMEM scratch across the sequential
+cache dimension.  Ragged batches are handled by per-slot absolute positions
+(k_pos; empty slots carry −2^30) — the same convention as the ring-buffer
+caches in models/.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(qpos_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *,
+                   scale: float, window: Optional[int], n_c: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale      # [G, D]
+    k = k_ref[0, :, 0].astype(jnp.float32)           # [bc, D]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [G, bc]
+
+    qpos = qpos_ref[0]                               # scalar (prefetch)
+    kpos = kpos_ref[0]                               # [bc]
+    ok = jnp.logical_and(kpos >= 0, kpos <= qpos)
+    if window is not None:
+        ok = jnp.logical_and(ok, kpos > qpos - window)
+    s = jnp.where(ok[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where((m_new == NEG_INF)[:, None], 0.0, p)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jax.lax.dot(p.astype(v.dtype), v,
+                                  preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ic == n_c - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode(
+    q: jax.Array,          # [B, Hkv, G, D]
+    k: jax.Array,          # [B, C, Hkv, D]
+    v: jax.Array,          # [B, C, Hkv, D]
+    q_pos: jax.Array,      # [B] int32
+    k_pos: jax.Array,      # [B, C] int32
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_c: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hkv, G, D = q.shape
+    _, C, _, _ = k.shape
+    assert C % block_c == 0, (C, block_c)
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    n_c = C // block_c
+
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               n_c=n_c)
+    grid = (B, Hkv, n_c)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ic: (b,),
+                         memory_space=pltpu.SMEM),            # q_pos
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ic: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_c, 1, D),
+                         lambda b, h, ic: (b, ic, h, 0)),
+            pl.BlockSpec((1, block_c, 1, D),
+                         lambda b, h, ic: (b, ic, h, 0)),
+            pl.BlockSpec((1, block_c), lambda b, h, ic: (b, ic)),  # k_pos
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ic: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos, q, k, v, k_pos)

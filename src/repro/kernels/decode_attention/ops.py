@@ -1,0 +1,55 @@
+"""jit'd wrapper for flash-decode: model layout → kernel layout + padding."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_decode
+from .ref import decode_attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def decode_attention(
+    q: jax.Array,          # [B, H, D]
+    k: jax.Array,          # [B, C, Hkv, D]
+    v: jax.Array,          # [B, C, Hkv, D]
+    q_pos: jax.Array,      # [B]
+    k_pos: jax.Array,      # [B, C]
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_c: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """One decode token over the KV cache.  Returns [B, H, D]."""
+    B, H, D = q.shape
+    _, C, Hkv, _ = k.shape
+    G = H // Hkv
+    interpret = _on_cpu() if interpret is None else interpret
+    # scale from the TRUE head dim (padding below would skew it)
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+
+    # pad head dim to 128 and cache length to block multiple
+    pd = (-D) % 128
+    if pd:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pd)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, pd)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pd)))
+    block_c = min(block_c, C) if C >= 128 else C
+    pc = (-C) % block_c
+    if pc:
+        k = jnp.pad(k, ((0, 0), (0, pc), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pc), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pc)),
+                        constant_values=-(2 ** 30))
+
+    qg = q.reshape(B, Hkv, G, D + pd)
+    o = flash_decode(qg, k, v, q_pos.astype(jnp.int32),
+                     k_pos.astype(jnp.int32), window=window, scale=scale,
+                     block_c=block_c, interpret=interpret)
+    return o.reshape(B, H, D + pd)[..., :D]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for flash-decode (one query token over a KV cache)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(
+    q: jax.Array,            # [B, H, D]       one new token per row
+    k: jax.Array,            # [B, C, Hkv, D]  cache
+    v: jax.Array,            # [B, C, Hkv, D]
+    q_pos: jax.Array,        # [B]  absolute position of the query token
+    k_pos: jax.Array,        # [B, C] absolute positions (−2^30 = empty slot)
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, H, D = q.shape
+    _, C, Hkv, _ = k.shape
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bchd->bhgc", qf, kf) * scale
+
+    ok = (k_pos >= 0) & (k_pos <= q_pos[:, None])
+    if window is not None:
+        ok = ok & (k_pos > (q_pos[:, None] - window))
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    any_ok = jnp.any(ok, axis=-1)[:, None, None, None]
+    o = jnp.einsum("bhgc,bchd->bhgd", p, vf)
+    o = jnp.where(any_ok, o, 0.0)
+    return o.reshape(B, H, D).astype(q.dtype)

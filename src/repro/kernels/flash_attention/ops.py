@@ -1,0 +1,91 @@
+"""jit'd wrapper for the flash-attention kernel.
+
+``flash_attention`` takes model-layout tensors [B, S, H, D], pads the head
+dim to a 128 multiple and the sequence dims to block multiples, runs the
+Pallas kernel (interpret=True on CPU so the kernel body is validated here;
+compiled on TPU), and unpads.  Backward: custom_vjp whose bwd recomputes
+attention with the pure-jnp reference (flash-style recompute — no O(S²)
+residuals are saved).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+from .ref import attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x, multiple, axis):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(q, k, v, causal=True, window=None, scale=None,
+                    block_q=128, block_k=128, interpret=None):
+    """q [B,Sq,H,D], k/v [B,Sk,Hkv,D] -> [B,Sq,H,D].  Contiguous positions
+    (training/prefill path: q rows at positions 0..Sq-1, k at 0..Sk-1)."""
+    return _fwd_impl(q, k, v, causal, window, scale, block_q, block_k,
+                     interpret)
+
+
+def _fwd_impl(q, k, v, causal, window, scale, block_q, block_k, interpret):
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    interpret = _on_cpu() if interpret is None else interpret
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    # layout: [B, H, S, D]; pad D to 128 multiple, S to block multiples
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    qt, _ = _pad_to(qt, 128, 3)
+    kt, _ = _pad_to(kt, 128, 3)
+    vt, _ = _pad_to(vt, 128, 3)
+    qt, pq = _pad_to(qt, block_q, 2)
+    kt, pk = _pad_to(kt, block_k, 2)
+    vt, _ = _pad_to(vt, block_k, 2)
+
+    o = flash_attention_fwd(qt, kt, vt, causal=causal, window=window,
+                            scale=scale, kv_len=Sk, block_q=block_q,
+                            block_k=block_k, interpret=interpret)
+    o = o[:, :, :Sq, :D]
+    return jnp.moveaxis(o, 1, 2)
+
+
+def _fwd_rule(q, k, v, causal, window, scale, block_q, block_k, interpret):
+    out = _fwd_impl(q, k, v, causal, window, scale, block_q, block_k,
+                    interpret)
+    return out, (q, k, v)
+
+
+def _bwd_rule(causal, window, scale, block_q, block_k, interpret, res, g):
+    q, k, v = res
+    B, Sq, _, _ = q.shape
+    _, Sk, _, _ = k.shape
+    qp = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    kp = jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32), (B, Sk))
+
+    def f(q_, k_, v_):
+        return attention_ref(q_, k_, v_, q_positions=qp, k_positions=kp,
+                             causal=causal, window=window, scale=scale)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd_rule, _bwd_rule)

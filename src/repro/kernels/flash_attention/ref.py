@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for flash attention (causal / SWA / GQA).
+
+Materializes the full score matrix in fp32 — only for test shapes.
+Semantics contract shared with kernel.py and models/blocks.attention:
+positions are absolute; empty/padded KV slots carry position < 0 and are
+never attended.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,                # [B, Sq, H, D]
+    k: jax.Array,                # [B, Sk, Hkv, D]
+    v: jax.Array,                # [B, Sk, Hkv, D]
+    *,
+    q_positions: jax.Array,      # [B, Sq]
+    k_positions: jax.Array,      # [B, Sk]
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, kf) * scale
+
+    qp = q_positions[:, :, None]
+    kp = k_positions[:, None, :]
+    ok = kp >= 0
+    if causal:
+        ok = ok & (kp <= qp)
+    if window is not None:
+        ok = ok & (kp > qp - window)
+    s = jnp.where(ok[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no valid key → zero output (softmax of all -inf ≈ uniform;
+    # mask them out explicitly)
+    any_ok = jnp.any(ok, axis=-1)[:, :, None, None]
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p, vf)
+    o = jnp.where(any_ok[..., None], o, 0.0)
+    return o.reshape(B, Sq, H, D).astype(q.dtype)

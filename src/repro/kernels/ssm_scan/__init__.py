@@ -1,0 +1,3 @@
+from .ops import mlstm_scan
+
+__all__ = ["mlstm_scan"]

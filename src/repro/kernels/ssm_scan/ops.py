@@ -1,0 +1,41 @@
+"""jit'd wrapper for the chunked mLSTM scan kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import mlstm_scan_kernel
+from .ref import mlstm_scan_ref
+
+NEG = -1e30
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def mlstm_scan(q, k, v, ig, fg, *, chunk: int = 64,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """Model layout: q/k/v [B, S, H, D]; ig/fg [B, S, H] → [B, S, H, D]."""
+    B, S, H, D = q.shape
+    interpret = _on_cpu() if interpret is None else interpret
+
+    pad = (-S) % chunk
+    if pad:
+        zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, zpad)
+        k = jnp.pad(k, zpad)
+        v = jnp.pad(v, zpad)
+        ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)), constant_values=NEG)
+        fg = jnp.pad(fg, ((0, 0), (0, pad), (0, 0)), constant_values=1e4)
+    Sp = S + pad
+
+    def flat(x):
+        return jnp.moveaxis(x, 2, 1).reshape(B * H, Sp, *x.shape[3:])
+
+    h = mlstm_scan_kernel(flat(q), flat(k), flat(v), flat(ig), flat(fg),
+                          chunk=chunk, interpret=interpret)
+    h = jnp.moveaxis(h.reshape(B, H, Sp, D), 1, 2)[:, :S]
+    return h

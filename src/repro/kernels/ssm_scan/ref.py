@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the chunked mLSTM scan: the strict per-timestep
+recurrence (identical math to models/xlstm.mlstm_step, batched over time in
+python — test shapes only)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_scan_ref(q, k, v, ig, fg):
+    """q/k/v: [BH, S, D]; ig/fg: [BH, S] -> h: [BH, S, D].
+
+    Sequential stabilized recurrence:
+      m_t = max(logsig(f_t) + m_{t-1}, i_t)
+      C_t = e^{logsig(f)+m_{t-1}-m_t} C_{t-1} + e^{i_t - m_t} k_t v_t^T
+      n_t likewise with k_t;  h_t = (q_t/√D) C_t / max(|q·n_t|, e^{-m_t})
+    """
+    BH, S, D = q.shape
+    scale = 1.0 / math.sqrt(D)
+
+    def per_row(qr, kr, vr, igr, fgr):
+        def step(carry, xs):
+            C, n, m = carry
+            qt, kt, vt, it, ft = xs
+            lf = jax.nn.log_sigmoid(ft.astype(jnp.float32))
+            g = it.astype(jnp.float32)
+            m_new = jnp.maximum(lf + m, g)
+            f_sc = jnp.exp(lf + m - m_new)
+            i_sc = jnp.exp(g - m_new)
+            kf = kt.astype(jnp.float32)
+            vf = vt.astype(jnp.float32)
+            qf = qt.astype(jnp.float32) * scale
+            C2 = f_sc * C + i_sc * jnp.outer(kf, vf)
+            n2 = f_sc * n + i_sc * kf
+            qn = jnp.abs(jnp.sum(qf * n2))
+            h = (qf @ C2) / jnp.maximum(qn, jnp.exp(-m_new))
+            return (C2, n2, m_new), h
+
+        carry0 = (jnp.zeros((D, D), jnp.float32),
+                  jnp.zeros((D,), jnp.float32), jnp.float32(0.0))
+        _, h = jax.lax.scan(step, carry0, (qr, kr, vr, igr, fgr))
+        return h
+
+    return jax.vmap(per_row)(q, k, v, ig, fg).astype(q.dtype)

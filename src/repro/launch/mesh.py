@@ -1,0 +1,19 @@
+"""Production meshes.  A FUNCTION (not module-level constant) so importing
+this module never touches jax device state — only dryrun.py forces the
+512-device host platform."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips as (16, 16) ("data", "model").
+    Multi-pod: 2 pods = 512 chips as (2, 16, 16) ("pod", "data", "model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over however many devices the host actually has (tests)."""
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,62 @@
+"""Rollout-serving launcher: batched generation with the rollout engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch xlstm-1.3b --smoke \
+        --batch 8 --max-new 32
+
+Serves batched math prompts through prefill + KV-cache decode (the same
+``serve_step`` the decode_* dry-run shapes lower), printing throughput and
+a sample completion.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen-distill-1.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--greedy", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.data.tasks import MathTaskGenerator, Tokenizer
+    from repro.models.api import get_model
+    from repro.rl.rollout import GenConfig, RolloutEngine
+    from repro.rl.weight_sync import WeightStore
+
+    tok = Tokenizer()
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = cfg.replace(vocab=tok.vocab_size, dtype="float32", remat=False)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed), cfg)
+    store = WeightStore()
+    store.publish(params)
+    engine = RolloutEngine(cfg, store,
+                           GenConfig(max_new_tokens=args.max_new,
+                                     greedy=args.greedy),
+                           rng_seed=args.seed)
+    gen = MathTaskGenerator(seed=args.seed)
+    tasks = gen.batch(args.batch)
+
+    t0 = time.time()
+    rollouts, metrics = engine.generate(tasks)
+    dt = time.time() - t0
+    n_tok = sum(len(r.completion_ids) for r in rollouts)
+    print(f"generated {n_tok} tokens for {args.batch} requests "
+          f"in {dt:.2f}s  ({n_tok/dt:.1f} tok/s)  "
+          f"mean_len={metrics['mean_len']:.1f}")
+    r = rollouts[0]
+    print("sample prompt:    ", repr(tok.decode(r.prompt_ids)))
+    print("sample completion:", repr(tok.decode(r.completion_ids)))
+
+
+if __name__ == "__main__":
+    main()

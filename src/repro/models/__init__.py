@@ -1,0 +1,18 @@
+"""Model zoo substrate: pure-function JAX modules, scan-over-layers.
+
+Every architecture exposes the same protocol (see ``api.py``):
+
+    init(rng, cfg)                      -> params pytree
+    forward(params, cfg, batch)         -> logits           (training fwd)
+    init_cache(cfg, batch, max_len)     -> cache pytree     (decode state)
+    decode_step(params, cfg, cache, tok, pos) -> (logits, cache)
+    input_specs(cfg, shape)             -> ShapeDtypeStruct dict
+
+Families: dense / moe / ssm (xlstm) / hybrid (hymba) / encdec (whisper) /
+vlm (internvl, stubbed ViT frontend).
+"""
+from .api import (ModelConfig, get_model, train_input_specs,
+                  decode_input_specs)
+
+__all__ = ["ModelConfig", "get_model", "train_input_specs",
+           "decode_input_specs"]

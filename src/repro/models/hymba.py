@@ -1,0 +1,320 @@
+"""Hymba — hybrid parallel attention + Mamba(SSM) heads [arXiv:2411.13676].
+
+Each layer runs a sliding-window GQA attention path and a selective-SSM
+(Mamba-style, diagonal state ``ssm_state``) path *in parallel* on the same
+normalized input; the two outputs are each RMS-normalized and averaged
+(the paper's fusion), then the SwiGLU FFN follows.  Meta tokens are omitted
+(noted in DESIGN.md §Arch-applicability).
+
+The SSM path is evaluated chunkwise with ``lax.associative_scan`` inside a
+chunk and a carried diagonal state across chunks — the jnp oracle for the
+``kernels/ssm_scan`` Pallas kernel family.  Decode carries (attention ring
+KV of window W) + (SSM state [d_inner, N]) — O(1) in context, so hymba runs
+``long_500k``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import blocks
+from .api import ModelConfig
+
+Array = jax.Array
+
+SSM_CHUNK = 128
+
+
+# ------------------------------------------------------------------ SSM core
+def ssm_chunkwise(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
+                  D: Array, h0: Array, chunk: int = SSM_CHUNK
+                  ) -> Tuple[Array, Array]:
+    """Selective diagonal SSM over a sequence, chunked.
+
+    x:  [B, S, d]   inputs (d = d_inner)
+    dt: [B, S, d]   softplus'd timestep
+    A:  [d, N]      negative decay rates (−exp(A_log))
+    Bm: [B, S, N]   input projections
+    Cm: [B, S, N]   output projections
+    D:  [d]         skip
+    h0: [B, d, N]   carried state
+    Returns (y [B, S, d], h_final [B, d, N]).
+    """
+    B, S, d = x.shape
+    N = A.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nch = Sp // chunk
+
+    xc = x.reshape(B, nch, chunk, d)
+    dtc = dt.reshape(B, nch, chunk, d)
+    Bc = Bm.reshape(B, nch, chunk, N)
+    Cc = Cm.reshape(B, nch, chunk, N)
+
+    def chunk_step(h, xs):
+        xi, dti, Bi, Ci = xs               # [B, T, d], [B, T, N]
+        # discretize: a_t = exp(dt*A) [B,T,d,N]; b_t = dt * B ⊗ x
+        dA = dti[..., None] * A[None, None]             # [B,T,d,N]
+        a = jnp.exp(dA)
+        b = (dti * xi)[..., None] * Bi[:, :, None, :]   # [B,T,d,N]
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b1 * a2 + b2
+
+        a_cum, b_cum = lax.associative_scan(combine, (a, b), axis=1)
+        h_t = b_cum + a_cum * h[:, None]                # [B,T,d,N]
+        y = jnp.einsum("btdn,btn->btd", h_t, Ci) + D[None, None] * xi
+        return h_t[:, -1], y
+
+    h, y = lax.scan(lambda c, xs: chunk_step(c, xs), h0,
+                    (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+                     jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0)))
+    y = jnp.moveaxis(y, 0, 1).reshape(B, Sp, d)[:, :S]
+    return y, h
+
+
+def ssm_step(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array, D: Array,
+             h: Array) -> Tuple[Array, Array]:
+    """One decode step: x/dt [B, d]; Bm/Cm [B, N]; h [B, d, N]."""
+    dA = dt[..., None] * A[None]
+    a = jnp.exp(dA)
+    b = (dt * x)[..., None] * Bm[:, None, :]
+    h_new = a * h + b
+    y = jnp.einsum("bdn,bn->bd", h_new, Cm) + D[None] * x
+    return y, h_new
+
+
+# ---------------------------------------------------------------------- init
+def _init_layer(rng: Array, cfg: ModelConfig):
+    dt_ = cfg.jdtype
+    d, N = cfg.d_model, cfg.ssm_state
+    ks = jax.random.split(rng, 8)
+    # Mamba A init: -(1..N) per channel (S4D-real)
+    A_log = jnp.log(jnp.broadcast_to(
+        jnp.arange(1, N + 1, dtype=jnp.float32), (d, N)))
+    return {
+        "norm": jnp.ones((d,), dt_),
+        "attn": blocks.init_attn_params(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                        cfg.hd, dt_),
+        "attn_out_norm": jnp.ones((d,), dt_),
+        # SSM path
+        "ssm_in": blocks.dense_init(ks[1], d, d, dt_),
+        "w_dt": blocks.dense_init(ks[2], d, d, jnp.float32),
+        "b_dt": jnp.full((d,), -4.0, jnp.float32),   # softplus → small dt
+        "w_B": blocks.dense_init(ks[3], d, N, jnp.float32),
+        "w_C": blocks.dense_init(ks[4], d, N, jnp.float32),
+        "A_log": A_log,
+        "Dskip": jnp.ones((d,), jnp.float32),
+        "ssm_out": blocks.dense_init(ks[5], d, d, dt_),
+        "ssm_out_norm": jnp.ones((d,), dt_),
+        # FFN
+        "ffn_norm": jnp.ones((d,), dt_),
+        "ffn": blocks.init_swiglu_params(ks[6], d, cfg.d_ff, dt_),
+    }
+
+
+def init(rng: Array, cfg: ModelConfig) -> Dict:
+    dt = cfg.jdtype
+    k_emb, k_layers, k_head = jax.random.split(rng, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params = {
+        "embed": blocks.embed_init(k_emb, cfg.padded_vocab, cfg.d_model, dt),
+        "layers": jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = blocks.dense_init(k_head, cfg.d_model,
+                                              cfg.padded_vocab, dt)
+    return params
+
+
+# ------------------------------------------------------------------- forward
+def _ssm_path(lp: Dict, x: Array, h0: Array) -> Tuple[Array, Array]:
+    """x: [B,S,d] normalized input → (y [B,S,d], h_final)."""
+    xin = jnp.einsum("bsd,de->bse", x, lp["ssm_in"])
+    xin_f = xin.astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,de->bse", x.astype(jnp.float32), lp["w_dt"])
+        + lp["b_dt"])
+    Bm = jnp.einsum("bsd,dn->bsn", x.astype(jnp.float32), lp["w_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", x.astype(jnp.float32), lp["w_C"])
+    A = -jnp.exp(lp["A_log"])
+    y, h = ssm_chunkwise(xin_f, dt, A, Bm, Cm, lp["Dskip"], h0)
+    y = jnp.einsum("bsd,de->bse", y.astype(x.dtype), lp["ssm_out"])
+    return y, h
+
+
+def _attn_path(lp: Dict, x: Array, positions: Array, cfg: ModelConfig) -> Array:
+    q, k, v = blocks.qkv_project(x, lp["attn"], cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.hd)
+    q = blocks.apply_rope(q, positions, cfg.rope_theta)
+    k = blocks.apply_rope(k, positions, cfg.rope_theta)
+    o = blocks.attention(q, k, v, q_positions=positions, k_positions=positions,
+                         causal=True, window=cfg.attn_window,
+                         q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    return blocks.out_project(o, lp["attn"])
+
+
+def _layer_fwd(lp: Dict, h: Array, positions: Array, cfg: ModelConfig) -> Array:
+    B, S, d = h.shape
+    x = blocks.rms_norm(h, lp["norm"], cfg.norm_eps)
+    attn_y = _attn_path(lp, x, positions, cfg)
+    h0 = jnp.zeros((B, d, cfg.ssm_state), jnp.float32)
+    ssm_y, _ = _ssm_path(lp, x, h0)
+    # normalized mean fusion (Hymba §2)
+    fused = 0.5 * (blocks.rms_norm(attn_y, lp["attn_out_norm"], cfg.norm_eps)
+                   + blocks.rms_norm(ssm_y, lp["ssm_out_norm"], cfg.norm_eps))
+    h = h + fused
+    x = blocks.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+    h = h + blocks.swiglu(x, lp["ffn"])
+    return h
+
+
+def forward(params: Dict, cfg: ModelConfig, tokens: Array, **_) -> Array:
+    B, S = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    step = partial(_layer_fwd, positions=positions, cfg=cfg)
+    body = (jax.checkpoint(lambda c, lp: (step(lp, c), None)) if cfg.remat
+            else (lambda c, lp: (step(lp, c), None)))
+    h, _ = lax.scan(body, h, params["layers"], unroll=cfg.scan_unroll)
+    h = blocks.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    table = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", h, table)
+
+
+# -------------------------------------------------------------------- decode
+def init_cache(cfg: ModelConfig, *, batch: int, max_len: int) -> Dict:
+    W = min(cfg.attn_window or max_len, max_len)
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, W, cfg.n_kv_heads, cfg.hd),
+                       cfg.jdtype),
+        "v": jnp.zeros((cfg.n_layers, batch, W, cfg.n_kv_heads, cfg.hd),
+                       cfg.jdtype),
+        "k_pos": jnp.full((batch, W), -(2 ** 30), jnp.int32),
+        "ssm": jnp.zeros((cfg.n_layers, batch, cfg.d_model, cfg.ssm_state),
+                         jnp.float32),
+    }
+
+
+def decode_step(params: Dict, cfg: ModelConfig, cache: Dict, token: Array,
+                pos: Array) -> Tuple[Array, Dict]:
+    B = token.shape[0]
+    W = cache["k"].shape[2]
+    h = jnp.take(params["embed"], token[:, None], axis=0)
+    positions = pos[:, None]
+    slot = pos % W
+    k_pos = cache["k_pos"].at[jnp.arange(B), slot].set(pos)
+
+    def body(h, xs):
+        lp, ck, cv, hs = xs
+        x = blocks.rms_norm(h, lp["norm"], cfg.norm_eps)
+        # attention path (ring cache)
+        q, k, v = blocks.qkv_project(x, lp["attn"], cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.hd)
+        q = blocks.apply_rope(q, positions, cfg.rope_theta)
+        k = blocks.apply_rope(k, positions, cfg.rope_theta)
+        ck = ck.at[jnp.arange(B), slot].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[jnp.arange(B), slot].set(v[:, 0].astype(cv.dtype))
+        o = blocks.attention(q, ck, cv, q_positions=positions,
+                             k_positions=k_pos, causal=True,
+                             window=cfg.attn_window, q_chunk=1,
+                             kv_chunk=cfg.kv_chunk)
+        attn_y = blocks.out_project(o, lp["attn"])
+        # ssm path
+        xin = jnp.einsum("bsd,de->bse", x, lp["ssm_in"]).astype(jnp.float32)
+        dt = jax.nn.softplus(
+            jnp.einsum("bsd,de->bse", x.astype(jnp.float32), lp["w_dt"])
+            + lp["b_dt"])
+        Bm = jnp.einsum("bsd,dn->bsn", x.astype(jnp.float32), lp["w_B"])
+        Cm = jnp.einsum("bsd,dn->bsn", x.astype(jnp.float32), lp["w_C"])
+        A = -jnp.exp(lp["A_log"])
+        y, hs2 = ssm_step(xin[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0],
+                          lp["Dskip"], hs)
+        ssm_y = jnp.einsum("bd,de->be", y.astype(x.dtype),
+                           lp["ssm_out"])[:, None]
+        fused = 0.5 * (blocks.rms_norm(attn_y, lp["attn_out_norm"],
+                                       cfg.norm_eps)
+                       + blocks.rms_norm(ssm_y, lp["ssm_out_norm"],
+                                         cfg.norm_eps))
+        h = h + fused
+        x = blocks.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+        h = h + blocks.swiglu(x, lp["ffn"])
+        return h, (ck, cv, hs2)
+
+    h, (ck, cv, hs) = lax.scan(body, h, (params["layers"], cache["k"],
+                                         cache["v"], cache["ssm"]),
+                               unroll=cfg.scan_unroll)
+    hf = blocks.rms_norm(h[:, 0], params["final_norm"], cfg.norm_eps)
+    table = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", hf, table)
+    return logits, {"k": ck, "v": cv, "k_pos": k_pos, "ssm": hs}
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: Array, *, max_len: int,
+            **_) -> Tuple[Array, Dict]:
+    B, S = tokens.shape
+    cache = init_cache(cfg, batch=B, max_len=max_len)
+    W = cache["k"].shape[2]
+    h = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(h, xs):
+        lp, hs0 = xs
+        x = blocks.rms_norm(h, lp["norm"], cfg.norm_eps)
+        q, k, v = blocks.qkv_project(x, lp["attn"], cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.hd)
+        q = blocks.apply_rope(q, positions, cfg.rope_theta)
+        k = blocks.apply_rope(k, positions, cfg.rope_theta)
+        o = blocks.attention(q, k, v, q_positions=positions,
+                             k_positions=positions, causal=True,
+                             window=cfg.attn_window, q_chunk=cfg.q_chunk,
+                             kv_chunk=cfg.kv_chunk)
+        attn_y = blocks.out_project(o, lp["attn"])
+        ssm_y, hs = _ssm_path(lp, x, hs0)
+        fused = 0.5 * (blocks.rms_norm(attn_y, lp["attn_out_norm"],
+                                       cfg.norm_eps)
+                       + blocks.rms_norm(ssm_y, lp["ssm_out_norm"],
+                                         cfg.norm_eps))
+        h = h + fused
+        x = blocks.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+        h = h + blocks.swiglu(x, lp["ffn"])
+        return h, (k, v, hs)
+
+    h, (ks, vs, hss) = lax.scan(body, h, (params["layers"], cache["ssm"]),
+                                unroll=cfg.scan_unroll)
+    # fill ring caches with the last W positions
+    C = W
+    if S <= C:
+        cache["k"] = lax.dynamic_update_slice(
+            cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+        cache["v"] = lax.dynamic_update_slice(
+            cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+        cache["k_pos"] = lax.dynamic_update_slice(cache["k_pos"], positions,
+                                                  (0, 0))
+    else:
+        last_pos = positions[:, S - C:]
+        slots = last_pos % C
+        b_idx = jnp.arange(B)[:, None]
+        cache["k"] = cache["k"].at[:, b_idx, slots].set(
+            ks[:, :, S - C:].astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[:, b_idx, slots].set(
+            vs[:, :, S - C:].astype(cache["v"].dtype))
+        cache["k_pos"] = cache["k_pos"].at[b_idx, slots].set(last_pos)
+    cache["ssm"] = hss
+    hf = blocks.rms_norm(h[:, -1], params["final_norm"], cfg.norm_eps)
+    table = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", hf, table)
+    return logits, cache

@@ -1,0 +1,269 @@
+"""Mixture-of-Experts decoder (qwen3-moe 128e top-8, grok-1 8e top-2).
+
+TPU-native dispatch: GShard/MaxText-style capacity-based routing with
+one-hot dispatch/combine einsums, evaluated over token *chunks* (scanned)
+so the dispatch tensor stays [chunk, E, C] — small enough for VMEM-friendly
+lowering — while expert weights stay resident.  Expert parallelism comes
+from GSPMD: expert-stacked weights [E, d, f] are sharded over the "model"
+mesh axis on E (``moe_shard="expert"``, qwen3: 128/16 = 8 experts/device) or
+on f (``moe_shard="ffn"``, grok: 8 experts don't divide a 16-way axis, so we
+shard each expert's d_ff=32768 instead — Megatron-MoE TP).  The dispatch
+einsums then lower to the all-to-all / all-gather collectives the roofline
+analysis counts.
+
+Tokens beyond an expert's capacity are dropped (standard GShard semantics,
+capacity_factor 1.25); dropped tokens pass through the residual unchanged.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import blocks
+from .api import ModelConfig
+
+Array = jax.Array
+
+CAPACITY_FACTOR = 1.25
+MOE_CHUNK = 1024          # tokens routed per dispatch chunk
+
+
+# ---------------------------------------------------------------------- init
+def _init_layer(rng: Array, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    dt = cfg.jdtype
+    E = cfg.n_experts
+    ks = jax.random.split(k2, 3)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), dt),
+        "attn": blocks.init_attn_params(k1, cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.hd, dt,
+                                        bias=cfg.qkv_bias),
+        "ffn_norm": jnp.ones((cfg.d_model,), dt),
+        "router": blocks.dense_init(k3, cfg.d_model, E, jnp.float32),
+        "experts": {
+            "w_gate": jax.vmap(lambda k: blocks.dense_init(
+                k, cfg.d_model, cfg.d_ff, dt))(jax.random.split(ks[0], E)),
+            "w_up": jax.vmap(lambda k: blocks.dense_init(
+                k, cfg.d_model, cfg.d_ff, dt))(jax.random.split(ks[1], E)),
+            "w_down": jax.vmap(lambda k: blocks.dense_init(
+                k, cfg.d_ff, cfg.d_model, dt))(jax.random.split(ks[2], E)),
+        },
+    }
+
+
+def init(rng: Array, cfg: ModelConfig) -> Dict:
+    dt = cfg.jdtype
+    k_emb, k_layers, k_head = jax.random.split(rng, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params = {
+        "embed": blocks.embed_init(k_emb, cfg.padded_vocab, cfg.d_model, dt),
+        "layers": jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = blocks.dense_init(k_head, cfg.d_model,
+                                              cfg.padded_vocab, dt)
+    return params
+
+
+# ------------------------------------------------------------------ routing
+def _route_groups(x: Array, lp: Dict, cfg: ModelConfig,
+                  capacity: int) -> Array:
+    """Route grouped tokens through the experts — GShard dispatch.
+
+    x: [G, c, d] -> y: [G, c, d].  Per group: one-hot dispatch D [c, E, C]
+    and combine weights W [c, E, C]; tokens over a group's expert capacity
+    are dropped.  All einsums carry the group dim g — no loop, so the HLO
+    exposes the full dispatch FLOPs and EP collectives (all-to-all /
+    all-gather over the expert-sharded weights) to the roofline analysis.
+    """
+    G, c, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("gcd,de->gce", x.astype(jnp.float32),
+                        lp["router"].astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)                    # [g, c, E]
+    top_vals, top_idx = lax.top_k(gates, k)                    # [g, c, k]
+    top_vals = top_vals / jnp.maximum(
+        jnp.sum(top_vals, axis=-1, keepdims=True), 1e-9)       # renormalize
+
+    # expert assignment mask per choice: [g, k, c, E]
+    choice_mask = jax.nn.one_hot(jnp.moveaxis(top_idx, -1, 1), E,
+                                 dtype=jnp.int32)
+    # position of each token in its expert queue (choice-major, GShard)
+    flat_mask = choice_mask.reshape(G, k * c, E)
+    pos_in_expert = jnp.cumsum(flat_mask, axis=1) - flat_mask  # [g, k*c, E]
+    pos = jnp.sum(flat_mask * pos_in_expert, axis=-1).reshape(G, k, c)
+    keep = (pos < capacity)                                    # [g, k, c]
+
+    slot_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity,
+                             dtype=x.dtype)                    # [g, k, c, C]
+    disp = jnp.einsum("gkce,gkcC->gceC", choice_mask.astype(x.dtype),
+                      slot_oh)
+    cdt = jnp.float32 if cfg.moe_comb_f32 else x.dtype
+    comb = jnp.einsum("gkc,gkce,gkcC->gceC",
+                      (jnp.moveaxis(top_vals, -1, 1) * keep).astype(cdt),
+                      choice_mask.astype(cdt), slot_oh.astype(cdt))
+
+    xe = jnp.einsum("gcd,gceC->geCd", x, disp)                 # [g, E, C, d]
+    g_ = jnp.einsum("geCd,edf->geCf", xe, lp["experts"]["w_gate"])
+    u = jnp.einsum("geCd,edf->geCf", xe, lp["experts"]["w_up"])
+    h = jax.nn.silu(g_.astype(jnp.float32)).astype(x.dtype) * u
+    if cfg.moe_fused_combine:
+        # single contraction: the f-sharded ("ffn" EP-TP) partial sum is
+        # reduced on the [g, c, d] result — E·C·capacity_factor×  smaller
+        # than reducing the dispatched [g, E, C, d] intermediate
+        y = jnp.einsum("geCf,efd,gceC->gcd", h,
+                       lp["experts"]["w_down"],
+                       comb.astype(x.dtype))
+        return y.astype(x.dtype)
+    ye = jnp.einsum("geCf,efd->geCd", h, lp["experts"]["w_down"])
+    y = jnp.einsum("geCd,gceC->gcd", ye.astype(comb.dtype), comb)
+    return y.astype(x.dtype)
+
+
+def moe_ffn(x: Array, lp: Dict, cfg: ModelConfig) -> Array:
+    """x: [B, S, d] -> [B, S, d], grouped GShard routing (group = 1024
+    tokens; capacity per group = group·top_k·1.25/E)."""
+    B, S, d = x.shape
+    n_tok = B * S
+    group = min(cfg.moe_group, n_tok)
+    pad = (-n_tok) % group
+    xf = x.reshape(n_tok, d)
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    G = xf.shape[0] // group
+    capacity = max(1, int(math.ceil(group * cfg.top_k * CAPACITY_FACTOR
+                                    / cfg.n_experts)))
+    y = _route_groups(xf.reshape(G, group, d), lp, cfg, capacity)
+    y = y.reshape(G * group, d)[:n_tok]
+    return y.reshape(B, S, d)
+
+
+# ------------------------------------------------------------------- forward
+def _layer_fwd(lp: Dict, h: Array, positions: Array, cfg: ModelConfig) -> Array:
+    x = blocks.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+    q, k, v = blocks.qkv_project(x, lp["attn"], cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.hd)
+    q = blocks.apply_rope(q, positions, cfg.rope_theta)
+    k = blocks.apply_rope(k, positions, cfg.rope_theta)
+    o = blocks.attention(q, k, v, q_positions=positions, k_positions=positions,
+                         causal=True, window=cfg.attn_window,
+                         q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    h = h + blocks.out_project(o, lp["attn"])
+    x = blocks.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+    h = h + moe_ffn(x, lp, cfg)
+    return h
+
+
+def forward(params: Dict, cfg: ModelConfig, tokens: Array, **_) -> Array:
+    B, S = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    step = partial(_layer_fwd, positions=positions, cfg=cfg)
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if cfg.remat_policy == "dots" else None)
+    body = (jax.checkpoint(lambda c, lp: (step(lp, c), None), policy=policy)
+            if cfg.remat
+            else (lambda c, lp: (step(lp, c), None)))
+    h, _ = lax.scan(body, h, params["layers"], unroll=cfg.scan_unroll)
+    return _unembed(params, cfg, h)
+
+
+def _unembed(params: Dict, cfg: ModelConfig, h: Array) -> Array:
+    h = blocks.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    table = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("...d,dv->...v", h, table)
+
+
+# -------------------------------------------------------------------- decode
+def init_cache(cfg: ModelConfig, *, batch: int, max_len: int) -> Dict:
+    from . import transformer
+    return transformer.init_cache(cfg, batch=batch, max_len=max_len)
+
+
+def decode_step(params: Dict, cfg: ModelConfig, cache: Dict, token: Array,
+                pos: Array) -> Tuple[Array, Dict]:
+    B = token.shape[0]
+    C = cache["k"].shape[2]
+    ring = cfg.attn_window is not None
+    h = jnp.take(params["embed"], token[:, None], axis=0)
+    positions = pos[:, None]
+    slot = (pos % C) if ring else jnp.minimum(pos, C - 1)
+    k_pos = cache["k_pos"].at[jnp.arange(B), slot].set(pos)
+    capacity = max(1, int(math.ceil(B * cfg.top_k * CAPACITY_FACTOR
+                                    / cfg.n_experts)))
+
+    def body(h, xs):
+        lp, ck, cv = xs
+        x = blocks.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = blocks.qkv_project(x, lp["attn"], cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.hd)
+        q = blocks.apply_rope(q, positions, cfg.rope_theta)
+        k = blocks.apply_rope(k, positions, cfg.rope_theta)
+        ck = ck.at[jnp.arange(B), slot].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[jnp.arange(B), slot].set(v[:, 0].astype(cv.dtype))
+        o = blocks.attention(q, ck, cv, q_positions=positions,
+                             k_positions=k_pos, causal=True,
+                             window=cfg.attn_window, q_chunk=1,
+                             kv_chunk=cfg.kv_chunk)
+        h = h + blocks.out_project(o, lp["attn"])
+        x = blocks.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+        h = h + _route_groups(x[:, 0][None], lp, cfg, capacity)[0][:, None]
+        return h, (ck, cv)
+
+    h, (new_k, new_v) = lax.scan(body, h, (params["layers"], cache["k"],
+                                           cache["v"]),
+                                 unroll=cfg.scan_unroll)
+    logits = _unembed(params, cfg, h[:, 0])
+    return logits, {"k": new_k, "v": new_v, "k_pos": k_pos}
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: Array, *, max_len: int,
+            **_) -> Tuple[Array, Dict]:
+    B, S = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(h, lp):
+        x = blocks.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = blocks.qkv_project(x, lp["attn"], cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.hd)
+        q = blocks.apply_rope(q, positions, cfg.rope_theta)
+        k = blocks.apply_rope(k, positions, cfg.rope_theta)
+        o = blocks.attention(q, k, v, q_positions=positions,
+                             k_positions=positions, causal=True,
+                             window=cfg.attn_window, q_chunk=cfg.q_chunk,
+                             kv_chunk=cfg.kv_chunk)
+        h = h + blocks.out_project(o, lp["attn"])
+        x = blocks.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+        h = h + moe_ffn(x, lp, cfg)
+        return h, (k, v)
+
+    h, (ks, vs) = lax.scan(body, h, params["layers"], unroll=cfg.scan_unroll)
+    from . import transformer
+    cache = transformer.init_cache(cfg, batch=B, max_len=max_len)
+    C = cache["k"].shape[2]
+    if S <= C:
+        cache["k"] = lax.dynamic_update_slice(
+            cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+        cache["v"] = lax.dynamic_update_slice(
+            cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+        cache["k_pos"] = lax.dynamic_update_slice(cache["k_pos"], positions,
+                                                  (0, 0))
+    else:
+        last_pos = positions[:, S - C:]
+        slots = last_pos % C
+        b_idx = jnp.arange(B)[:, None]
+        cache["k"] = cache["k"].at[:, b_idx, slots].set(
+            ks[:, :, S - C:].astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[:, b_idx, slots].set(
+            vs[:, :, S - C:].astype(cache["v"].dtype))
+        cache["k_pos"] = cache["k_pos"].at[b_idx, slots].set(last_pos)
+    logits = _unembed(params, cfg, h[:, -1])
+    return logits, cache

@@ -1,0 +1,251 @@
+"""Dense decoder-only transformer (llama/qwen/starcoder2 family) + VLM stub.
+
+Covers: h2o-danube (SWA), starcoder2, yi, qwen2.5 (QKV bias), the paper's
+DeepSeek-Distill-Qwen 1.5B/7B/14B, and internvl2 (family="vlm": the ViT
+frontend is stubbed per the assignment — ``patches`` arrive as precomputed
+patch embeddings and replace the first ``encoder_seq`` token positions).
+
+Layers are stacked (leading axis L) and executed with ``lax.scan`` so compile
+time is O(1) in depth; each layer is optionally rematerialized.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import blocks
+from .api import ModelConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------- init
+def _init_layer(rng: Array, cfg: ModelConfig):
+    k1, k2 = jax.random.split(rng)
+    dt = cfg.jdtype
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), dt),
+        "attn": blocks.init_attn_params(k1, cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.hd, dt,
+                                        bias=cfg.qkv_bias),
+        "ffn_norm": jnp.ones((cfg.d_model,), dt),
+        "ffn": (blocks.init_gelu_mlp_params(k2, cfg.d_model, cfg.d_ff, dt)
+                if cfg.mlp_kind == "gelu"
+                else blocks.init_swiglu_params(k2, cfg.d_model, cfg.d_ff, dt)),
+    }
+
+
+def init(rng: Array, cfg: ModelConfig) -> Dict:
+    dt = cfg.jdtype
+    k_emb, k_layers, k_head, k_patch = jax.random.split(rng, 4)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params = {
+        "embed": blocks.embed_init(k_emb, cfg.padded_vocab, cfg.d_model, dt),
+        "layers": jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = blocks.dense_init(k_head, cfg.d_model,
+                                              cfg.padded_vocab, dt)
+    if cfg.family == "vlm":
+        params["patch_proj"] = blocks.dense_init(k_patch, cfg.enc_dim,
+                                                 cfg.d_model, dt)
+    return params
+
+
+# ------------------------------------------------------------------- forward
+def _ffn(x: Array, lp: Dict, cfg: ModelConfig) -> Array:
+    if cfg.mlp_kind == "gelu":
+        return blocks.gelu_mlp(x, lp["ffn"])
+    return blocks.swiglu(x, lp["ffn"])
+
+
+def _seq_constraint(h: Array, cfg: ModelConfig) -> Array:
+    """GSPMD sequence parallelism: between layers, activations live sharded
+    over the model axis on the sequence dim (TP collectives then move the
+    smaller Q/KV projections instead of full-width activations)."""
+    if not cfg.seq_shard:
+        return h
+    try:
+        from jax.sharding import PartitionSpec as P
+        # batch stays on the data axes; sequence shards over model
+        return jax.lax.with_sharding_constraint(
+            h, P("data", "model", None))
+    except Exception:
+        return h
+
+
+def _layer_fwd(lp: Dict, h: Array, positions: Array, cfg: ModelConfig) -> Array:
+    h = _seq_constraint(h, cfg)
+    x = blocks.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+    q, k, v = blocks.qkv_project(x, lp["attn"], cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.hd)
+    q = blocks.apply_rope(q, positions, cfg.rope_theta)
+    k = blocks.apply_rope(k, positions, cfg.rope_theta)
+    o = blocks.attention(q, k, v, q_positions=positions, k_positions=positions,
+                         causal=True, window=cfg.attn_window,
+                         q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                         use_pallas=cfg.use_pallas)
+    h = h + blocks.out_project(o, lp["attn"])
+    x = blocks.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+    h = h + _ffn(x, lp, cfg)
+    return h
+
+
+def embed_inputs(params: Dict, cfg: ModelConfig, tokens: Array,
+                 patches: Optional[Array] = None) -> Array:
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.family == "vlm" and patches is not None:
+        proj = jnp.einsum("bpe,ed->bpd", patches.astype(cfg.jdtype),
+                          params["patch_proj"])
+        h = jnp.concatenate([proj, h[:, patches.shape[1]:]], axis=1)
+    return h
+
+
+def unembed(params: Dict, cfg: ModelConfig, h: Array) -> Array:
+    h = blocks.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    table = (params["embed"].T if cfg.tie_embeddings
+             else params["lm_head"])
+    return jnp.einsum("...d,dv->...v", h, table)
+
+
+def forward(params: Dict, cfg: ModelConfig, tokens: Array,
+            patches: Optional[Array] = None, return_hidden: bool = False,
+            **_) -> Array:
+    """Training forward: tokens [B,S] -> logits [B,S,padded_vocab]
+    (or pre-unembed hidden states with ``return_hidden`` — chunked loss)."""
+    B, S = tokens.shape
+    h = embed_inputs(params, cfg, tokens, patches)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    step = partial(_layer_fwd, positions=positions, cfg=cfg)
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if cfg.remat_policy == "dots" else None)
+    body = (jax.checkpoint(lambda c, lp: (step(lp, c), None), policy=policy)
+            if cfg.remat
+            else (lambda c, lp: (step(lp, c), None)))
+    h, _ = lax.scan(body, h, params["layers"], unroll=cfg.scan_unroll)
+    if return_hidden:
+        return h
+    return unembed(params, cfg, h)
+
+
+# -------------------------------------------------------------------- decode
+def cache_len(cfg: ModelConfig, max_len: int) -> int:
+    """Linear cache for full attention; ring buffer of W for SWA."""
+    if cfg.attn_window is not None:
+        return min(cfg.attn_window, max_len)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, *, batch: int, max_len: int) -> Dict:
+    C = cache_len(cfg, max_len)
+    dt = cfg.jdtype
+    shape = (cfg.n_layers, batch, C, cfg.n_kv_heads, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        # absolute position held in each slot; -2^30 = empty (always masked)
+        "k_pos": jnp.full((batch, C), -(2 ** 30), jnp.int32),
+    }
+
+
+def decode_step(params: Dict, cfg: ModelConfig, cache: Dict, token: Array,
+                pos: Array) -> Tuple[Array, Dict]:
+    """One decode step: token [B], pos [B] -> (logits [B, padded_vocab], cache).
+
+    Works for both full attention (slot = pos) and SWA (ring slot = pos % W).
+    """
+    B = token.shape[0]
+    C = cache["k"].shape[2]
+    ring = cfg.attn_window is not None
+    h = jnp.take(params["embed"], token[:, None], axis=0)     # [B,1,D]
+    positions = pos[:, None]                                   # [B,1]
+    slot = (pos % C) if ring else jnp.minimum(pos, C - 1)
+    k_pos = cache["k_pos"].at[jnp.arange(B), slot].set(pos)
+
+    def body(h, xs):
+        lp, ck, cv = xs                                        # per-layer slices
+        x = blocks.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = blocks.qkv_project(x, lp["attn"], cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.hd)
+        q = blocks.apply_rope(q, positions, cfg.rope_theta)
+        k = blocks.apply_rope(k, positions, cfg.rope_theta)
+        ck = ck.at[jnp.arange(B), slot].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[jnp.arange(B), slot].set(v[:, 0].astype(cv.dtype))
+        if cfg.use_pallas:
+            from repro.kernels.decode_attention.ops import decode_attention
+            o = decode_attention(q[:, 0], ck, cv, pos, k_pos,
+                                 window=cfg.attn_window)[:, None]
+        else:
+            o = blocks.attention(q, ck, cv, q_positions=positions,
+                                 k_positions=k_pos, causal=True,
+                                 window=cfg.attn_window,
+                                 q_chunk=1, kv_chunk=cfg.kv_chunk)
+        h = h + blocks.out_project(o, lp["attn"])
+        x = blocks.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+        h = h + _ffn(x, lp, cfg)
+        return h, (ck, cv)
+
+    h, (new_k, new_v) = lax.scan(body, h, (params["layers"], cache["k"],
+                                           cache["v"]),
+                                 unroll=cfg.scan_unroll)
+    logits = unembed(params, cfg, h[:, 0])
+    return logits, {"k": new_k, "v": new_v, "k_pos": k_pos}
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: Array, *, max_len: int,
+            patches: Optional[Array] = None) -> Tuple[Array, Dict]:
+    """Process the prompt, return (last-position logits, filled cache).
+
+    All rows share prompt length = tokens.shape[1] (engine pads prompts).
+    """
+    B, S = tokens.shape
+    C = cache_len(cfg, max_len)
+    h = embed_inputs(params, cfg, tokens, patches)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(h, lp):
+        x = blocks.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = blocks.qkv_project(x, lp["attn"], cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.hd)
+        q = blocks.apply_rope(q, positions, cfg.rope_theta)
+        k = blocks.apply_rope(k, positions, cfg.rope_theta)
+        o = blocks.attention(q, k, v, q_positions=positions,
+                             k_positions=positions, causal=True,
+                             window=cfg.attn_window, q_chunk=cfg.q_chunk,
+                             kv_chunk=cfg.kv_chunk,
+                             use_pallas=cfg.use_pallas)
+        h = h + blocks.out_project(o, lp["attn"])
+        x = blocks.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+        h = h + _ffn(x, lp, cfg)
+        return h, (k, v)
+
+    h, (ks, vs) = lax.scan(body, h, params["layers"], unroll=cfg.scan_unroll)   # ks: [L,B,S,Hkv,D]
+
+    cache = init_cache(cfg, batch=B, max_len=max_len)
+    if S <= C:
+        cache["k"] = lax.dynamic_update_slice(
+            cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+        cache["v"] = lax.dynamic_update_slice(
+            cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+        cache["k_pos"] = lax.dynamic_update_slice(
+            cache["k_pos"], positions, (0, 0))
+    else:
+        # SWA ring: keep the last C positions, placed at their ring slots.
+        last_k = ks[:, :, S - C:]
+        last_v = vs[:, :, S - C:]
+        last_pos = positions[:, S - C:]
+        slots = last_pos % C                                   # [B, C]
+        b_idx = jnp.arange(B)[:, None]
+        cache["k"] = cache["k"].at[:, b_idx, slots].set(
+            last_k.astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[:, b_idx, slots].set(
+            last_v.astype(cache["v"].dtype))
+        cache["k_pos"] = cache["k_pos"].at[b_idx, slots].set(last_pos)
+    logits = unembed(params, cfg, h[:, -1])
+    return logits, cache

@@ -1,0 +1,281 @@
+"""Whisper-small backbone (enc-dec) [arXiv:2212.04356] — audio frontend STUB.
+
+Per the assignment, the conv frontend is stubbed: ``input_specs()`` provides
+precomputed frame embeddings [B, encoder_seq, d_model] ("frames").  The
+encoder is a bidirectional transformer over frames; the decoder is causal
+self-attention + cross-attention to the encoder output.  LayerNorm + GELU +
+biases (whisper-style), sinusoidal positions (extended beyond 448 so the
+assignment's 4k/32k decoder shapes are well-defined).
+
+Decode cache: linear self-attn KV + the *precomputed* cross-attention K/V
+(encoder output projected once at prefill).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import blocks
+from .api import ModelConfig
+
+Array = jax.Array
+
+
+def sinusoids(length: int, channels: int) -> Array:
+    """Whisper's sinusoidal position embedding."""
+    log_timescale = math.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2,
+                                              dtype=jnp.float32))
+    scaled = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+# ---------------------------------------------------------------------- init
+def _init_self_layer(rng: Array, cfg: ModelConfig, cross: bool):
+    ks = jax.random.split(rng, 3)
+    dt = cfg.jdtype
+    d = cfg.d_model
+    p = {
+        "attn_norm_scale": jnp.ones((d,), dt),
+        "attn_norm_bias": jnp.zeros((d,), dt),
+        "attn": blocks.init_attn_params(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                        cfg.hd, dt, bias=True),
+        "ffn_norm_scale": jnp.ones((d,), dt),
+        "ffn_norm_bias": jnp.zeros((d,), dt),
+        "ffn": blocks.init_gelu_mlp_params(ks[1], d, cfg.d_ff, dt),
+    }
+    if cross:
+        p["cross_norm_scale"] = jnp.ones((d,), dt)
+        p["cross_norm_bias"] = jnp.zeros((d,), dt)
+        p["cross"] = blocks.init_attn_params(ks[2], d, cfg.n_heads,
+                                             cfg.n_kv_heads, cfg.hd, dt,
+                                             bias=True)
+    return p
+
+
+def init(rng: Array, cfg: ModelConfig) -> Dict:
+    dt = cfg.jdtype
+    k_emb, k_enc, k_dec, k_proj = jax.random.split(rng, 4)
+    enc_keys = jax.random.split(k_enc, cfg.n_encoder_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_layers)
+    return {
+        "embed": blocks.embed_init(k_emb, cfg.padded_vocab, cfg.d_model, dt),
+        "frame_proj": blocks.dense_init(k_proj, cfg.enc_dim, cfg.d_model, dt),
+        "enc_layers": jax.vmap(
+            lambda k: _init_self_layer(k, cfg, cross=False))(enc_keys),
+        "enc_norm_scale": jnp.ones((cfg.d_model,), dt),
+        "enc_norm_bias": jnp.zeros((cfg.d_model,), dt),
+        "layers": jax.vmap(
+            lambda k: _init_self_layer(k, cfg, cross=True))(dec_keys),
+        "final_norm_scale": jnp.ones((cfg.d_model,), dt),
+        "final_norm_bias": jnp.zeros((cfg.d_model,), dt),
+    }
+
+
+# ------------------------------------------------------------------- encoder
+def encode(params: Dict, cfg: ModelConfig, frames: Array) -> Array:
+    """frames [B, S_enc, enc_dim] -> encoder states [B, S_enc, d]."""
+    B, Se, _ = frames.shape
+    h = jnp.einsum("bse,ed->bsd", frames.astype(cfg.jdtype),
+                   params["frame_proj"])
+    h = h + sinusoids(Se, cfg.d_model).astype(h.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+
+    def body(h, lp):
+        x = blocks.layer_norm(h, lp["attn_norm_scale"], lp["attn_norm_bias"],
+                              cfg.norm_eps)
+        q, k, v = blocks.qkv_project(x, lp["attn"], cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.hd)
+        o = blocks.attention(q, k, v, q_positions=positions,
+                             k_positions=positions, causal=False,
+                             q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        h = h + blocks.out_project(o, lp["attn"])
+        x = blocks.layer_norm(h, lp["ffn_norm_scale"], lp["ffn_norm_bias"],
+                              cfg.norm_eps)
+        h = h + blocks.gelu_mlp(x, lp["ffn"])
+        return h, None
+
+    wrap = (jax.checkpoint(body) if cfg.remat else body)
+    h, _ = lax.scan(wrap, h, params["enc_layers"], unroll=cfg.scan_unroll)
+    return blocks.layer_norm(h, params["enc_norm_scale"],
+                             params["enc_norm_bias"], cfg.norm_eps)
+
+
+# ------------------------------------------------------------------- decoder
+def _dec_layer(lp: Dict, h: Array, enc: Array, positions: Array,
+               enc_positions: Array, cfg: ModelConfig) -> Array:
+    x = blocks.layer_norm(h, lp["attn_norm_scale"], lp["attn_norm_bias"],
+                          cfg.norm_eps)
+    q, k, v = blocks.qkv_project(x, lp["attn"], cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.hd)
+    o = blocks.attention(q, k, v, q_positions=positions, k_positions=positions,
+                         causal=True, q_chunk=cfg.q_chunk,
+                         kv_chunk=cfg.kv_chunk)
+    h = h + blocks.out_project(o, lp["attn"])
+    # cross-attention
+    x = blocks.layer_norm(h, lp["cross_norm_scale"], lp["cross_norm_bias"],
+                          cfg.norm_eps)
+    qc, _, _ = blocks.qkv_project(x, lp["cross"], cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.hd)
+    kc, vc = _cross_kv(lp, enc, cfg)
+    oc = blocks.attention(qc, kc, vc, q_positions=positions,
+                          k_positions=enc_positions, causal=False,
+                          q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    h = h + blocks.out_project(oc, lp["cross"])
+    x = blocks.layer_norm(h, lp["ffn_norm_scale"], lp["ffn_norm_bias"],
+                          cfg.norm_eps)
+    h = h + blocks.gelu_mlp(x, lp["ffn"])
+    return h
+
+
+def _cross_kv(lp: Dict, enc: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
+    B, Se, _ = enc.shape
+    k = jnp.einsum("bsd,dh->bsh", enc, lp["cross"]["wk"])
+    v = jnp.einsum("bsd,dh->bsh", enc, lp["cross"]["wv"])
+    if "bk" in lp["cross"]:
+        k = k + lp["cross"]["bk"].astype(k.dtype)
+        v = v + lp["cross"]["bv"].astype(v.dtype)
+    return (k.reshape(B, Se, cfg.n_kv_heads, cfg.hd),
+            v.reshape(B, Se, cfg.n_kv_heads, cfg.hd))
+
+
+def forward(params: Dict, cfg: ModelConfig, tokens: Array,
+            frames: Optional[Array] = None, **_) -> Array:
+    """Training forward: (tokens [B,S], frames [B,Se,enc_dim]) -> logits."""
+    B, S = tokens.shape
+    assert frames is not None, "whisper forward requires frames"
+    enc = encode(params, cfg, frames)
+    Se = enc.shape[1]
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = h + sinusoids(S, cfg.d_model).astype(h.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    enc_positions = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+
+    step = partial(_dec_layer, enc=enc, positions=positions,
+                   enc_positions=enc_positions, cfg=cfg)
+    body = (jax.checkpoint(lambda c, lp: (step(lp, c), None)) if cfg.remat
+            else (lambda c, lp: (step(lp, c), None)))
+    h, _ = lax.scan(body, h, params["layers"], unroll=cfg.scan_unroll)
+    h = blocks.layer_norm(h, params["final_norm_scale"],
+                          params["final_norm_bias"], cfg.norm_eps)
+    return jnp.einsum("bsd,dv->bsv", h, params["embed"].T)
+
+
+# -------------------------------------------------------------------- decode
+def init_cache(cfg: ModelConfig, *, batch: int, max_len: int) -> Dict:
+    L = cfg.n_layers
+    Se = cfg.encoder_seq
+    return {
+        "k": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.hd),
+                       cfg.jdtype),
+        "v": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.hd),
+                       cfg.jdtype),
+        "k_pos": jnp.full((batch, max_len), -(2 ** 30), jnp.int32),
+        # precomputed cross K/V per layer (filled at prefill)
+        "xk": jnp.zeros((L, batch, Se, cfg.n_kv_heads, cfg.hd), cfg.jdtype),
+        "xv": jnp.zeros((L, batch, Se, cfg.n_kv_heads, cfg.hd), cfg.jdtype),
+    }
+
+
+def decode_step(params: Dict, cfg: ModelConfig, cache: Dict, token: Array,
+                pos: Array) -> Tuple[Array, Dict]:
+    B = token.shape[0]
+    C = cache["k"].shape[2]
+    Se = cache["xk"].shape[2]
+    h = jnp.take(params["embed"], token[:, None], axis=0)
+    # position embedding per row
+    pos_emb = sinusoids(C, cfg.d_model).astype(h.dtype)[pos][:, None]
+    h = h + pos_emb
+    positions = pos[:, None]
+    slot = jnp.minimum(pos, C - 1)
+    k_pos = cache["k_pos"].at[jnp.arange(B), slot].set(pos)
+    enc_positions = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+
+    def body(h, xs):
+        lp, ck, cv, xk, xv = xs
+        x = blocks.layer_norm(h, lp["attn_norm_scale"], lp["attn_norm_bias"],
+                              cfg.norm_eps)
+        q, k, v = blocks.qkv_project(x, lp["attn"], cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.hd)
+        ck = ck.at[jnp.arange(B), slot].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[jnp.arange(B), slot].set(v[:, 0].astype(cv.dtype))
+        o = blocks.attention(q, ck, cv, q_positions=positions,
+                             k_positions=k_pos, causal=True, q_chunk=1,
+                             kv_chunk=cfg.kv_chunk)
+        h = h + blocks.out_project(o, lp["attn"])
+        x = blocks.layer_norm(h, lp["cross_norm_scale"],
+                              lp["cross_norm_bias"], cfg.norm_eps)
+        qc, _, _ = blocks.qkv_project(x, lp["cross"], cfg.n_heads,
+                                      cfg.n_kv_heads, cfg.hd)
+        oc = blocks.attention(qc, xk, xv, q_positions=positions,
+                              k_positions=enc_positions, causal=False,
+                              q_chunk=1, kv_chunk=cfg.kv_chunk)
+        h = h + blocks.out_project(oc, lp["cross"])
+        x = blocks.layer_norm(h, lp["ffn_norm_scale"], lp["ffn_norm_bias"],
+                              cfg.norm_eps)
+        h = h + blocks.gelu_mlp(x, lp["ffn"])
+        return h, (ck, cv)
+
+    h, (ck, cv) = lax.scan(body, h, (params["layers"], cache["k"], cache["v"],
+                                     cache["xk"], cache["xv"]),
+                           unroll=cfg.scan_unroll)
+    hf = blocks.layer_norm(h[:, 0], params["final_norm_scale"],
+                           params["final_norm_bias"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", hf, params["embed"].T)
+    return logits, {"k": ck, "v": cv, "k_pos": k_pos,
+                    "xk": cache["xk"], "xv": cache["xv"]}
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: Array, *, max_len: int,
+            frames: Optional[Array] = None, **_) -> Tuple[Array, Dict]:
+    B, S = tokens.shape
+    assert frames is not None
+    enc = encode(params, cfg, frames)
+    Se = enc.shape[1]
+    cache = init_cache(cfg, batch=B, max_len=max_len)
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = h + sinusoids(S, cfg.d_model).astype(h.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    enc_positions = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+
+    def body(h, lp):
+        x = blocks.layer_norm(h, lp["attn_norm_scale"], lp["attn_norm_bias"],
+                              cfg.norm_eps)
+        q, k, v = blocks.qkv_project(x, lp["attn"], cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.hd)
+        o = blocks.attention(q, k, v, q_positions=positions,
+                             k_positions=positions, causal=True,
+                             q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        h = h + blocks.out_project(o, lp["attn"])
+        x = blocks.layer_norm(h, lp["cross_norm_scale"],
+                              lp["cross_norm_bias"], cfg.norm_eps)
+        qc, _, _ = blocks.qkv_project(x, lp["cross"], cfg.n_heads,
+                                      cfg.n_kv_heads, cfg.hd)
+        kc, vc = _cross_kv(lp, enc, cfg)
+        oc = blocks.attention(qc, kc, vc, q_positions=positions,
+                              k_positions=enc_positions, causal=False,
+                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        h = h + blocks.out_project(oc, lp["cross"])
+        x = blocks.layer_norm(h, lp["ffn_norm_scale"], lp["ffn_norm_bias"],
+                              cfg.norm_eps)
+        h = h + blocks.gelu_mlp(x, lp["ffn"])
+        return h, (k, v, kc, vc)
+
+    h, (ks, vs, xks, xvs) = lax.scan(body, h, params["layers"], unroll=cfg.scan_unroll)
+    cache["k"] = lax.dynamic_update_slice(
+        cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+    cache["v"] = lax.dynamic_update_slice(
+        cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    cache["k_pos"] = lax.dynamic_update_slice(cache["k_pos"], positions,
+                                              (0, 0))
+    cache["xk"] = xks.astype(cache["xk"].dtype)
+    cache["xv"] = xvs.astype(cache["xv"].dtype)
+    hf = blocks.layer_norm(h[:, -1], params["final_norm_scale"],
+                           params["final_norm_bias"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", hf, params["embed"].T)
+    return logits, cache

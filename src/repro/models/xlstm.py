@@ -1,0 +1,303 @@
+"""xLSTM (mLSTM matrix-memory blocks) — xlstm-1.3b [arXiv:2405.04517].
+
+Training forward uses the *stabilized chunkwise-parallel* mLSTM form (the
+same math the ``kernels/ssm_scan`` Pallas kernel implements): within a chunk
+the recurrence is evaluated as a decay-masked attention-like matmul, across
+chunks a (C, n, m) state is carried — O(S·T_c) work with MXU-shaped matmuls
+instead of an O(S) sequential scalar scan.
+
+Decode keeps the recurrent state per sequence: C [H, hd, hd] matrix memory,
+n [H, hd] normalizer, m [H] log-stabilizer — O(1) in context length, which is
+why this arch runs the ``long_500k`` shape.
+
+Block layout (≈6·d² params/layer, matching the 1.3B total):
+  q,k,v: d→d per-head projections; i,f: d→H gate projections;
+  output gate d→d; out proj d→d; RMSNorm pre-norm, residual.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import blocks
+from .api import ModelConfig
+
+Array = jax.Array
+
+CHUNK = 64      # mLSTM chunk length (T_c)
+NEG = -1e30
+
+
+# --------------------------------------------------------------- mLSTM core
+def mlstm_chunk(q: Array, k: Array, v: Array, ig: Array, fg: Array,
+                carry: Tuple[Array, Array, Array]
+                ) -> Tuple[Tuple[Array, Array, Array], Array]:
+    """One stabilized chunk.  Shapes (per batch*head):
+    q/k/v: [T, D]; ig/fg: [T] (pre-activation gates);
+    carry: (C_s [D, D], n_s [D], m []) with true state = state·exp(m).
+    Returns new carry and h [T, D].
+    """
+    T, D = q.shape
+    C_s, n_s, m = carry
+    lf = jax.nn.log_sigmoid(fg.astype(jnp.float32))            # [T] ≤ 0
+    b = jnp.cumsum(lf)                                          # [T]
+    g = ig.astype(jnp.float32)
+
+    # decay matrix D[t, j] = b_t - b_j + g_j for j ≤ t
+    dmat = b[:, None] - b[None, :] + g[None, :]
+    tri = jnp.tril(jnp.ones((T, T), bool))
+    dmat = jnp.where(tri, dmat, NEG)
+
+    alpha = m + b                                               # [T]
+    intra_max = jnp.max(dmat, axis=1)                           # [T]
+    m_t = jnp.maximum(alpha, intra_max)                         # [T]
+
+    qf = q.astype(jnp.float32) * (1.0 / math.sqrt(D))
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    wmat = jnp.exp(dmat - m_t[:, None])                         # [T, T]
+    scores = (qf @ kf.T) * wmat
+    inter_scale = jnp.exp(alpha - m_t)                          # [T]
+    h_num = scores @ vf + inter_scale[:, None] * (qf @ C_s)     # [T, D]
+    # normalizer: n_t = Σ_j w_tj k_j + inter_scale · n_s  (w without q)
+    n_t = wmat @ kf + inter_scale[:, None] * n_s[None, :]       # [T, D]
+    qn = jnp.abs(jnp.sum(qf * n_t, axis=-1))                    # [T]
+    denom = jnp.maximum(qn, jnp.exp(-m_t))
+    h = h_num / denom[:, None]
+
+    # ---- carry update at end of chunk
+    m_new = jnp.maximum(m + b[-1], jnp.max(b[-1] - b + g))
+    scale_c = jnp.exp(m + b[-1] - m_new)
+    w_end = jnp.exp(b[-1] - b + g - m_new)                      # [T]
+    C_new = scale_c * C_s + (kf * w_end[:, None]).T @ vf        # [D, D]
+    n_new = scale_c * n_s + jnp.sum(kf * w_end[:, None], axis=0)
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_chunkwise(q: Array, k: Array, v: Array, ig: Array, fg: Array,
+                    chunk: int = CHUNK) -> Array:
+    """q/k/v: [B, S, H, D]; ig/fg: [B, S, H] -> h: [B, S, H, D]."""
+    B, S, H, D = q.shape
+    pad = (-S) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # padded steps must be identity on the carry: i→0 (ig=NEG) and
+        # f→1 (fg large positive ⇒ log_sigmoid≈0)
+        ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)), constant_values=NEG)
+        fg = jnp.pad(fg, ((0, 0), (0, pad), (0, 0)), constant_values=1e4)
+    Sp = S + pad
+    n_chunks = Sp // chunk
+
+    def per_bh(qbh, kbh, vbh, igbh, fgbh):
+        # [Sp, D] / [Sp]
+        qc = qbh.reshape(n_chunks, chunk, D)
+        kc = kbh.reshape(n_chunks, chunk, D)
+        vc = vbh.reshape(n_chunks, chunk, D)
+        ic = igbh.reshape(n_chunks, chunk)
+        fc = fgbh.reshape(n_chunks, chunk)
+        carry0 = (jnp.zeros((D, D), jnp.float32), jnp.zeros((D,), jnp.float32),
+                  jnp.float32(0.0))
+        carry, h = lax.scan(
+            lambda c, xs: mlstm_chunk(xs[0], xs[1], xs[2], xs[3], xs[4], c),
+            carry0, (qc, kc, vc, ic, fc))
+        return h.reshape(Sp, D)
+
+    # vmap over batch (outer) and heads (inner); inputs moved to [B, H, S, ...]
+    f = jax.vmap(jax.vmap(per_bh))
+    h = f(jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1),
+          jnp.moveaxis(ig, 2, 1), jnp.moveaxis(fg, 2, 1))
+    # h: [B, H, Sp, D] -> [B, S, H, D]
+    h = jnp.moveaxis(h, 1, 2)[:, :S]
+    return h.astype(q.dtype)
+
+
+def mlstm_step(q: Array, k: Array, v: Array, ig: Array, fg: Array,
+               state: Tuple[Array, Array, Array]
+               ) -> Tuple[Tuple[Array, Array, Array], Array]:
+    """Single-token recurrent step (decode).  Shapes per batch*head:
+    q/k/v: [D]; ig/fg: []; state (C_s [D,D], n_s [D], m [])."""
+    D = q.shape[-1]
+    C_s, n_s, m = state
+    lf = jax.nn.log_sigmoid(fg.astype(jnp.float32))
+    g = ig.astype(jnp.float32)
+    m_new = jnp.maximum(lf + m, g)
+    f_sc = jnp.exp(lf + m - m_new)
+    i_sc = jnp.exp(g - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = q.astype(jnp.float32) * (1.0 / math.sqrt(D))
+    C_new = f_sc * C_s + i_sc * jnp.outer(kf, vf)
+    n_new = f_sc * n_s + i_sc * kf
+    qn = jnp.abs(jnp.sum(qf * n_new))
+    h = (qf @ C_new) / jnp.maximum(qn, jnp.exp(-m_new))
+    return (C_new, n_new, m_new), h.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------- init
+def _init_layer(rng: Array, cfg: ModelConfig):
+    dt = cfg.jdtype
+    ks = jax.random.split(rng, 6)
+    d = cfg.d_model
+    H = cfg.n_heads
+    return {
+        "norm": jnp.ones((d,), dt),
+        "wq": blocks.dense_init(ks[0], d, d, dt),
+        "wk": blocks.dense_init(ks[1], d, d, dt),
+        "wv": blocks.dense_init(ks[2], d, d, dt),
+        "w_if": blocks.dense_init(ks[3], d, 2 * H, jnp.float32),
+        # forget-gate bias init positive → long memory at init (xLSTM §4)
+        "b_if": jnp.concatenate([jnp.zeros((H,), jnp.float32),
+                                 3.0 * jnp.ones((H,), jnp.float32)]),
+        "w_gate": blocks.dense_init(ks[4], d, d, dt),
+        "w_out": blocks.dense_init(ks[5], d, d, dt),
+    }
+
+
+def init(rng: Array, cfg: ModelConfig) -> Dict:
+    dt = cfg.jdtype
+    k_emb, k_layers, k_head = jax.random.split(rng, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params = {
+        "embed": blocks.embed_init(k_emb, cfg.padded_vocab, cfg.d_model, dt),
+        "layers": jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = blocks.dense_init(k_head, cfg.d_model,
+                                              cfg.padded_vocab, dt)
+    return params
+
+
+# ------------------------------------------------------------------- forward
+def _project(lp: Dict, x: Array, cfg: ModelConfig):
+    B, S, d = x.shape
+    H, D = cfg.n_heads, cfg.hd
+    q = jnp.einsum("bsd,de->bse", x, lp["wq"]).reshape(B, S, H, D)
+    k = jnp.einsum("bsd,de->bse", x, lp["wk"]).reshape(B, S, H, D)
+    v = jnp.einsum("bsd,de->bse", x, lp["wv"]).reshape(B, S, H, D)
+    gif = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), lp["w_if"]) \
+        + lp["b_if"]
+    ig, fg = jnp.split(gif, 2, axis=-1)                       # [B,S,H] each
+    return q, k, v, ig, fg
+
+
+def _layer_fwd(lp: Dict, h: Array, cfg: ModelConfig) -> Array:
+    x = blocks.rms_norm(h, lp["norm"], cfg.norm_eps)
+    q, k, v, ig, fg = _project(lp, x, cfg)
+    if cfg.use_pallas:
+        from repro.kernels.ssm_scan.ops import mlstm_scan
+        o = mlstm_scan(q, k, v, ig, fg, chunk=CHUNK)          # [B,S,H,D]
+    else:
+        o = mlstm_chunkwise(q, k, v, ig, fg)                  # [B,S,H,D]
+    B, S = x.shape[:2]
+    o = o.reshape(B, S, cfg.d_model)
+    gate = jax.nn.silu(jnp.einsum("bsd,de->bse", x, lp["w_gate"])
+                       .astype(jnp.float32)).astype(x.dtype)
+    return h + jnp.einsum("bsd,de->bse", o * gate, lp["w_out"])
+
+
+def forward(params: Dict, cfg: ModelConfig, tokens: Array, **_) -> Array:
+    h = jnp.take(params["embed"], tokens, axis=0)
+    step = partial(_layer_fwd, cfg=cfg)
+    body = (jax.checkpoint(lambda c, lp: (step(lp, c), None)) if cfg.remat
+            else (lambda c, lp: (step(lp, c), None)))
+    h, _ = lax.scan(body, h, params["layers"], unroll=cfg.scan_unroll)
+    h = blocks.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    table = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", h, table)
+
+
+# -------------------------------------------------------------------- decode
+def init_cache(cfg: ModelConfig, *, batch: int, max_len: int) -> Dict:
+    H, D = cfg.n_heads, cfg.hd
+    L = cfg.n_layers
+    return {
+        "C": jnp.zeros((L, batch, H, D, D), jnp.float32),
+        "n": jnp.zeros((L, batch, H, D), jnp.float32),
+        "m": jnp.zeros((L, batch, H), jnp.float32),
+    }
+
+
+def decode_step(params: Dict, cfg: ModelConfig, cache: Dict, token: Array,
+                pos: Array) -> Tuple[Array, Dict]:
+    B = token.shape[0]
+    h = jnp.take(params["embed"], token[:, None], axis=0)      # [B,1,d]
+
+    step_fn = jax.vmap(jax.vmap(mlstm_step))                   # over B, H
+
+    def body(h, xs):
+        lp, C, n, m = xs
+        x = blocks.rms_norm(h, lp["norm"], cfg.norm_eps)
+        q, k, v, ig, fg = _project(lp, x, cfg)
+        (C2, n2, m2), o = step_fn(q[:, 0], k[:, 0], v[:, 0],
+                                  ig[:, 0], fg[:, 0], (C, n, m))
+        o = o.reshape(B, 1, cfg.d_model)
+        gate = jax.nn.silu(jnp.einsum("bsd,de->bse", x, lp["w_gate"])
+                           .astype(jnp.float32)).astype(x.dtype)
+        h = h + jnp.einsum("bsd,de->bse", o * gate, lp["w_out"])
+        return h, (C2, n2, m2)
+
+    h, (C, n, m) = lax.scan(body, h,
+                            (params["layers"], cache["C"], cache["n"],
+                             cache["m"]), unroll=cfg.scan_unroll)
+    hf = blocks.rms_norm(h[:, 0], params["final_norm"], cfg.norm_eps)
+    table = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", hf, table)
+    return logits, {"C": C, "n": n, "m": m}
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: Array, *, max_len: int,
+            **_) -> Tuple[Array, Dict]:
+    """Run the prompt through the recurrence, returning the carried state."""
+    B, S = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0)
+    cache = init_cache(cfg, batch=B, max_len=max_len)
+
+    def body(h, xs):
+        lp, C0, n0, m0 = xs
+        x = blocks.rms_norm(h, lp["norm"], cfg.norm_eps)
+        q, k, v, ig, fg = _project(lp, x, cfg)
+
+        def per_bh(qs, ks, vs, igs, fgs, C, n, m):
+            pad = (-S) % CHUNK
+            if pad:
+                qs = jnp.pad(qs, ((0, pad), (0, 0)))
+                ks = jnp.pad(ks, ((0, pad), (0, 0)))
+                vs = jnp.pad(vs, ((0, pad), (0, 0)))
+                igs = jnp.pad(igs, ((0, pad),), constant_values=NEG)
+                fgs = jnp.pad(fgs, ((0, pad),), constant_values=1e4)
+            nch = (S + pad) // CHUNK
+            carry, hs = lax.scan(
+                lambda c, xs_: mlstm_chunk(*xs_, c),
+                (C, n, m),
+                (qs.reshape(nch, CHUNK, -1), ks.reshape(nch, CHUNK, -1),
+                 vs.reshape(nch, CHUNK, -1), igs.reshape(nch, CHUNK),
+                 fgs.reshape(nch, CHUNK)))
+            return carry, hs.reshape(S + pad, -1)[:S]
+
+        f = jax.vmap(jax.vmap(per_bh))     # outer: batch, inner: head
+        (C2, n2, m2), o = f(jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+                            jnp.moveaxis(v, 2, 1), jnp.moveaxis(ig, 2, 1),
+                            jnp.moveaxis(fg, 2, 1), C0, n0, m0)
+        # o: [B, H, S, D] -> [B, S, H*D]
+        o = jnp.moveaxis(o, 1, 2).reshape(B, S, cfg.d_model).astype(h.dtype)
+        gate = jax.nn.silu(jnp.einsum("bsd,de->bse", x, lp["w_gate"])
+                           .astype(jnp.float32)).astype(x.dtype)
+        h = h + jnp.einsum("bsd,de->bse", o * gate, lp["w_out"])
+        return h, (C2, n2, m2)
+
+    h, (C, n, m) = lax.scan(body, h, (params["layers"], cache["C"],
+                                      cache["n"], cache["m"]),
+                            unroll=cfg.scan_unroll)
+    hf = blocks.rms_norm(h[:, -1], params["final_norm"], cfg.norm_eps)
+    table = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", hf, table)
+    return logits, {"C": C, "n": n, "m": m}

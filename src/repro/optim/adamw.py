@@ -1,0 +1,98 @@
+"""AdamW with global-norm clipping and LR schedules (pure JAX, no optax).
+
+State layout (per parameter): m and v in fp32 (configurable), step count
+scalar.  Params may be bf16 — updates are computed in fp32 and cast back,
+matching the mixed-precision training setup the roofline memory terms
+assume (2-byte params/grads + 8-byte optimizer state).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-5
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"
+
+
+def adamw_init(params: Any, cfg: AdamWConfig = AdamWConfig()) -> Dict:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(
+    grads: Any,
+    state: Dict,
+    params: Any,
+    cfg: AdamWConfig = AdamWConfig(),
+    lr_scale: jax.Array | float = 1.0,
+) -> Tuple[Any, Dict, Dict]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * clip
+        m2 = cfg.b1 * m + (1.0 - cfg.b1) * gf
+        v2 = cfg.b2 * v + (1.0 - cfg.b2) * gf * gf
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay > 0 and p.ndim >= 2:   # decay matrices only
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * step
+        return p2.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
+
+    out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+    flat, treedef = jax.tree_util.tree_flatten(out, is_leaf=lambda x:
+                                               isinstance(x, tuple))
+    new_params = jax.tree_util.tree_unflatten(treedef, [t[0] for t in flat])
+    new_m = jax.tree_util.tree_unflatten(treedef, [t[1] for t in flat])
+    new_v = jax.tree_util.tree_unflatten(treedef, [t[2] for t in flat])
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm}
+
+
+# ------------------------------------------------------------------ schedules
+def cosine_schedule(step: jax.Array, *, warmup: int, total: int,
+                    min_frac: float = 0.1) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(math.pi * prog))
+    return warm * cos
+
+
+def linear_schedule(step: jax.Array, *, warmup: int, total: int) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+    return warm * jnp.clip(1.0 - (s - warmup) / jnp.maximum(total - warmup, 1),
+                           0.0, 1.0)

@@ -1,0 +1,55 @@
+"""Mesh axis conventions.
+
+Single-pod production mesh: (16, 16) over ("data", "model").
+Multi-pod:                  (2, 16, 16) over ("pod", "data", "model").
+
+"pod" is the disaggregation boundary from the paper's heterogeneous story:
+weight sync and batch parallelism cross it (DCN-class links), while "model"
+stays inside an ICI domain.  Batch dims shard over ("pod","data"); weights,
+experts, and head/ff dims shard over "model".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+@dataclass(frozen=True)
+class MeshSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+SINGLE_POD = MeshSpec((16, 16), ("data", "model"))
+MULTI_POD = MeshSpec((2, 16, 16), ("pod", "data", "model"))
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes that shard batch dims: ("pod","data") when a pod axis exists."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def model_axis(mesh: Mesh) -> Optional[str]:
+    return "model" if "model" in mesh.axis_names else None
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,231 @@
+"""PartitionSpec rules: param-path → sharding, per architecture family.
+
+Megatron-style tensor parallelism over the "model" axis:
+
+  embed          [V, d]        → P("model", None)        (vocab-sharded)
+  lm_head        [d, V]        → P(None, "model")
+  attn wq/wk/wv  [L, d, H·hd]  → P(None, None, "model")  (head dim)
+  attn wo        [L, H·hd, d]  → P(None, "model", None)
+  ffn  up/gate   [L, d, f]     → P(None, None, "model")
+  ffn  down      [L, f, d]     → P(None, "model", None)
+  MoE experts    [L, E, d, f]  → E over "model" (EP, qwen3) or f over
+                                 "model" (grok — 8 experts don't divide 16)
+  norms / gates / routers      → replicated
+
+Uneven dims (yi's 56 heads, hymba's 25) are legal: GSPMD pads the last
+shard.  The resulting padding waste is visible in the roofline table's
+MODEL_FLOPS/HLO_FLOPs ratio and is one of the hillclimb levers.
+
+Batch dims shard over ("pod","data").  Decode caches shard batch over
+data axes and the *head-dim* (hd) over "model" — hd is a multiple of 16
+for every assigned arch, unlike kv-head counts.
+
+Optimizer states: same spec as the param, then ZeRO-1-extended over the
+data axes on the largest still-unsharded, evenly-divisible dim.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.api import ModelConfig
+from .mesh import data_axes, model_axis, axis_size
+
+
+# ------------------------------------------------------------------- helpers
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def _stacked(names: Tuple[str, ...]) -> bool:
+    return "layers" in names or "enc_layers" in names
+
+
+def _pad(spec_tail: Tuple, ndim: int, stacked: bool) -> P:
+    """Prepend the layer axis (None) for stacked params; sanity-fit ndim."""
+    tail = list(spec_tail)
+    if stacked:
+        tail = [None] + tail
+    while len(tail) < ndim:
+        tail = [None] + tail
+    return P(*tail[:ndim])
+
+
+# ------------------------------------------------------------- param pspecs
+def param_spec(names: Tuple[str, ...], ndim: int, cfg: ModelConfig,
+               mdl: Optional[str]) -> P:
+    """Sharding rule for one parameter identified by its path names."""
+    if mdl is None:
+        return P(*([None] * ndim))
+    st = _stacked(names)
+    leaf = names[-1]
+    parent = names[-2] if len(names) > 1 else ""
+
+    if leaf == "embed":
+        return P(mdl, None)
+    if leaf == "lm_head":
+        return P(None, mdl)
+    if leaf in ("patch_proj", "frame_proj"):
+        return P(*([None] * ndim))
+
+    # MoE experts: [L, E, d, f] / [L, E, f, d]
+    if parent == "experts":
+        ep = cfg.moe_shard == "expert"
+        if leaf in ("w_gate", "w_up"):
+            return _pad(((mdl if ep else None), None,
+                         (None if ep else mdl)), ndim, st)
+        if leaf == "w_down":
+            return _pad(((mdl if ep else None), (None if ep else mdl),
+                         None), ndim, st)
+    if leaf == "router":
+        return _pad((None, None), ndim, st)
+
+    # attention / generic projections
+    if leaf in ("wq", "wk", "wv", "w_gate", "w_up", "ssm_in", "w_dt"):
+        return _pad((None, mdl), ndim, st)
+    if leaf in ("wo", "w_down", "w_out", "ssm_out"):
+        return _pad((mdl, None), ndim, st)
+    if leaf in ("bq", "bk", "bv", "b_up", "b_dt"):
+        return _pad((mdl,), ndim, st)
+    if leaf in ("A_log", "Dskip"):
+        return _pad((mdl,) + (None,) * 1 if leaf == "A_log" else (mdl,),
+                    ndim, st)
+    # everything else (norms, biases, gates w_if/b_if, w_B/w_C, skips)
+    return P(*([None] * ndim))
+
+
+def param_pspecs(params_shape: Any, cfg: ModelConfig, mesh: Mesh,
+                 fsdp: Optional[bool] = None):
+    """Pytree of PartitionSpec matching a params pytree (of arrays or
+    ShapeDtypeStructs).  With ``fsdp`` (default: cfg.fsdp_params) every
+    param is additionally sharded over the data axes on its largest
+    unsharded divisible dim (ZeRO-3; serving: fully-sharded stationary
+    weights) — XLA inserts the per-layer all-gathers."""
+    mdl = model_axis(mesh) if cfg.shard_mode == "tp" else None
+    fsdp = cfg.fsdp_params if fsdp is None else fsdp
+
+    def rule(path, leaf):
+        ndim = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+        spec = param_spec(_path_names(path), ndim, cfg, mdl)
+        if fsdp:
+            spec = zero_extend(spec, tuple(leaf.shape), mesh,
+                               include_model=(cfg.shard_mode == "dp"))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+# --------------------------------------------------------------- batch specs
+def batch_pspecs(specs: Dict[str, jax.ShapeDtypeStruct], mesh: Mesh,
+                 include_model: bool = False) -> Dict[str, P]:
+    """Shard the leading batch dim over the data axes (when divisible);
+    with ``include_model`` (pure-DP mode) the model axis joins them."""
+    dax = data_axes(mesh)
+    if include_model and model_axis(mesh):
+        dax = dax + (model_axis(mesh),)
+    n = axis_size(mesh, dax)
+
+    out = {}
+    for k, v in specs.items():
+        if v.ndim >= 1 and v.shape[0] % n == 0 and v.shape[0] >= n:
+            out[k] = P(dax, *([None] * (v.ndim - 1)))
+        else:
+            out[k] = P(*([None] * v.ndim))
+    return out
+
+
+# --------------------------------------------------------------- cache specs
+def cache_spec(names: Tuple[str, ...], shape: Tuple[int, ...], cfg: ModelConfig,
+               mesh: Mesh) -> P:
+    """Decode-cache sharding: batch over data axes, head-dim over model."""
+    dax = data_axes(mesh)
+    n = axis_size(mesh, dax)
+    mdl = model_axis(mesh)
+    leaf = names[-1]
+
+    def bdim(size):   # shard a batch dim only when it divides evenly
+        return dax if (size % n == 0 and size >= n) else None
+
+    if leaf in ("k", "v", "xk", "xv"):      # [L, B, C, Hkv, hd]
+        L, B, C, Hkv, hd = shape
+        if cfg.cache_shard == "heads":
+            # kv heads over model — only valid when Hkv divides the axis
+            # (pjit output shardings cannot pad)
+            return P(None, bdim(B), None, mdl, None)
+        if cfg.cache_shard == "ctx":
+            # context dim over model: flash-decode partitions into local
+            # partial softmax + tiny max/sum/PV all-reduces
+            return P(None, bdim(B), mdl, None, None)
+        return P(None, bdim(B), None, None,
+                 mdl if hd % axis_size(mesh, mdl) == 0 else None)
+    if leaf == "k_pos":                     # [B, C]
+        return P(bdim(shape[0]), None)
+    if leaf == "C":                         # xlstm matrix state [L,B,H,D,D]
+        return P(None, bdim(shape[1]), None, None, mdl)
+    if leaf == "n":                         # [L,B,H,D]
+        return P(None, bdim(shape[1]), None, mdl)
+    if leaf == "m":                         # [L,B,H]
+        return P(None, bdim(shape[1]), None)
+    if leaf == "ssm":                       # hymba [L,B,d,N]
+        return P(None, bdim(shape[1]), mdl, None)
+    return P(*([None] * len(shape)))
+
+
+def cache_pspecs(cache_shape: Any, cfg: ModelConfig, mesh: Mesh):
+    def rule(path, leaf):
+        return cache_spec(_path_names(path), tuple(leaf.shape), cfg, mesh)
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+# ------------------------------------------------------------ optimizer ZeRO
+def zero_extend(spec: P, shape: Tuple[int, ...], mesh: Mesh,
+                include_model: bool = False) -> P:
+    """ZeRO-1: additionally shard an optimizer-state tensor over the data
+    axes (+ the model axis in pure-DP mode), on the largest dim not already
+    sharded that divides evenly."""
+    dax = data_axes(mesh)
+    if include_model and model_axis(mesh):
+        dax = dax + (model_axis(mesh),)
+    if not dax:
+        return spec
+    n = axis_size(mesh, dax)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_size = None, 0
+    for i, (e, s) in enumerate(zip(entries, shape)):
+        if e is None and s % n == 0 and s >= n and s > best_size:
+            best, best_size = i, s
+    if best is None:
+        return spec
+    entries[best] = dax
+    return P(*entries)
+
+
+def opt_state_pspecs(params_shape: Any, cfg: ModelConfig, mesh: Mesh):
+    """Specs for AdamW m/v trees: param spec + ZeRO extension."""
+    base = param_pspecs(params_shape, cfg, mesh, fsdp=False)
+    inc = cfg.shard_mode == "dp"
+
+    def ext(spec, leaf):
+        return zero_extend(spec, tuple(leaf.shape), mesh, include_model=inc)
+
+    return jax.tree_util.tree_map(ext, base, params_shape)
+
+
+def named(tree_specs, mesh: Mesh):
+    """PartitionSpec pytree → NamedSharding pytree."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

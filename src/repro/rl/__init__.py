@@ -1,0 +1,2 @@
+"""Asynchronous RL substrate (AReaL architecture): GRPO objective, rollout
+engine, staleness-bounded buffer, versioned weight sync, async driver."""

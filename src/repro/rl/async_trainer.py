@@ -1,0 +1,157 @@
+"""The asynchronous GRPO driver (AReaL architecture, logical asynchrony).
+
+Producer: RolloutEngine generates GRPO groups (G completions per prompt)
+under the buffer's capacity control.  Consumer: the trainer pops admissible
+batches, computes group advantages, runs the GRPO policy update, and
+publishes new weights.  On a single host the interleaving is logical —
+rollouts carry real weight versions, the buffer enforces the staleness
+bound η exactly, and generation is interruptible mid-sequence (weight swap
+at segment boundaries), which is the semantics that matter for the paper;
+wall-clock overlap is what the scheduler + simulator model.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.staleness import StalenessConfig
+from repro.data.tasks import MathTaskGenerator, Tokenizer
+from repro.models.api import ModelConfig, get_model
+from repro.optim.adamw import AdamWConfig, adamw_init
+from .buffer import Rollout, RolloutBuffer
+from .grpo import group_advantages, make_train_step
+from .reward import RuleBasedReward
+from .rollout import GenConfig, RolloutEngine
+from .weight_sync import WeightStore
+
+
+@dataclass
+class TrainerConfig:
+    group_size: int = 4                  # GRPO completions per prompt
+    prompts_per_step: int = 4            # prompts consumed per train step
+    seq_len: int = 160                   # packed train sequence length
+    total_steps: int = 20
+    publish_every: int = 1               # weight publish cadence (steps)
+    staleness: StalenessConfig = field(default_factory=lambda:
+                                       StalenessConfig(eta=2,
+                                                       rollouts_per_step=16))
+    opt: AdamWConfig = field(default_factory=lambda: AdamWConfig(lr=3e-5))
+    seed: int = 0
+
+
+def _batch_from_rollouts(rollouts: List[Rollout], seq_len: int,
+                         vocab: int) -> Dict[str, jnp.ndarray]:
+    """Pad/truncate rollouts into fixed [B, S] training tensors."""
+    B = len(rollouts)
+    tokens = np.full((B, seq_len), Tokenizer.PAD, np.int32)
+    mask = np.zeros((B, seq_len), np.float32)
+    blogp = np.zeros((B, seq_len), np.float32)
+    rewards = np.array([r.reward for r in rollouts], np.float64)
+    groups = np.array([r.group_id for r in rollouts])
+    adv = group_advantages(rewards, groups)
+    for i, r in enumerate(rollouts):
+        ids = (r.prompt_ids + r.completion_ids)[:seq_len]
+        tokens[i, :len(ids)] = ids
+        p = len(r.prompt_ids)
+        comp_end = min(len(ids), seq_len)
+        mask[i, p:comp_end] = 1.0
+        lp = r.behavior_logp[:max(0, comp_end - p)]
+        blogp[i, p:p + len(lp)] = lp
+    return {
+        "tokens": jnp.asarray(tokens),
+        "loss_mask": jnp.asarray(mask),
+        "behavior_logp": jnp.asarray(blogp),
+        "advantages": jnp.asarray(adv),
+    }
+
+
+class AsyncGRPOTrainer:
+    """End-to-end async RL on one host: real model, real updates."""
+
+    def __init__(self, cfg: ModelConfig, tc: TrainerConfig = TrainerConfig()):
+        self.cfg = cfg
+        self.tc = tc
+        self.model = get_model(cfg)
+        rng = jax.random.PRNGKey(tc.seed)
+        self.params = self.model.init(rng, cfg)
+        self.opt_state = adamw_init(self.params, tc.opt)
+        self.train_step = jax.jit(make_train_step(cfg, tc.opt))
+        self.store = WeightStore()
+        self.store.publish(self.params)
+        self.buffer = RolloutBuffer(tc.staleness)
+        # version counters must agree: store starts at 1 (initial publish)
+        self.buffer.ctl.version = self.store.version
+        self.tasks = MathTaskGenerator(seed=tc.seed)
+        self.rewarder = RuleBasedReward(self.tasks, shaped=True)
+        self.engine = RolloutEngine(
+            cfg, self.store,
+            GenConfig(max_new_tokens=48, segment=12), rng_seed=tc.seed + 1)
+        self._group_counter = 0
+        self.history: List[Dict] = []
+
+    # ------------------------------------------------------------- producer
+    def produce(self) -> Dict:
+        """Generate one GRPO group-batch if capacity allows."""
+        G = self.tc.group_size
+        n_prompts = self.tc.prompts_per_step
+        n = G * n_prompts
+        if not self.buffer.can_launch(n):
+            return {"launched": 0}
+        self.buffer.launch(n)
+        prompts = self.tasks.batch(n_prompts)
+        expanded, gids = [], []
+        for p in prompts:
+            gid = self._group_counter
+            self._group_counter += 1
+            for _ in range(G):
+                expanded.append(p)
+                gids.append(gid)
+        rollouts, metrics = self.engine.generate(expanded)
+        for r, gid in zip(rollouts, gids):
+            r.group_id = gid
+        self.rewarder.score_batch(rollouts)
+        for r in rollouts:
+            self.buffer.push(r)
+        return {"launched": n, **metrics}
+
+    # ------------------------------------------------------------- consumer
+    def train_one(self) -> Optional[Dict]:
+        need = self.tc.group_size * self.tc.prompts_per_step
+        if not self.buffer.ready(need):
+            return None
+        batch_rollouts = self.buffer.pop_batch(need)
+        batch = _batch_from_rollouts(batch_rollouts, self.tc.seq_len,
+                                     self.cfg.vocab)
+        self.params, self.opt_state, metrics = self.train_step(
+            self.params, self.opt_state, batch)
+        return {k: float(v) for k, v in metrics.items()}
+
+    # ----------------------------------------------------------------- loop
+    def run(self, steps: Optional[int] = None, log_every: int = 5,
+            verbose: bool = True) -> List[Dict]:
+        steps = steps or self.tc.total_steps
+        step = 0
+        while step < steps:
+            self.produce()
+            m = self.train_one()
+            if m is None:
+                continue
+            step += 1
+            if step % self.tc.publish_every == 0:
+                self.store.publish(self.params)
+                self.buffer.bump_version()
+            m.update(self.buffer.stats())
+            m["step"] = step
+            m["mean_reward"] = self.rewarder.stats.mean
+            self.history.append(m)
+            if verbose and step % log_every == 0:
+                print(f"[step {step:4d}] loss={m['loss']:.4f} "
+                      f"reward={m['mean_reward']:.3f} "
+                      f"staleness={m['mean_staleness']:.2f} "
+                      f"buffer={m['size']}")
+        return self.history

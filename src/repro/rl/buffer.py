@@ -1,0 +1,93 @@
+"""Staleness-bounded producer-consumer rollout buffer (AReaL semantics).
+
+Rollout workers push completed trajectories tagged with the weight version
+that generated them; the trainer pops batches subject to the admission rule
+``version_now − version_rollout ≤ η``.  Capacity control — at most
+(η+1)·B rollouts in flight — *guarantees* the bound without discarding
+work (see core/staleness.py, shared bookkeeping).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.staleness import StalenessConfig, StalenessController
+
+
+@dataclass
+class Rollout:
+    """One completed trajectory."""
+    prompt_ids: List[int]
+    completion_ids: List[int]
+    behavior_logp: np.ndarray          # per completion token
+    version: int                       # weight version that generated it
+    group_id: int                      # GRPO group (same prompt)
+    reward: float = 0.0
+    task: Any = None
+
+    @property
+    def length(self) -> int:
+        return len(self.prompt_ids) + len(self.completion_ids)
+
+
+class RolloutBuffer:
+    def __init__(self, config: Optional[StalenessConfig] = None):
+        self.config = config or StalenessConfig()
+        self.ctl = StalenessController(self.config)
+        self._items: List[Rollout] = []
+        self.dropped = 0
+
+    # ------------------------------------------------------------- producer
+    def can_launch(self, n: int = 1) -> bool:
+        return self.ctl.can_launch(n)
+
+    def launch(self, n: int = 1) -> None:
+        self.ctl.launch(n)
+
+    def push(self, rollout: Rollout) -> None:
+        """Completed generation enters the buffer (still 'in flight' for
+        capacity purposes until consumed)."""
+        self._items.append(rollout)
+
+    # ------------------------------------------------------------- trainer
+    def bump_version(self) -> int:
+        v = self.ctl.bump_version()
+        # evict over-stale rollouts (rare under capacity control)
+        fresh = []
+        for r in self._items:
+            if self.ctl.admissible(r.version):
+                fresh.append(r)
+            else:
+                self.ctl.drop(1)
+                self.dropped += 1
+        self._items = fresh
+        return v
+
+    def ready(self, n: int) -> bool:
+        return len(self._items) >= n
+
+    def pop_batch(self, n: int) -> List[Rollout]:
+        """Oldest-first pop of n admissible rollouts."""
+        assert self.ready(n), (len(self._items), n)
+        batch = self._items[:n]
+        self._items = self._items[n:]
+        self.ctl.consume([r.version for r in batch])
+        return batch
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    @property
+    def version(self) -> int:
+        return self.ctl.version
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "size": len(self._items),
+            "in_flight": self.ctl.in_flight,
+            "mean_staleness": self.ctl.mean_staleness(),
+            "max_staleness": self.ctl.max_staleness(),
+            "dropped": self.dropped,
+        }

@@ -1,0 +1,215 @@
+"""GRPO with AReaL's decoupled (behavior vs proximal) objective.
+
+Pieces:
+  * ``group_advantages``  — GRPO group-relative advantage normalization.
+  * ``grpo_loss``         — clipped policy-gradient loss with the decoupled
+                            importance weight for stale rollouts.
+  * ``make_train_step``   — jit-able (params, opt_state, batch) → step fn
+                            the launchers/dry-run lower (GRPO policy update:
+                            forward + backward + AdamW).
+
+The reward/reference stage is costed as a profiled constant by the scheduler
+(paper §4.2.2); the dry-run therefore lowers the policy update only.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import ModelConfig, get_model
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+# ------------------------------------------------------------ advantages
+def group_advantages(rewards: np.ndarray, group_ids: np.ndarray,
+                     eps: float = 1e-6) -> np.ndarray:
+    """GRPO: advantage = (r − mean_group) / (std_group + eps).
+
+    rewards [N], group_ids [N] (same id = same prompt's rollout group).
+    Host-side (numpy): runs in the trainer's data path, not in the graph.
+    """
+    adv = np.zeros_like(rewards, dtype=np.float64)
+    for g in np.unique(group_ids):
+        m = group_ids == g
+        r = rewards[m]
+        mu = r.mean()
+        sd = r.std()
+        adv[m] = (r - mu) / (sd + eps)
+    return adv.astype(np.float32)
+
+
+# ------------------------------------------------------------------- loss
+def token_logp_from_logits(logits: jax.Array, targets: jax.Array
+                           ) -> jax.Array:
+    """log p(target) per position, fp32.  logits [B,S,V], targets [B,S]."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    tgt = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    return tgt - lse
+
+
+def grpo_loss(
+    logits: jax.Array,          # [B, S, V] (next-token logits at each pos)
+    tokens: jax.Array,          # [B, S]
+    behavior_logp: jax.Array,   # [B, S] logp under the rollout policy
+    advantages: jax.Array,      # [B]
+    loss_mask: jax.Array,       # [B, S] 1.0 on response tokens (targets)
+    *,
+    clip_eps: float = 0.2,
+    prox_logp: Optional[jax.Array] = None,   # decoupled objective (AReaL)
+    kl_coef: float = 0.0,
+    ref_logp: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Clipped GRPO objective.  Positions predict token t+1 from t; the mask
+    (aligned with targets) selects response tokens."""
+    B, S = tokens.shape
+    targets = tokens[:, 1:]
+    mask = loss_mask[:, 1:].astype(jnp.float32)
+    logp = token_logp_from_logits(logits[:, :-1], targets)     # [B, S-1]
+    b_logp = behavior_logp[:, 1:]
+    adv = advantages[:, None].astype(jnp.float32)
+
+    if prox_logp is not None:
+        # AReaL decoupled PPO: ratio vs proximal policy; stale behavior gap
+        # enters as a stop-gradient importance weight.
+        p_logp = prox_logp[:, 1:]
+        ratio = jnp.exp(logp - p_logp)
+        iw = jax.lax.stop_gradient(
+            jnp.clip(jnp.exp(p_logp - b_logp), 0.0, 2.0))
+    else:
+        ratio = jnp.exp(logp - b_logp)
+        iw = 1.0
+
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    pg = -jnp.minimum(unclipped, clipped) * iw
+
+    if kl_coef > 0.0 and ref_logp is not None:
+        # k3 estimator (non-negative, unbiased)
+        r = ref_logp[:, 1:] - logp
+        kl = jnp.exp(r) - r - 1.0
+        pg = pg + kl_coef * kl
+
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(pg * mask) / denom
+    metrics = {
+        "loss": loss,
+        "mean_ratio": jnp.sum(ratio * mask) / denom,
+        "clip_frac": jnp.sum(((jnp.abs(ratio - 1.0) > clip_eps) * mask))
+        / denom,
+        "entropy_proxy": -jnp.sum(logp * mask) / denom,
+    }
+    return loss, metrics
+
+
+# -------------------------------------------------------------- train step
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    *,
+    clip_eps: float = 0.2,
+    decoupled: bool = False,
+) -> Callable:
+    """Build the GRPO policy-update step:
+
+        train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+    ``batch`` carries tokens/loss_mask/advantages/behavior_logp (+ frames/
+    patches for stub-frontend archs, + prox_logp when decoupled).
+    """
+    model = get_model(cfg)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            if cfg.loss_chunk and cfg.family in ("dense", "vlm"):
+                return _chunked_grpo_loss(model, p, cfg, batch, clip_eps)
+            logits = model.forward(
+                p, cfg, batch["tokens"],
+                frames=batch.get("frames"), patches=batch.get("patches"))
+            return grpo_loss(
+                logits, batch["tokens"], batch["behavior_logp"],
+                batch["advantages"], batch["loss_mask"],
+                clip_eps=clip_eps,
+                prox_logp=batch.get("prox_logp") if decoupled else None,
+                kl_coef=0.0)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, opt_state, params, opt_cfg)
+        metrics.update(opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def _chunked_grpo_loss(model, params, cfg, batch, clip_eps):
+    """Sequence-chunked unembed + loss: never materializes the full
+    [B, S, V] logits (the train-cell memory-term hot spot).  Each chunk is
+    rematerialized, so backward recomputes chunk logits instead of saving
+    them."""
+    import jax as _jax
+    from functools import partial as _partial
+
+    h = model.forward(params, cfg, batch["tokens"],
+                      frames=batch.get("frames"),
+                      patches=batch.get("patches"), return_hidden=True)
+    B, S = batch["tokens"].shape
+    C = cfg.loss_chunk
+    n = max(1, S // C)
+    targets = jnp.roll(batch["tokens"], -1, axis=1)       # t predicts t+1
+    mask = jnp.roll(batch["loss_mask"], -1, axis=1).at[:, -1].set(0.0)
+    blogp = jnp.roll(batch["behavior_logp"], -1, axis=1)
+    adv = batch["advantages"][:, None].astype(jnp.float32)
+
+    def chunk(args):
+        hc, tc, mc, bc = args
+        logits = model.unembed(params, cfg, hc).astype(jnp.float32)
+        lp = token_logp_from_logits(logits, tc)
+        ratio = jnp.exp(lp - bc)
+        unc = ratio * adv
+        cl = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+        pg = -jnp.minimum(unc, cl)
+        return jnp.sum(pg * mc), jnp.sum(mc)
+
+    def split(x):
+        return x.reshape(B, n, S // n, *x.shape[2:]).swapaxes(0, 1)
+
+    args = (split(h), split(targets), split(mask.astype(jnp.float32)),
+            split(blogp))
+    if cfg.unroll_layers:
+        # counting modules: unroll the chunk loop (XLA cost analysis
+        # counts while bodies once — same reason layers unroll)
+        outs = [chunk(tuple(a[i] for a in args)) for i in range(n)]
+        num = jnp.stack([o[0] for o in outs])
+        den = jnp.stack([o[1] for o in outs])
+    else:
+        num, den = _jax.lax.map(_jax.checkpoint(chunk), args)
+    loss = jnp.sum(num) / jnp.maximum(jnp.sum(den), 1.0)
+    return loss, {"loss": loss, "mean_ratio": jnp.float32(1.0),
+                  "clip_frac": jnp.float32(0.0),
+                  "entropy_proxy": jnp.float32(0.0)}
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """serve_step(params, cache, token, pos) -> (logits, cache) — one decode
+    token for the whole batch (what decode_* shapes lower)."""
+    model = get_model(cfg)
+
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cfg, cache, token, pos)
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig, max_len: int) -> Callable:
+    model = get_model(cfg)
+
+    def prefill_fn(params, tokens, **extras):
+        return model.prefill(params, cfg, tokens, max_len=max_len, **extras)
+
+    return prefill_fn

@@ -1,0 +1,139 @@
+"""Rollout generation engine: jit'd prefill + KV-cache decode, interruptible.
+
+AReaL semantics: generation proceeds in *segments*; at segment boundaries
+the engine checks the weight store and, if a newer version exists, swaps
+weights mid-sequence (the continuation uses fresh weights — trajectories
+record every contributing version; staleness is accounted against the
+OLDEST version, the conservative choice).
+
+Batched static-shape decode: prompts are right-aligned-padded to a common
+prefill length; finished rows keep decoding into padding (masked out on
+extraction) — standard static-batch TPU serving.  Continuous batching is
+modeled at the scheduler level (replica throughput h_ψ).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import ModelConfig, get_model
+from repro.data.tasks import MathTask, Tokenizer
+from .buffer import Rollout
+from .weight_sync import WeightStore
+
+
+@dataclass
+class GenConfig:
+    max_new_tokens: int = 64
+    segment: int = 16              # tokens between weight-update checks
+    temperature: float = 1.0
+    greedy: bool = False
+    eos_id: int = Tokenizer.EOS
+
+
+class RolloutEngine:
+    def __init__(self, cfg: ModelConfig, store: WeightStore,
+                 gen: GenConfig = GenConfig(), rng_seed: int = 0):
+        self.cfg = cfg
+        self.store = store
+        self.gen = gen
+        self.model = get_model(cfg)
+        self._rng = jax.random.PRNGKey(rng_seed)
+        self._decode = jax.jit(
+            lambda p, c, t, pos, key: self._decode_impl(p, c, t, pos, key))
+        self._prefill = jax.jit(
+            partial(self.model.prefill, cfg=self.cfg),
+            static_argnames=("max_len",))
+
+    # ------------------------------------------------------------ internals
+    def _decode_impl(self, params, cache, token, pos, key):
+        logits, cache = self.model.decode_step(params, self.cfg, cache,
+                                               token, pos)
+        logits = logits[..., :self.cfg.vocab].astype(jnp.float32)
+        if self.gen.greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(
+                key, logits / self.gen.temperature, axis=-1).astype(jnp.int32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        chosen = jnp.take_along_axis(logp, nxt[:, None], axis=-1)[:, 0]
+        return nxt, chosen, cache
+
+    def _split(self):
+        self._rng, k = jax.random.split(self._rng)
+        return k
+
+    # -------------------------------------------------------------- generate
+    def generate(self, tasks: Sequence[MathTask], *,
+                 group_offset: int = 0) -> Tuple[List[Rollout], Dict]:
+        """Generate one completion per task (callers replicate tasks for
+        GRPO groups).  Returns rollouts + engine metrics."""
+        params, version = self.store.fetch(dtype=self.cfg.jdtype)
+        versions_used = {version}
+        B = len(tasks)
+        prompts = [t.prompt_ids for t in tasks]
+        plen = max(len(p) for p in prompts)
+        padded = np.full((B, plen), Tokenizer.PAD, np.int32)
+        for i, p in enumerate(prompts):
+            padded[i, plen - len(p):] = p        # right-aligned
+        max_len = plen + self.gen.max_new_tokens
+
+        logits, cache = self.model.prefill(params, self.cfg,
+                                           jnp.asarray(padded),
+                                           max_len=max_len)
+        logits = logits[..., :self.cfg.vocab].astype(jnp.float32)
+        key = self._split()
+        if self.gen.greedy:
+            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            token = jax.random.categorical(
+                key, logits / self.gen.temperature, axis=-1).astype(jnp.int32)
+        first_logp = jnp.take_along_axis(
+            jax.nn.log_softmax(logits, axis=-1), token[:, None], axis=-1)[:, 0]
+
+        out_tokens = [np.asarray(token)]
+        out_logps = [np.asarray(first_logp)]
+        done = np.asarray(token) == self.gen.eos_id
+        swaps = 0
+
+        t = 1
+        while t < self.gen.max_new_tokens and not done.all():
+            # interruption point: segment boundary → adopt fresh weights
+            if t % self.gen.segment == 0 and self.store.version > version:
+                params, version = self.store.fetch(dtype=self.cfg.jdtype)
+                versions_used.add(version)
+                swaps += 1
+            pos = jnp.full((B,), plen + t - 1, jnp.int32)
+            token, logp, cache = self._decode(params, cache, token, pos,
+                                              self._split())
+            out_tokens.append(np.asarray(token))
+            out_logps.append(np.asarray(logp))
+            done |= np.asarray(token) == self.gen.eos_id
+            t += 1
+
+        toks = np.stack(out_tokens, 1)           # [B, T]
+        logps = np.stack(out_logps, 1)
+        rollouts = []
+        oldest = min(versions_used)
+        for i, task in enumerate(tasks):
+            row = toks[i]
+            stop = np.where(row == self.gen.eos_id)[0]
+            end = int(stop[0]) + 1 if len(stop) else len(row)
+            rollouts.append(Rollout(
+                prompt_ids=list(prompts[i]),
+                completion_ids=[int(x) for x in row[:end]],
+                behavior_logp=logps[i, :end].astype(np.float32),
+                version=oldest,                    # conservative staleness
+                group_id=group_offset + i,
+                task=task,
+            ))
+        metrics = {"weight_swaps": swaps, "versions": sorted(versions_used),
+                   "mean_len": float(np.mean([len(r.completion_ids)
+                                              for r in rollouts]))}
+        return rollouts, metrics

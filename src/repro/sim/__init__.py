@@ -1,0 +1,3 @@
+from .simulator import AsyncRLSimulator, SimConfig, SimResult
+
+__all__ = ["AsyncRLSimulator", "SimConfig", "SimResult"]

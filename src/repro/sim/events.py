@@ -1,0 +1,46 @@
+"""Event and fault-injection primitives for the async-RL simulator."""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+
+@dataclass(order=True)
+class Event:
+    time: float
+    seq: int
+    kind: str = field(compare=False)     # rollout_done | train_done | ...
+    payload: Any = field(compare=False, default=None)
+
+
+class EventQueue:
+    def __init__(self):
+        self._h: List[Event] = []
+        self._c = itertools.count()
+
+    def push(self, time: float, kind: str, payload: Any = None) -> None:
+        heapq.heappush(self._h, Event(time, next(self._c), kind, payload))
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._h)
+
+    def __len__(self) -> int:
+        return len(self._h)
+
+
+@dataclass
+class StragglerInjection:
+    """Replica ``replica_idx`` runs at ``factor``× throughput from t_start."""
+    replica_idx: int
+    factor: float = 0.3
+    t_start: float = 0.0
+
+
+@dataclass
+class FailureInjection:
+    """Replica dies at t_fail; optionally recovers after ``downtime``."""
+    replica_idx: int
+    t_fail: float
+    downtime: Optional[float] = None      # None = permanent

@@ -1,0 +1,15 @@
+"""Shared fixtures.  NOTE: no XLA device-count flags here — smoke tests and
+benches must see the host's single real device; only launch/dryrun.py (and
+the subprocess-based tests) force placeholder devices."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,117 @@
+"""Pallas kernel sweeps: shapes × dtypes vs the pure-jnp ref oracles.
+
+All kernels run interpret=True (the CPU contract); the same entry points
+compile on TPU.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.ssm_scan.ops import mlstm_scan
+from repro.kernels.ssm_scan.ref import mlstm_scan_ref
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,Hkv,D", [
+    (1, 16, 16, 1, 1, 8),
+    (2, 40, 40, 4, 2, 16),
+    (2, 33, 65, 4, 4, 24),       # non-multiple shapes → padding paths
+    (1, 128, 128, 8, 2, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 9),
+                                           (False, None)])
+def test_flash_attention_sweep(B, Sq, Sk, H, Hkv, D, dtype, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(B * Sq + D), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, D), dtype)
+    qp = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+    kp = jnp.broadcast_to(jnp.arange(Sk), (B, Sk))
+    out = flash_attention(q, k, v, causal, window, None, 16, 16, True)
+    ref = attention_ref(q, k, v, q_positions=qp, k_positions=kp,
+                        causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_grad_matches_ref():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (1, 24, 2, 8))
+    k = jax.random.normal(ks[1], (1, 24, 2, 8))
+    v = jax.random.normal(ks[2], (1, 24, 2, 8))
+    qp = jnp.broadcast_to(jnp.arange(24), (1, 24))
+
+    def f_kernel(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, True, None, None, 8, 8,
+                                       True) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(attention_ref(q, k, v, q_positions=qp,
+                                     k_positions=qp, causal=True) ** 2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("B,H,Hkv,D,C", [
+    (1, 2, 2, 8, 8),
+    (2, 4, 2, 16, 24),
+    (2, 8, 1, 64, 40),           # MQA
+    (3, 6, 3, 20, 17),           # odd sizes
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [None, 8])
+def test_decode_attention_sweep(B, H, Hkv, D, C, dtype, window):
+    ks = jax.random.split(jax.random.PRNGKey(B * C + H), 3)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, C, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, C, Hkv, D), dtype)
+    q_pos = jnp.arange(B, dtype=jnp.int32) * 3 + C // 2
+    k_pos = jnp.broadcast_to(jnp.arange(C), (B, C)).astype(jnp.int32)
+    k_pos = jnp.where(k_pos <= q_pos[:, None], k_pos, -(2 ** 30))
+    out = decode_attention(q, k, v, q_pos, k_pos, window=window,
+                           block_c=8, interpret=True)
+    ref = decode_attention_ref(q, k, v, q_pos, k_pos, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,H,D,chunk", [
+    (1, 16, 1, 8, 8),
+    (2, 50, 4, 16, 16),          # padding path
+    (1, 64, 2, 32, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mlstm_scan_sweep(B, S, H, D, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(S + D), 5)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, H, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, H, D), dtype)
+    ig = jax.random.normal(ks[3], (B, S, H))
+    fg = jax.random.normal(ks[4], (B, S, H)) + 2.0
+    out = mlstm_scan(q, k, v, ig, fg, chunk=chunk, interpret=True)
+
+    def flat(x):
+        return jnp.moveaxis(x, 2, 1).reshape(B * H, S, *x.shape[3:])
+
+    ref = mlstm_scan_ref(flat(q.astype(jnp.float32)),
+                         flat(k.astype(jnp.float32)),
+                         flat(v.astype(jnp.float32)), flat(ig), flat(fg))
+    ref = jnp.moveaxis(ref.reshape(B, H, S, D), 1, 2)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4)

@@ -1,0 +1,164 @@
+"""Core scheduler tests: Eq. 1-3, Algorithm 1, Table-5 baselines."""
+import math
+
+import pytest
+
+from repro.core.cluster import (Cluster, paper_heterogeneous,
+                                paper_homogeneous_h20,
+                                paper_homogeneous_h800)
+from repro.core.cost_model import (LengthDistribution, ReplicaConfig,
+                                   TrainPlan, StageSpec, per_token_costs,
+                                   replica_throughput, train_step_cost,
+                                   weight_sync_cost)
+from repro.core.constrained_search import constrained_search, exhaustive_search
+from repro.core.graph_partition import (compute_fraction, eq3_objective,
+                                        partition, partition_exhaustive)
+from repro.core.milp import solve_rollout_milp, solve_rollout_milp_bisection
+from repro.core.model_spec import PAPER_MODELS
+from repro.core.scheduler import (SchedulerConfig, schedule,
+                                  schedule_uniform)
+
+SPEC = PAPER_MODELS["1.5B"]
+P = LengthDistribution(mean_len=2048, prompt_len=256)
+# the paper's operating point: long chain-of-thought rollouts (the serving
+# engine efficiencies are calibrated against Table 1 at this regime)
+P_LONG = LengthDistribution(mean_len=12288, prompt_len=512, max_len=32768)
+
+
+def test_cluster_topology():
+    c = paper_heterogeneous(8, 8)
+    assert len(c) == 16
+    h800 = c.devices_of_type("H800")
+    h20 = c.devices_of_type("H20")
+    assert len(h800) == len(h20) == 8
+    # intra-node NVLink > inter-node > cross-type
+    same_node = c.link_bw(h800[0], h800[1])
+    cross = c.link_bw(h800[0], h20[0])
+    assert same_node > cross
+    assert cross == pytest.approx(1.5e9)
+
+
+def test_train_cost_scales_down_with_devices():
+    small = TrainPlan(stages=(StageSpec("H800", dp=1, tp=8, n_layers=28),))
+    big = TrainPlan(stages=(StageSpec("H800", dp=4, tp=8, n_layers=28),))
+    c1 = train_step_cost(SPEC, small, tokens_per_step=1e6)
+    c2 = train_step_cost(SPEC, big, tokens_per_step=1e6)
+    assert c2.total < c1.total
+
+
+def test_replica_throughput_memory_bound():
+    rc = replica_throughput(SPEC, ReplicaConfig("H20", (1,)), P)
+    assert rc.feasible and rc.tokens_per_sec > 0
+    # the paper's claim is COST efficiency at the long-CoT operating point:
+    # H20 generates more tokens per dollar than H800 (absolute tps can favor
+    # H800 at short context — Observation 1's nuance)
+    rc_l = replica_throughput(SPEC, ReplicaConfig("H20", (1,)), P_LONG)
+    rc800 = replica_throughput(SPEC, ReplicaConfig("H800", (1,)), P_LONG)
+    assert rc_l.tokens_per_sec / 1.85 > rc800.tokens_per_sec / 5.28
+
+
+def test_per_token_costs_reproduce_table1_direction():
+    """Table 1: H20 cheaper per inference token; H800 cheaper per training
+    token — the paper's Observation 1/2."""
+    for name in ("1.5B", "7B", "14B"):
+        spec = PAPER_MODELS[name]
+        h800_inf, h800_tr = per_token_costs(spec, __import__(
+            "repro.core.cluster", fromlist=["H800"]).H800, P_LONG)
+        h20_inf, h20_tr = per_token_costs(spec, __import__(
+            "repro.core.cluster", fromlist=["H20"]).H20, P_LONG)
+        assert h20_inf < h800_inf, name
+        assert h800_tr < h20_tr, name
+
+
+def test_milp_respects_device_budget():
+    c = paper_heterogeneous(8, 8)
+    res = solve_rollout_milp(SPEC, c.devices, P, total_rollouts=512)
+    used = {}
+    for a in res.plan.assignments:
+        used[a.config.profile_name] = used.get(a.config.profile_name, 0) \
+            + a.count * a.config.n_devices
+    counts = c.type_counts
+    for t, n in used.items():
+        assert n <= counts[t]
+    # workloads sum to B
+    assert sum(a.workload for a in res.plan.assignments) == pytest.approx(512)
+
+
+def test_milp_bisection_matches_fast_path():
+    c = paper_homogeneous_h20(8)
+    fast = solve_rollout_milp(SPEC, c.devices, P, total_rollouts=256)
+    slow = solve_rollout_milp_bisection(SPEC, c.devices, P,
+                                        total_rollouts=256)
+    assert slow.plan.makespan == pytest.approx(fast.plan.makespan, rel=0.05)
+
+
+def test_constrained_search_same_type_constraint():
+    c = paper_heterogeneous(8, 8)
+    plan, cost = constrained_search(SPEC, c, c.devices,
+                                    tokens_per_step=2**20)
+    assert plan is not None and cost.feasible
+    for st in plan.stages:   # TP/DP blocks homogeneous by construction
+        assert st.profile_name in ("H800", "H20")
+
+
+def test_graph_partition_eq3_and_gamma():
+    c = paper_heterogeneous(8, 8)
+    part = partition(c, 0.3, 0.9)
+    assert part is not None
+    g = compute_fraction(c, part.train_devices)
+    assert 0.3 - 1e-9 <= g <= 0.9 + 1e-9
+    # exact enumeration beats or equals any other γ-feasible bipartition
+    brute = partition_exhaustive(c, 0.3, 0.9)
+    assert part.objective >= brute.objective - 1e-9
+
+
+def test_partition_prefers_high_hbm_for_inference():
+    c = paper_heterogeneous(8, 8)
+    part = partition(c, 0.5, 0.95)
+    infer_types = {d.type_name for d in part.infer_devices}
+    assert "H20" in infer_types   # 4TB/s HBM pool goes to rollout
+
+
+def test_schedule_end_to_end_and_ci_ge_ct():
+    c = paper_heterogeneous(8, 8)
+    cfg = SchedulerConfig(tokens_per_step=2**19, stable_iters=3,
+                          max_iters=16)
+    plan = schedule(SPEC, c, P, cfg)
+    assert plan.objective < math.inf
+    assert len(plan.train_devices) + len(plan.infer_devices) == 16
+    assert set(plan.train_devices).isdisjoint(plan.infer_devices)
+    # paper's operating assumption: rollout side is the pacing stage
+    assert plan.cost_infer >= plan.cost_train * 0.5
+
+
+def test_scheduled_beats_uniform():
+    """Table 3: optimized allocation ≥ uniform split."""
+    c = paper_heterogeneous(8, 8)
+    cfg = SchedulerConfig(tokens_per_step=2**19, stable_iters=3,
+                          max_iters=16)
+    opt = schedule(SPEC, c, P, cfg)
+    uni = schedule_uniform(SPEC, c, P, cfg)
+    assert opt.throughput_tokens_per_sec(cfg.tokens_per_step) >= \
+        uni.throughput_tokens_per_sec(cfg.tokens_per_step) * 0.999
+
+
+def test_two_phase_faster_than_exhaustive():
+    """Table 5 direction: constrained search beats exhaustive wall-clock."""
+    import time
+    c = paper_heterogeneous(4, 4)
+    t0 = time.perf_counter()
+    constrained_search(SPEC, c, c.devices, tokens_per_step=2**19)
+    t_fast = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    exhaustive_search(SPEC, c, c.devices, tokens_per_step=2**19)
+    t_slow = time.perf_counter() - t0
+    assert t_slow > t_fast
+
+
+def test_weight_sync_cost_positive_and_scales():
+    c = paper_heterogeneous(8, 8)
+    tr = c.devices_of_type("H800")
+    inf = c.devices_of_type("H20")
+    t1 = weight_sync_cost(PAPER_MODELS["1.5B"], c, tr, inf)
+    t2 = weight_sync_cost(PAPER_MODELS["14B"], c, tr, inf)
+    assert 0 < t1 < t2

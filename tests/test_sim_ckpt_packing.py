@@ -1,0 +1,107 @@
+"""Simulator, checkpointing, and packing tests."""
+import numpy as np
+import pytest
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.cluster import paper_heterogeneous
+from repro.core.cost_model import LengthDistribution
+from repro.core.model_spec import PAPER_MODELS
+from repro.core.scheduler import SchedulerConfig, schedule
+from repro.sim import AsyncRLSimulator, SimConfig
+from repro.sim.events import FailureInjection, StragglerInjection
+
+SPEC = PAPER_MODELS["1.5B"]
+P = LengthDistribution(mean_len=1024, prompt_len=128)
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return schedule(SPEC, paper_heterogeneous(8, 8), P,
+                    SchedulerConfig(tokens_per_step=2**18, stable_iters=3,
+                                    max_iters=12))
+
+
+def test_simulator_completes_and_conserves(plan):
+    cfg = SimConfig(n_steps=10, rollouts_per_step=32, eta=4,
+                    reward_cost_s=0.1)
+    res = AsyncRLSimulator(plan, P, cfg).run()
+    assert res.steps == 10
+    assert res.throughput_tps > 0
+    # tokens consumed = steps × B × (mean prompt+output), within lognormal CI
+    expect = 10 * 32 * (P.mean_len + P.prompt_len)
+    assert 0.5 * expect < res.tokens_consumed < 2.0 * expect
+    assert res.max_staleness <= cfg.eta
+
+
+def test_simulator_straggler_hurts(plan):
+    base = AsyncRLSimulator(plan, P, SimConfig(
+        n_steps=8, rollouts_per_step=32, eta=4, reward_cost_s=0.1)).run()
+    n_rep = len(AsyncRLSimulator(plan, P).replicas)
+    stragglers = [StragglerInjection(i, factor=0.05)
+                  for i in range(max(1, n_rep // 2))]
+    slow = AsyncRLSimulator(plan, P, SimConfig(
+        n_steps=8, rollouts_per_step=32, eta=4, reward_cost_s=0.1,
+        stragglers=stragglers)).run()
+    assert slow.wall_time_s > base.wall_time_s
+
+
+def test_simulator_failure_recovery(plan):
+    fails = [FailureInjection(0, t_fail=1.0, downtime=50.0)]
+    res = AsyncRLSimulator(plan, P, SimConfig(
+        n_steps=6, rollouts_per_step=32, eta=4, reward_cost_s=0.1,
+        failures=fails)).run()
+    assert res.steps == 6          # survives the fault
+
+
+# ------------------------------------------------------------------ ckpt
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    import jax.numpy as jnp
+    from repro.ckpt.checkpoint import (latest_step, restore_checkpoint,
+                                       save_checkpoint)
+    state = {"params": {"w": jnp.arange(12.0).reshape(3, 4)},
+             "version": 7}
+    for step in (1, 2, 3, 4):
+        save_checkpoint(tmp_path, step, state, keep=2)
+    assert latest_step(tmp_path) == 4
+    # gc kept only 2
+    kept = [p.name for p in tmp_path.iterdir()]
+    assert sorted(kept) == ["step-00000003", "step-00000004"]
+    step, got = restore_checkpoint(tmp_path)
+    assert step == 4 and got["version"] == 7
+    np.testing.assert_array_equal(got["params"]["w"],
+                                  np.arange(12.0).reshape(3, 4))
+
+
+def test_checkpoint_atomicity_no_partial(tmp_path):
+    from repro.ckpt.checkpoint import latest_step, save_checkpoint
+    save_checkpoint(tmp_path, 5, {"x": np.ones(3)})
+    # a crashed tmp dir must not count as a checkpoint
+    (tmp_path / "tmp-6-deadbeef").mkdir()
+    assert latest_step(tmp_path) == 5
+
+
+# --------------------------------------------------------------- packing
+@given(st.lists(st.integers(1, 4096), min_size=1, max_size=64),
+       st.integers(1, 8))
+@settings(max_examples=100, deadline=None)
+def test_greedy_pack_partition_property(lengths, workers):
+    from repro.data.packing import greedy_pack, pack_stats
+    asg = greedy_pack(lengths, workers)
+    flat = sorted(i for grp in asg for i in grp)
+    assert flat == list(range(len(lengths)))       # exact partition
+    mx, imb = pack_stats(lengths, asg)
+    # LPT bound: max load ≤ 4/3·OPT + ... ≤ mean + max item
+    mean = sum(lengths) / workers
+    assert mx <= mean + max(lengths) + 1e-9
+
+
+def test_greedy_pack_balances_better_than_round_robin():
+    from repro.data.packing import greedy_pack, pack_stats
+    rng = np.random.default_rng(0)
+    lengths = rng.lognormal(7, 1, 64).astype(int).tolist()
+    greedy = greedy_pack(lengths, 8)
+    rr = [[i for i in range(len(lengths)) if i % 8 == w] for w in range(8)]
+    _, imb_g = pack_stats(lengths, greedy)
+    _, imb_rr = pack_stats(lengths, rr)
+    assert imb_g <= imb_rr + 1e-9

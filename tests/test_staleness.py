@@ -1,0 +1,71 @@
+"""Property-based tests of the bounded-staleness invariants (hypothesis)."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.staleness import StalenessConfig, StalenessController
+
+
+@given(
+    eta=st.integers(0, 5),
+    b=st.integers(1, 8),
+    ops=st.lists(st.sampled_from(["launch", "train", "consume"]),
+                 min_size=1, max_size=200),
+)
+@settings(max_examples=100, deadline=None)
+def test_capacity_control_guarantees_bound(eta, b, ops):
+    """THE invariant: under (η+1)·B capacity control with oldest-first
+    consumption, no consumed rollout ever exceeds staleness η."""
+    cfg = StalenessConfig(eta=eta, rollouts_per_step=b)
+    ctl = StalenessController(cfg)
+    pending = []       # (version) of generated-but-unconsumed rollouts
+    for op in ops:
+        if op == "launch":
+            if ctl.can_launch():
+                ctl.launch()
+                pending.append(ctl.version)
+        elif op == "train" and len(pending) >= b:
+            batch = pending[:b]
+            pending = pending[b:]
+            ctl.consume(batch)          # raises if bound violated
+            ctl.bump_version()
+        elif op == "consume" and pending:
+            ctl.consume([pending.pop(0)])
+    assert ctl.max_staleness() <= eta
+
+
+@given(eta=st.integers(0, 4), b=st.integers(1, 8))
+@settings(max_examples=50, deadline=None)
+def test_capacity_formula(eta, b):
+    ctl = StalenessController(StalenessConfig(eta=eta, rollouts_per_step=b))
+    assert ctl.capacity == (eta + 1) * b
+    launched = 0
+    while ctl.can_launch():
+        ctl.launch()
+        launched += 1
+    assert launched == ctl.capacity
+
+
+def test_over_stale_consumption_raises():
+    ctl = StalenessController(StalenessConfig(eta=1, rollouts_per_step=4))
+    ctl.launch(1)
+    v0 = ctl.version
+    ctl.bump_version()
+    ctl.bump_version()          # lag now 2 > η=1
+    try:
+        ctl.consume([v0])
+        assert False, "expected staleness violation"
+    except RuntimeError:
+        pass
+
+
+def test_adaptive_delta_stops_when_stable():
+    from repro.core.staleness import adaptive_delta
+    calls = []
+
+    def run_window(delta):
+        calls.append(delta)
+        return float(delta)     # per-step cost constant ⇒ immediate stop
+
+    d = adaptive_delta(run_window, StalenessConfig(eta=4))
+    assert d == 4               # δ0 = max(1, η)
+    assert calls == [4, 8]      # probed once, found stable, stopped
