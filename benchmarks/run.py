@@ -20,6 +20,7 @@ MODULES = [
     "table3_allocation_ablation",
     "table4_cost_parity",
     "fig5_cost_efficiency",
+    "fig6_elastic_recovery",
     "table5_scheduler_speed",
     "roofline_report",
 ]

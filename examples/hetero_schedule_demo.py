@@ -59,9 +59,14 @@ print("fail+heal: ", faulty.summary())
 
 print()
 print("=" * 72)
-print("D. Elastic replanning after losing a machine (scheduler re-run)")
+print("D. Elastic replanning after losing a machine (warm-started reschedule)")
 print("=" * 72)
+from repro.core.scheduler import reschedule
+
 smaller = paper_heterogeneous(8, 6)      # one H20 node lost
-replanned = schedule(PAPER_MODELS["1.5B"], smaller, P, CFG)
+replanned = reschedule(PAPER_MODELS["1.5B"], smaller, plan, P, CFG,
+                       reason="node-loss")
 print(replanned.describe())
+print("(see examples/elastic_recovery_demo.py for the full mid-run",
+      "simulator↔scheduler loop)")
 print("\ndemo complete.")

@@ -66,11 +66,35 @@ class ScheduledPlan:
     gamma: float                        # compute fraction given to training
     iterations: int = 0                 # scheduler iterations to converge
     wall_time_s: float = 0.0            # scheduler runtime
+    # --- provenance: who produced this plan and where it sits in the elastic
+    # replan chain.  Epoch 0 is the initial offline plan; every runtime
+    # replan (failure / sustained straggler) bumps the epoch so throughput
+    # can be attributed to plan generations.
+    plan_epoch: int = 0
+    parent_epoch: Optional[int] = None  # epoch this plan was derived from
+    provenance: str = "initial"         # "initial" | "replan:<reason>"
 
     @property
     def objective(self) -> float:
         """max{C_T, C_I} — Eq. (1)."""
         return max(self.cost_train, self.cost_infer)
+
+    def signature(self) -> Tuple:
+        """Structural fingerprint of the decision (device sets, σ, τ, δ, γ).
+
+        Excludes wall_time_s/iterations so two runs of the scheduler on the
+        same inputs can be compared for *decision* equality — the
+        determinism contract the warm-started ``reschedule`` relies on.
+        """
+        return (
+            tuple(self.train_devices),
+            tuple(self.infer_devices),
+            tuple(self.train_plan.stages),
+            tuple((a.config, a.count, round(a.workload, 6))
+                  for a in self.rollout_plan.assignments),
+            self.delta,
+            round(self.gamma, 9),
+        )
 
     def throughput_tokens_per_sec(self, tokens_per_step: float) -> float:
         """End-to-end RL training throughput: tokens consumed per wall second,
@@ -79,6 +103,7 @@ class ScheduledPlan:
 
     def describe(self) -> str:
         return (
+            f"[epoch {self.plan_epoch}: {self.provenance}]  "
             f"D_T={len(self.train_devices)}dev  D_I={len(self.infer_devices)}dev  "
             f"γ={self.gamma:.3f}\n  σ: {self.train_plan.describe()}\n"
             f"  τ: {self.rollout_plan.describe()}\n"

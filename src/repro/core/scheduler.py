@@ -93,6 +93,70 @@ def _evaluate_allocation(
     )
 
 
+def _gamma_bisection(
+    cluster: Cluster,
+    cfg: SchedulerConfig,
+    evaluate: Callable[[PartitionResult], Optional[ScheduledPlan]],
+    q: float = 0.0,
+    r: float = 1.0,
+    max_iters: Optional[int] = None,
+    stable_iters: Optional[int] = None,
+) -> Tuple[Optional[ScheduledPlan], int]:
+    """The γ binary search of the repartition phase (§4.3), shared by the
+    offline `schedule`, the elastic `reschedule` warm start, and the
+    Table-5 baselines.
+
+    Each iteration partitions inside a window around the bracket midpoint
+    (widening until a node-granular partition exists), prices it with
+    ``evaluate``, and pushes γ toward the loaded side: C_T < C_I shrinks
+    training's share, infeasibility pushes compute toward training.  With
+    ``stable_iters`` set, stops early once the objective stabilizes.
+    Returns (best plan or None, iterations used).
+    """
+    max_iters = cfg.max_iters if max_iters is None else max_iters
+    best: Optional[ScheduledPlan] = None
+    stable = 0
+    prev_obj = math.inf
+    iters = 0
+    for it in range(max_iters):
+        iters = it + 1
+        mid = (q + r) / 2.0
+        width = cfg.gamma_width
+        part = partition(cluster, max(0.0, mid - width),
+                         min(1.0, mid + width))
+        while part is None and width < 1.0:
+            # widen progressively until a node-granular partition exists
+            width *= 2.0
+            part = partition(cluster, max(0.0, mid - width),
+                             min(1.0, mid + width))
+        if part is None:
+            break
+        plan = evaluate(part)
+        if plan is not None:
+            if best is None or plan.objective < best.objective:
+                best = plan
+            # --- binary search update on γ
+            if plan.cost_train < plan.cost_infer:
+                r = mid            # training under-loaded → shrink its share
+            else:
+                q = mid
+            if stable_iters is not None:
+                obj = plan.objective
+                if abs(obj - prev_obj) <= 1e-3 * max(prev_obj, 1e-9):
+                    stable += 1
+                    if stable >= stable_iters:
+                        break
+                else:
+                    stable = 0
+                prev_obj = obj
+        else:
+            # infeasible at this γ: push compute toward training
+            q = mid
+        if r - q < 1e-4:
+            break
+    return best, iters
+
+
 def schedule(
     spec: ModelSpec,
     cluster: Cluster,
@@ -105,49 +169,11 @@ def schedule(
     t0 = time.perf_counter()
 
     def solve_for_delta(delta: int) -> Tuple[Optional[ScheduledPlan], float]:
-        # --- γ binary search (repartition iterative refinement, §4.3)
-        q, r = 0.0, 1.0
-        best: Optional[ScheduledPlan] = None
-        stable = 0
-        prev_obj = math.inf
-        iters = 0
-        for it in range(cfg.max_iters):
-            iters = it + 1
-            mid = (q + r) / 2.0
-            part = partition(cluster,
-                             max(0.0, mid - cfg.gamma_width),
-                             min(1.0, mid + cfg.gamma_width))
-            if part is None:
-                # widen progressively until a node-granular partition exists
-                width = cfg.gamma_width
-                while part is None and width < 1.0:
-                    width *= 2.0
-                    part = partition(cluster, max(0.0, mid - width),
-                                     min(1.0, mid + width))
-                if part is None:
-                    break
-            plan = _evaluate_allocation(spec, cluster, part, P, cfg, delta)
-            if plan is not None:
-                if best is None or plan.objective < best.objective:
-                    best = plan
-                # --- binary search update on γ
-                if plan.cost_train < plan.cost_infer:
-                    r = mid        # training under-loaded → shrink its share
-                else:
-                    q = mid
-                obj = plan.objective
-                if abs(obj - prev_obj) <= 1e-3 * max(prev_obj, 1e-9):
-                    stable += 1
-                    if stable >= cfg.stable_iters:
-                        break
-                else:
-                    stable = 0
-                prev_obj = obj
-            else:
-                # infeasible at this γ: push compute toward training
-                q = mid
-            if r - q < 1e-4:
-                break
+        best, iters = _gamma_bisection(
+            cluster, cfg,
+            lambda part: _evaluate_allocation(spec, cluster, part, P, cfg,
+                                              delta),
+            stable_iters=cfg.stable_iters)
         if best is not None:
             best.iterations = iters
         return best, (best.objective if best else math.inf)
@@ -175,6 +201,63 @@ def schedule(
     return plan
 
 
+# ------------------------------------------------------ elastic replanning
+def reschedule(
+    spec: ModelSpec,
+    cluster: Cluster,
+    prev_plan: ScheduledPlan,
+    P: Optional[LengthDistribution] = None,
+    cfg: Optional[SchedulerConfig] = None,
+    *,
+    reason: str = "failure",
+    gamma_halfwidth: float = 0.15,
+) -> ScheduledPlan:
+    """Fast incremental re-run of the repartition phase for elastic recovery.
+
+    When the runtime loses devices (failure) or effectively loses them
+    (sustained straggler), the simulator/runtime hands the *surviving*
+    ``cluster`` plus the plan it was executing here.  Instead of the full
+    Algorithm 1 we warm-start from ``prev_plan``:
+
+      * δ(η) is pinned to the previous window — the staleness contract the
+        running buffer already operates under must not change mid-run;
+      * the γ binary search starts in a ``±gamma_halfwidth`` bracket around
+        the previous γ* (capacity loss moves the optimum, but rarely far);
+      * the iteration budget is a quarter of the offline budget.
+
+    Falls back to the full ``schedule`` (with δ still pinned) if the warm
+    bracket admits no feasible plan.  The returned plan records provenance:
+    ``plan_epoch = prev + 1``, ``provenance = "replan:<reason>"``.
+    """
+    P = P or LengthDistribution()
+    cfg = cfg or SchedulerConfig()
+    t0 = time.perf_counter()
+    delta = prev_plan.delta
+
+    best, iters = _gamma_bisection(
+        cluster, cfg,
+        lambda part: _evaluate_allocation(spec, cluster, part, P, cfg, delta),
+        q=max(0.0, prev_plan.gamma - gamma_halfwidth),
+        r=min(1.0, prev_plan.gamma + gamma_halfwidth),
+        max_iters=max(4, cfg.max_iters // 4))
+
+    if best is None:
+        # warm bracket infeasible (e.g. survivors can't host the model at the
+        # old γ): fall back to the full search, δ still pinned.
+        full_cfg = replace(
+            cfg, adapt_delta=False,
+            staleness=replace(cfg.staleness, delta_init=delta))
+        best = schedule(spec, cluster, P, full_cfg)
+    else:
+        best.iterations = iters
+
+    best.plan_epoch = prev_plan.plan_epoch + 1
+    best.parent_epoch = prev_plan.plan_epoch
+    best.provenance = f"replan:{reason}"
+    best.wall_time_s = time.perf_counter() - t0
+    return best
+
+
 # ------------------------------------------------------ Table 5 baselines
 def schedule_without_search(
     spec: ModelSpec, cluster: Cluster,
@@ -187,37 +270,23 @@ def schedule_without_search(
     cfg = cfg or SchedulerConfig()
     cfg = replace(cfg, milp_bisection=True)
     t0 = time.perf_counter()
-
-    best: Optional[ScheduledPlan] = None
-    q, r = 0.0, 1.0
     delta = cfg.staleness.delta0()
-    for _ in range(cfg.max_iters):
-        mid = (q + r) / 2.0
-        width = cfg.gamma_width
-        part = partition(cluster, max(0.0, mid - width),
-                         min(1.0, mid + width))
-        while part is None and width < 1.0:   # widen until integral
-            width *= 2.0
-            part = partition(cluster, max(0.0, mid - width),
-                             min(1.0, mid + width))
-        if part is None:
-            break
+
+    def evaluate(part: PartitionResult) -> Optional[ScheduledPlan]:
         sigma, tcost = exhaustive_search(
             spec, cluster, part.train_devices,
             tokens_per_step=cfg.tokens_per_step, seq_len=cfg.seq_len)
         if sigma is None:
-            q = mid
-            continue
+            return None
         rollouts = delta * cfg.tokens_per_step / max(P.mean(), 1.0)
         milp_res = solve_rollout_milp_bisection(
             spec, part.infer_devices, P, total_rollouts=rollouts)
         tau = milp_res.plan
         if not tau.assignments:
-            q = mid
-            continue
+            return None
         c_update = weight_sync_cost(spec, cluster, part.train_devices,
                                     part.infer_devices)
-        plan = ScheduledPlan(
+        return ScheduledPlan(
             train_devices=[d.index for d in part.train_devices],
             infer_devices=[d.index for d in part.infer_devices],
             train_plan=sigma, rollout_plan=tau,
@@ -225,14 +294,8 @@ def schedule_without_search(
             cost_infer=tau.makespan + cfg.reward_cost_s * delta + c_update * delta,
             cost_update=c_update * delta, cost_reward=cfg.reward_cost_s * delta,
             delta=delta, gamma=part.gamma_actual)
-        if best is None or plan.objective < best.objective:
-            best = plan
-        if plan.cost_train < plan.cost_infer:
-            r = mid
-        else:
-            q = mid
-        if r - q < 1e-4:
-            break
+
+    best, _ = _gamma_bisection(cluster, cfg, evaluate)
     if best is None:
         raise RuntimeError("no feasible plan (w/o search baseline)")
     best.wall_time_s = time.perf_counter() - t0

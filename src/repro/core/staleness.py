@@ -37,7 +37,9 @@ class StalenessController:
     config: StalenessConfig
     version: int = 0                       # current trainer weight version
     in_flight: int = 0                     # rollouts generating or buffered
+    plan_epoch: int = 0                    # elastic replan generation
     _staleness_hist: List[int] = field(default_factory=list)
+    _swap_log: List[tuple] = field(default_factory=list)  # (epoch, version)
 
     # ---------------------------------------------------------------- queries
     @property
@@ -83,6 +85,19 @@ class StalenessController:
         self.version += 1
         return self.version
 
+    def record_plan_swap(self) -> int:
+        """An elastic replan swapped the execution plan under this stream.
+
+        A swap changes *where* rollouts run, never the weight-version
+        stream: ``version``, ``in_flight``, and the η admission rule carry
+        over unchanged — that is what preserves the staleness bound across
+        the swap.  We only bump the plan epoch and log the (epoch, version)
+        pair so consumed batches can be attributed to plan generations.
+        """
+        self.plan_epoch += 1
+        self._swap_log.append((self.plan_epoch, self.version))
+        return self.plan_epoch
+
     # ------------------------------------------------------------------ stats
     def mean_staleness(self) -> float:
         h = self._staleness_hist
@@ -90,6 +105,10 @@ class StalenessController:
 
     def max_staleness(self) -> int:
         return max(self._staleness_hist) if self._staleness_hist else 0
+
+    def swap_history(self) -> List[tuple]:
+        """[(plan_epoch, version_at_swap), ...] — provenance of replans."""
+        return list(self._swap_log)
 
 
 def adaptive_delta(run_window, config: StalenessConfig,

@@ -26,6 +26,7 @@ class Rollout:
     group_id: int                      # GRPO group (same prompt)
     reward: float = 0.0
     task: Any = None
+    plan_epoch: int = 0                # elastic plan generation that ran it
 
     @property
     def length(self) -> int:
@@ -49,7 +50,23 @@ class RolloutBuffer:
     def push(self, rollout: Rollout) -> None:
         """Completed generation enters the buffer (still 'in flight' for
         capacity purposes until consumed)."""
+        rollout.plan_epoch = self.ctl.plan_epoch
         self._items.append(rollout)
+
+    # ------------------------------------------------------------- elastic
+    def on_plan_swap(self) -> int:
+        """An elastic replan hot-swapped the execution plan.
+
+        Buffered and in-flight rollouts from the previous epoch stay valid:
+        their version tags are unchanged, so the η admission rule keeps
+        holding across the swap (the capacity (η+1)·B depends only on η and
+        B, which a swap never changes mid-run).  Returns the new epoch.
+        """
+        return self.ctl.record_plan_swap()
+
+    @property
+    def plan_epoch(self) -> int:
+        return self.ctl.plan_epoch
 
     # ------------------------------------------------------------- trainer
     def bump_version(self) -> int:
@@ -90,4 +107,6 @@ class RolloutBuffer:
             "mean_staleness": self.ctl.mean_staleness(),
             "max_staleness": self.ctl.max_staleness(),
             "dropped": self.dropped,
+            "plan_epoch": self.ctl.plan_epoch,
+            "plan_swaps": len(self.ctl.swap_history()),
         }

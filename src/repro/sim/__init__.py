@@ -1,3 +1,11 @@
-from .simulator import AsyncRLSimulator, SimConfig, SimResult
+from .events import (FailureInjection, PlanSwapRecord, ReplanTrigger,
+                     StragglerInjection)
+from .replan import ElasticConfig, ElasticReplanner
+from .simulator import AsyncRLSimulator, PlanEpochStat, SimConfig, SimResult
 
-__all__ = ["AsyncRLSimulator", "SimConfig", "SimResult"]
+__all__ = [
+    "AsyncRLSimulator", "SimConfig", "SimResult", "PlanEpochStat",
+    "ElasticConfig", "ElasticReplanner",
+    "FailureInjection", "StragglerInjection",
+    "ReplanTrigger", "PlanSwapRecord",
+]

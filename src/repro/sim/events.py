@@ -1,4 +1,17 @@
-"""Event and fault-injection primitives for the async-RL simulator."""
+"""Event and fault-injection primitives for the async-RL simulator.
+
+Event kinds used by ``AsyncRLSimulator``:
+
+  * ``rollout_done``  — a replica finished one trajectory (+ reward stage);
+  * ``train_done``    — the trainer finished a step + weight broadcast;
+  * ``straggle``      — a ``StragglerInjection`` takes effect;
+  * ``fail``          — a ``FailureInjection`` takes effect;
+  * ``recover``       — a transient failure's downtime elapsed;
+  * ``replan_drain``  — a (possibly debounce-deferred) replan starts its
+    drain: new launches stop, ``replan_ready`` is scheduled;
+  * ``replan_ready``  — the elastic replanner finished recomputing the plan
+    (``replan_latency_s`` after the drain started; commits the hot swap).
+"""
 from __future__ import annotations
 
 import heapq
@@ -32,7 +45,11 @@ class EventQueue:
 
 @dataclass
 class StragglerInjection:
-    """Replica ``replica_idx`` runs at ``factor``× throughput from t_start."""
+    """Replica ``replica_idx`` runs at ``factor``× throughput from t_start.
+
+    ``replica_idx`` refers to the flattened replica order of the plan that
+    is *live when the injection fires* (plan epochs renumber replicas).
+    """
     replica_idx: int
     factor: float = 0.3
     t_start: float = 0.0
@@ -44,3 +61,32 @@ class FailureInjection:
     replica_idx: int
     t_fail: float
     downtime: Optional[float] = None      # None = permanent
+
+
+@dataclass
+class ReplanTrigger:
+    """Why the simulator asked the scheduler for a new plan."""
+    time: float
+    reason: str                 # "failure" | "straggler"
+    replica_idx: int            # replica (in the then-live plan) that tripped it
+
+
+@dataclass
+class PlanSwapRecord:
+    """Provenance of one committed hot swap (simulator output).
+
+    Staleness fields snapshot the consumed-rollout staleness stream so the
+    η bound can be checked on both sides of the swap: ``*_before`` covers
+    everything consumed up to the commit, ``*_after`` everything consumed
+    from the commit to the end of the run (filled when the run finishes).
+    """
+    epoch: int                  # plan epoch committed by this swap
+    t_request: float            # when the trigger fired (draining starts)
+    t_commit: float             # when the new plan went live
+    reason: str
+    n_replicas_before: int
+    n_replicas_after: int
+    mean_staleness_before: float = 0.0
+    max_staleness_before: int = 0
+    mean_staleness_after: float = 0.0
+    max_staleness_after: int = 0

@@ -11,9 +11,42 @@ cost, weight-sync cost) over simulated time with AReaL semantics:
   * the trainer consumes B rollouts per step (t_train seconds), bumps the
     weight version, and broadcasts (t_sync seconds, pausing generation —
     paper Fig. 1);
-  * stragglers run at a reduced rate; failed replicas stop (elastic
-    recovery = workload rebalancing across survivors, the runtime analogue
-    of re-running the repartition phase).
+  * stragglers run at a reduced rate; failed replicas stop.
+
+Elastic replanning (§4.3: the runtime analogue of re-running the
+repartition phase) closes the loop back to the scheduler.  When an
+``ElasticReplanner`` is attached, the simulator runs this plan-swap state
+machine:
+
+    RUNNING ──(permanent failure │ sustained straggler)──▶ DRAINING
+      ▲                                                        │
+      │  commit: swap replica set + t_train/t_sync, epoch += 1 │
+      └──────────────── replan_ready (after replan_latency_s) ─┘
+
+  * RUNNING   — normal operation on the current plan epoch.
+  * DRAINING  — no *new* rollouts launch while the replanner recomputes,
+    but in-flight rollouts run to completion and keep their weight-version
+    tags (their work is preserved), and the trainer keeps consuming from
+    the buffer.  Further failures during the drain accumulate into the
+    same replan.  When ``min_interval_s`` debounces a trigger, the commit
+    is deferred — never dropped — and the drain starts only
+    ``replan_latency_s`` before the deferred commit, so the surviving
+    fleet keeps generating through the deferral window.
+  * commit    — the survivors are snapshotted into a reduced ``Cluster``
+    and the repartition phase re-runs (γ- and δ-warm-started
+    ``core.scheduler.reschedule``).  The new plan's replica set and
+    train/sync costs hot-swap in; weight-version accounting carries over
+    unchanged, so the η staleness bound holds across the swap (asserted in
+    tests, recorded per swap in ``PlanSwapRecord``).  If no feasible plan
+    exists the old plan continues minus the dead replicas.  Transient
+    failures (a ``downtime``) are tracked per *device*: a swap re-places
+    work onto a still-down device as a dead replica that recovers when
+    the original outage ends.
+
+Rollout-completion events are tagged with the plan epoch that launched
+them: a rollout finishing after a swap still enters the buffer (admission
+is by weight version, not by epoch) but does not re-launch its —
+possibly reassigned — replica.
 
 This is how the paper's throughput tables are reproduced without H800/H20
 hardware, and how fault-tolerance is validated at scale.
@@ -21,13 +54,15 @@ hardware, and how fault-tolerance is validated at scale.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Set
 
 import numpy as np
 
 from repro.core.cost_model import LengthDistribution
 from repro.core.plan import ScheduledPlan
-from .events import EventQueue, FailureInjection, StragglerInjection
+from .events import (EventQueue, FailureInjection, PlanSwapRecord,
+                     ReplanTrigger, StragglerInjection)
+from .replan import ElasticReplanner
 
 
 @dataclass
@@ -39,6 +74,24 @@ class SimConfig:
     seed: int = 0
     stragglers: Sequence[StragglerInjection] = field(default_factory=list)
     failures: Sequence[FailureInjection] = field(default_factory=list)
+    replanner: Optional[ElasticReplanner] = None   # attach to go elastic
+    check_invariants: bool = False         # assert conservation per event
+
+
+@dataclass
+class PlanEpochStat:
+    """Throughput attribution for one plan generation."""
+    epoch: int
+    provenance: str
+    t_start: float
+    t_end: float
+    steps: int
+    tokens: float
+
+    @property
+    def throughput_tps(self) -> float:
+        dt = self.t_end - self.t_start
+        return self.tokens / dt if dt > 0 else 0.0
 
 
 @dataclass
@@ -53,17 +106,37 @@ class SimResult:
     max_staleness: int
     stalls_capacity: int                  # generation pauses (staleness cap)
     stalls_data: int                      # trainer waits on rollouts
+    # latency fields report the FINAL plan epoch's costs (per-epoch values
+    # live in plan_epochs when the run swapped plans mid-flight)
     infer_latency_s: float                # mean per-step rollout-supply time
     train_latency_s: float
     sync_latency_s: float
     dropped: int = 0
+    # --- conservation ledger (every launched rollout is accounted for)
+    rollouts_launched: int = 0
+    rollouts_trained: int = 0
+    rollouts_in_buffer: int = 0           # at end of run
+    rollouts_generating: int = 0          # at end of run
+    # --- elastic replanning provenance
+    swaps: List[PlanSwapRecord] = field(default_factory=list)
+    replan_triggers: List[ReplanTrigger] = field(default_factory=list)
+    plan_epochs: List[PlanEpochStat] = field(default_factory=list)
 
     def summary(self) -> str:
+        extra = f" swaps={len(self.swaps)}" if self.swaps else ""
         return (f"steps={self.steps} wall={self.wall_time_s:.1f}s "
                 f"tput={self.throughput_tps:.0f} t/s "
                 f"train_busy={self.train_busy_frac:.2f} "
                 f"staleness μ={self.mean_staleness:.2f} "
-                f"max={self.max_staleness}")
+                f"max={self.max_staleness}{extra}")
+
+
+def _flatten_replicas(plan: ScheduledPlan) -> List[float]:
+    out: List[float] = []
+    for a in plan.rollout_plan.assignments:
+        for _ in range(a.count):
+            out.append(a.cost.tokens_per_sec)
+    return out
 
 
 class AsyncRLSimulator:
@@ -73,10 +146,7 @@ class AsyncRLSimulator:
         self.P = P
         self.cfg = cfg
         # flatten replicas: (throughput tokens/s)
-        self.replicas: List[float] = []
-        for a in plan.rollout_plan.assignments:
-            for _ in range(a.count):
-                self.replicas.append(a.cost.tokens_per_sec)
+        self.replicas: List[float] = _flatten_replicas(plan)
         self.t_train = plan.cost_train / max(plan.delta, 1)
         self.t_sync = plan.cost_update / max(plan.delta, 1)
 
@@ -87,54 +157,91 @@ class AsyncRLSimulator:
         B = cfg.rollouts_per_step
         capacity = (cfg.eta + 1) * B
         q = EventQueue()
+        replanner = cfg.replanner
+        elastic = replanner.elastic if replanner is not None else None
 
+        cur_plan = self.plan
+        epoch = cur_plan.plan_epoch
         n_rep = len(self.replicas)
         rate = list(self.replicas)            # current tokens/s per replica
         alive = [True] * n_rep
+        cum_factor = [1.0] * n_rep            # cumulative straggler slowdown
+        t_train, t_sync = self.t_train, self.t_sync
         version = 0
         buffer: List[tuple] = []              # (version, length)
         in_flight = 0
         paused: List[int] = []                # replicas paused on capacity
+        idle: Set[int] = set()                # drained replicas awaiting swap
         steps = 0
         tokens_consumed = 0.0
         stale_hist: List[int] = []
         stalls_capacity = 0
         stalls_data = 0
         dropped = 0
+        launched = 0
+        consumed = 0
+        generating = 0
         train_busy = 0.0
-        gen_busy = np.zeros(n_rep)
-        trainer_idle_since = 0.0
+        gen_busy_sum = 0.0
+        rep_seconds = 0.0                     # ∫ fleet-size dt across epochs
         trainer_busy_until = 0.0
-        train_waits: List[float] = []
-        step_start = 0.0
         t = 0.0
 
-        for s in cfg.stragglers:
-            if s.t_start <= 0 and s.replica_idx < n_rep:
-                rate[s.replica_idx] *= s.factor
-            else:
-                q.push(s.t_start, "straggle", s)
-        for f in cfg.failures:
-            q.push(f.t_fail, "fail", f)
+        # --- plan-swap state machine
+        state = "RUNNING"                     # RUNNING | DRAINING
+        drain_scheduled = False               # a deferred drain is queued
+        pending_dead: Set[int] = set()        # replicas to vacate at commit
+        down_until: Dict[int, float] = {}     # device idx → transient-recovery t
+        drain_reason = ""
+        drain_t0 = 0.0
+        last_commit = -np.inf
+        swaps: List[PlanSwapRecord] = []
+        triggers: List[ReplanTrigger] = []
+        epoch_stats: List[PlanEpochStat] = []
+        epoch_open = dict(epoch=epoch, provenance=cur_plan.provenance,
+                          t_start=0.0, steps0=0, tokens0=0.0)
+        swap_hist_idx: List[int] = []         # stale_hist cut per swap
+
+        def close_epoch(now: float) -> None:
+            epoch_stats.append(PlanEpochStat(
+                epoch=epoch_open["epoch"], provenance=epoch_open["provenance"],
+                t_start=epoch_open["t_start"], t_end=now,
+                steps=steps - epoch_open["steps0"],
+                tokens=tokens_consumed - epoch_open["tokens0"]))
+
+        def check(now: float) -> None:
+            if not cfg.check_invariants:
+                return
+            assert in_flight == generating + len(buffer), \
+                (now, in_flight, generating, len(buffer))
+            assert launched == consumed + dropped + in_flight, \
+                (now, launched, consumed, dropped, in_flight)
+            assert 0 <= in_flight <= capacity, (now, in_flight, capacity)
 
         def launch(i: int, now: float) -> None:
-            nonlocal in_flight, stalls_capacity
-            if not alive[i]:
+            nonlocal in_flight, stalls_capacity, launched, generating
+            nonlocal gen_busy_sum
+            if i >= len(alive) or not alive[i]:
+                return
+            if state == "DRAINING":           # no new work while replanning
+                idle.add(i)
                 return
             if in_flight >= capacity:
                 paused.append(i)          # staleness capacity reached:
                 stalls_capacity += 1      # generation pauses (paper Fig. 1)
                 return
             in_flight += 1
+            launched += 1
+            generating += 1
             length = float(np.clip(rng.lognormal(
                 *_lognorm(self.P)), 16, self.P.max_len))
             dur = (length + self.P.prompt_len) / max(rate[i], 1e-9)
-            gen_busy[i] += dur
+            gen_busy_sum += dur
             q.push(now + dur + cfg.reward_cost_s, "rollout_done",
-                   (i, version, length))
+                   (epoch, i, version, length))
 
         def maybe_train(now: float) -> None:
-            nonlocal steps, tokens_consumed, version, in_flight
+            nonlocal steps, tokens_consumed, version, in_flight, consumed
             nonlocal train_busy, trainer_busy_until, stalls_data, dropped
             if steps >= cfg.n_steps or now < trainer_busy_until:
                 return
@@ -151,16 +258,111 @@ class AsyncRLSimulator:
             batch = buffer[:B]
             del buffer[:B]
             in_flight -= B
+            consumed += B
             for vtag, ln in batch:
                 stale_hist.append(version - vtag)
                 tokens_consumed += ln + self.P.prompt_len
-            dur = self.t_train + self.t_sync
-            train_busy += self.t_train
+            dur = t_train + t_sync
+            train_busy += t_train
             trainer_busy_until = now + dur
             q.push(now + dur, "train_done", None)
             # resume capacity-paused replicas
             while paused:
                 launch(paused.pop(), now)
+            check(now)
+
+        def trigger_replan(now: float, reason: str, replica_idx: int) -> None:
+            nonlocal drain_scheduled, drain_reason, drain_t0
+            if replanner is None:
+                return
+            pending_dead.add(replica_idx)
+            triggers.append(ReplanTrigger(now, reason, replica_idx))
+            if state == "DRAINING" or drain_scheduled:
+                return                        # accumulate into pending swap
+            # debounce defers the commit past min_interval_s after the last
+            # swap — it never drops a trigger (a dropped permanent failure
+            # would silently disable recovery for the rest of the run), and
+            # the fleet keeps generating until the drain actually starts
+            # (replan_latency_s before the deferred commit, not the trigger)
+            ready = max(now + elastic.replan_latency_s,
+                        last_commit + elastic.min_interval_s)
+            drain_scheduled = True
+            drain_reason = reason
+            drain_t0 = now
+            q.push(ready - elastic.replan_latency_s, "replan_drain", None)
+
+        def commit_swap(now: float) -> None:
+            nonlocal state, drain_scheduled, cur_plan, epoch, n_rep, rate
+            nonlocal alive, cum_factor, t_train, t_sync, last_commit
+            nonlocal rep_seconds
+            n_before = sum(alive)
+            replanner.exclude_replicas(cur_plan, sorted(pending_dead))
+            new_plan = replanner.replan(cur_plan, drain_reason)
+            for i in pending_dead:            # vacated either way
+                if i < len(alive):
+                    alive[i] = False
+            pending_dead.clear()
+            state = "RUNNING"
+            drain_scheduled = False
+            last_commit = now
+            if new_plan is None:
+                # no feasible plan: continue on the old one minus the dead
+                for i in sorted(idle):
+                    launch(i, now)
+                idle.clear()
+                return
+            close_epoch(now)
+            rep_seconds += n_rep * (now - epoch_open["t_start"])
+            cur_plan = new_plan
+            epoch = new_plan.plan_epoch
+            epoch_open.update(epoch=epoch, provenance=new_plan.provenance,
+                              t_start=now, steps0=steps,
+                              tokens0=tokens_consumed)
+            rate = _flatten_replicas(new_plan)
+            n_rep = len(rate)
+            alive = [True] * n_rep
+            cum_factor = [1.0] * n_rep
+            t_train = new_plan.cost_train / max(new_plan.delta, 1)
+            t_sync = new_plan.cost_update / max(new_plan.delta, 1)
+            h = stale_hist
+            swaps.append(PlanSwapRecord(
+                epoch=epoch, t_request=drain_t0, t_commit=now,
+                reason=drain_reason, n_replicas_before=n_before,
+                n_replicas_after=n_rep,
+                mean_staleness_before=float(np.mean(h)) if h else 0.0,
+                max_staleness_before=int(np.max(h)) if h else 0))
+            swap_hist_idx.append(len(h))
+            paused.clear()
+            idle.clear()
+            # transiently-down devices (failures with a downtime) keep their
+            # remaining outage across the swap: any new replica placed on
+            # them starts dead and recovers when the original outage ends
+            still_down = {d: until for d, until in down_until.items()
+                          if until > now}
+            if still_down:
+                for i, devs in enumerate(replanner.replica_devices(new_plan)):
+                    t_up = max((still_down.get(d.index, 0.0) for d in devs),
+                               default=0.0)
+                    if t_up > now:
+                        alive[i] = False
+                        q.push(t_up, "recover", (epoch, i))
+            # in-flight rollouts from the old epoch drain into the buffer as
+            # they finish; the new replica fleet starts fresh here
+            for i in range(n_rep):
+                launch(i, now)
+
+        for s in cfg.stragglers:
+            if s.t_start <= 0 and s.replica_idx < n_rep:
+                rate[s.replica_idx] *= s.factor
+                cum_factor[s.replica_idx] *= s.factor
+                if (elastic is not None and
+                        cum_factor[s.replica_idx]
+                        <= elastic.straggler_threshold):
+                    trigger_replan(0.0, "straggler", s.replica_idx)
+            else:
+                q.push(s.t_start, "straggle", s)
+        for f in cfg.failures:
+            q.push(f.t_fail, "fail", f)
 
         for i in range(n_rep):
             launch(i, 0.0)
@@ -169,7 +371,8 @@ class AsyncRLSimulator:
             ev = q.pop()
             t = ev.time
             if ev.kind == "rollout_done":
-                i, vtag, length = ev.payload
+                ev_epoch, i, vtag, length = ev.payload
+                generating -= 1
                 if version - vtag > cfg.eta:
                     # over-stale at entry (rare under capacity control):
                     # evicted, its capacity slot freed
@@ -177,47 +380,86 @@ class AsyncRLSimulator:
                     in_flight -= 1
                 else:
                     buffer.append((vtag, length))
-                launch(i, t)
+                if ev_epoch == epoch:         # old-epoch replicas don't relaunch
+                    launch(i, t)
                 maybe_train(t)
             elif ev.kind == "train_done":
                 steps += 1
                 version += 1
-                step_start = t
                 maybe_train(t)
             elif ev.kind == "straggle":
                 s = ev.payload
                 if s.replica_idx < n_rep:
                     rate[s.replica_idx] *= s.factor
+                    cum_factor[s.replica_idx] *= s.factor
+                    if (elastic is not None and
+                            cum_factor[s.replica_idx]
+                            <= elastic.straggler_threshold):
+                        trigger_replan(t, "straggler", s.replica_idx)
             elif ev.kind == "fail":
                 f = ev.payload
                 if f.replica_idx < n_rep:
                     alive[f.replica_idx] = False
                     if f.downtime is not None:
-                        q.push(t + f.downtime, "recover", f.replica_idx)
+                        q.push(t + f.downtime, "recover",
+                               (epoch, f.replica_idx))
+                        if replanner is not None:
+                            # remember the outage per device so a plan swap
+                            # can't silently cancel the remaining downtime
+                            rmap = replanner.replica_devices(cur_plan)
+                            if f.replica_idx < len(rmap):
+                                for d in rmap[f.replica_idx]:
+                                    down_until[d.index] = max(
+                                        down_until.get(d.index, 0.0),
+                                        t + f.downtime)
+                    elif elastic is not None and elastic.replan_on_failure:
+                        trigger_replan(t, "failure", f.replica_idx)
             elif ev.kind == "recover":
-                i = ev.payload
-                alive[i] = True
-                launch(i, t)
+                ev_epoch, i = ev.payload
+                if ev_epoch == epoch and i < n_rep:   # plan still live
+                    alive[i] = True
+                    launch(i, t)
+            elif ev.kind == "replan_drain":
+                state = "DRAINING"
+                q.push(t + elastic.replan_latency_s, "replan_ready", None)
+            elif ev.kind == "replan_ready":
+                commit_swap(t)
             # trainer may have become unblocked by time passing
             if t >= trainer_busy_until:
                 maybe_train(t)
+            check(t)
 
         wall = t if t > 0 else 1e-9
+        rep_seconds += n_rep * max(wall - epoch_open["t_start"], 0.0)
+        close_epoch(wall)
+        # fill post-swap staleness snapshots now that the stream is complete
+        for rec, cut in zip(swaps, swap_hist_idx):
+            h = stale_hist[cut:]
+            rec.mean_staleness_after = float(np.mean(h)) if h else 0.0
+            rec.max_staleness_after = int(np.max(h)) if h else 0
         return SimResult(
             wall_time_s=wall,
             steps=steps,
             tokens_consumed=tokens_consumed,
             throughput_tps=tokens_consumed / wall,
             train_busy_frac=train_busy / wall,
-            gen_busy_frac=float(np.mean(gen_busy / wall)) if n_rep else 0.0,
+            gen_busy_frac=(gen_busy_sum / rep_seconds
+                           if rep_seconds > 0 else 0.0),
             mean_staleness=float(np.mean(stale_hist)) if stale_hist else 0.0,
             max_staleness=int(np.max(stale_hist)) if stale_hist else 0,
             stalls_capacity=stalls_capacity,
             stalls_data=stalls_data,
-            infer_latency_s=wall / max(steps, 1) - self.t_train - self.t_sync,
-            train_latency_s=self.t_train,
-            sync_latency_s=self.t_sync,
+            infer_latency_s=wall / max(steps, 1) - t_train - t_sync,
+            train_latency_s=t_train,
+            sync_latency_s=t_sync,
             dropped=dropped,
+            rollouts_launched=launched,
+            rollouts_trained=consumed,
+            rollouts_in_buffer=len(buffer),
+            rollouts_generating=generating,
+            swaps=swaps,
+            replan_triggers=triggers,
+            plan_epochs=epoch_stats,
         )
 
 

@@ -1,0 +1,145 @@
+"""Fallback property-testing shim for environments without ``hypothesis``.
+
+The tier-1 suite states its invariants with hypothesis strategies.  Some
+runtime images (notably the TPU containers, which pin a minimal python
+env) do not ship ``hypothesis``; rather than silently skipping the
+staleness/GRPO/packing invariants there, this module provides a tiny
+seeded random-sampling implementation of the subset of the hypothesis
+API the suite uses:
+
+  * ``st.integers(lo, hi)`` / ``st.floats(lo, hi)`` / ``st.booleans()``
+  * ``st.lists(elem, min_size=, max_size=)``
+  * ``st.sampled_from(seq)``
+  * ``@given(*strategies, **strategies)`` — draws ``max_examples``
+    deterministic samples (fixed seed ⇒ reproducible CI) and calls the
+    test once per sample;
+  * ``@settings(max_examples=, deadline=)`` — only ``max_examples`` is
+    honored; ``deadline`` is accepted and ignored.
+
+Test modules use it as::
+
+    try:
+        import hypothesis.strategies as st
+        from hypothesis import given, settings
+    except ImportError:
+        from _prop import given, settings, st
+
+so real hypothesis (with shrinking and edge-case generation) is used
+whenever installed, and this shim only closes the collection gap.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+from typing import Any, Callable, List, Optional, Sequence
+
+import numpy as np
+
+_SEED = 0xA9EA1  # fixed: the shim must be deterministic across runs
+_DEFAULT_MAX_EXAMPLES = 30
+
+
+class Strategy:
+    """A sampleable value source: ``sample(rng) -> value``."""
+
+    def __init__(self, fn: Callable[[np.random.Generator], Any]):
+        self._fn = fn
+
+    def sample(self, rng: np.random.Generator) -> Any:
+        return self._fn(rng)
+
+
+class _St:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 1 << 30) -> Strategy:
+        return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0) -> Strategy:
+        def draw(rng: np.random.Generator) -> float:
+            # hit the endpoints occasionally: they are the classic edge cases
+            r = rng.random()
+            if r < 0.05:
+                return float(min_value)
+            if r < 0.10:
+                return float(max_value)
+            return float(rng.uniform(min_value, max_value))
+        return Strategy(draw)
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def sampled_from(seq: Sequence[Any]) -> Strategy:
+        items = list(seq)
+        return Strategy(lambda rng: items[int(rng.integers(0, len(items)))])
+
+    @staticmethod
+    def lists(elements: Strategy, min_size: int = 0,
+              max_size: int = 16) -> Strategy:
+        def draw(rng: np.random.Generator) -> List[Any]:
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.sample(rng) for _ in range(n)]
+        return Strategy(draw)
+
+
+st = _St()
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES,
+             deadline: Optional[Any] = None, **_ignored: Any):
+    """Decorator recording the example budget; works inside or outside
+    ``@given`` (the budget is read at call time)."""
+
+    def deco(fn: Callable) -> Callable:
+        fn._prop_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies: Strategy, **kw_strategies: Strategy):
+    """Seeded random-sampling stand-in for ``hypothesis.given``.
+
+    Matching hypothesis semantics: positional strategies bind to the
+    test's *rightmost* parameters (leading params stay free for pytest
+    fixtures), keyword strategies bind by name.
+    """
+
+    def deco(fn: Callable) -> Callable:
+        params = list(inspect.signature(fn).parameters.values())
+        pos_names = [p.name for p in
+                     params[len(params) - len(arg_strategies):]]
+
+        @functools.wraps(fn)
+        def wrapper(*fixture_args: Any, **fixture_kw: Any) -> None:
+            n = getattr(wrapper, "_prop_max_examples",
+                        getattr(fn, "_prop_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            rng = np.random.default_rng(_SEED)
+            for i in range(n):
+                drawn = {name: s.sample(rng)
+                         for name, s in zip(pos_names, arg_strategies)}
+                drawn.update({k: s.sample(rng)
+                              for k, s in kw_strategies.items()})
+                try:
+                    fn(*fixture_args, **{**fixture_kw, **drawn})
+                except Exception as e:
+                    raise AssertionError(
+                        f"property falsified on example {i + 1}/{n}: "
+                        f"{drawn!r}") from e
+
+        # carry a budget set by an inner @settings through to the wrapper
+        if hasattr(fn, "_prop_max_examples"):
+            wrapper._prop_max_examples = fn._prop_max_examples
+
+        # pytest must not see the drawn parameters (it would treat them as
+        # fixtures): expose a signature with only the remaining params
+        drawn_names = set(kw_strategies) | set(pos_names)
+        wrapper.__signature__ = inspect.Signature(
+            [p for p in params if p.name not in drawn_names])
+        del wrapper.__wrapped__          # stop inspect following back to fn
+        return wrapper
+    return deco

@@ -10,6 +10,13 @@ import jax
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long model-forward tests excluded from the CI budget "
+        "(run with -m slow or no -m filter)")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)

@@ -1,0 +1,188 @@
+"""Elastic replanning: scheduler determinism, warm-started reschedule,
+conservation invariants, and the η staleness bound across plan swaps."""
+import pytest
+
+from repro.core.cluster import Cluster, paper_heterogeneous
+from repro.core.cost_model import LengthDistribution
+from repro.core.model_spec import PAPER_MODELS
+from repro.core.scheduler import SchedulerConfig, reschedule, schedule
+from repro.core.staleness import StalenessConfig, StalenessController
+from repro.rl.buffer import RolloutBuffer
+from repro.sim import (AsyncRLSimulator, ElasticConfig, ElasticReplanner,
+                       FailureInjection, SimConfig, StragglerInjection)
+
+SPEC = PAPER_MODELS["1.5B"]
+P = LengthDistribution(mean_len=1024, prompt_len=128)
+SCHED_CFG = SchedulerConfig(tokens_per_step=2 ** 18, stable_iters=3,
+                            max_iters=12, adapt_delta=False)
+SIM = dict(n_steps=12, rollouts_per_step=32, eta=4, reward_cost_s=0.1)
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    return paper_heterogeneous(16, 16)     # 2 H800 + 2 H20 nodes
+
+
+@pytest.fixture(scope="module")
+def plan(cluster):
+    return schedule(SPEC, cluster, P, SCHED_CFG)
+
+
+def _fast_replica_failures(plan, t_fail=8.0):
+    """Kill every H800 rollout replica (the fast pool) at t_fail."""
+    idx, fails = 0, []
+    for a in plan.rollout_plan.assignments:
+        for _ in range(a.count):
+            if a.config.profile_name == "H800":
+                fails.append(FailureInjection(idx, t_fail=t_fail))
+            idx += 1
+    assert fails, "plan has no fast rollout replicas to kill"
+    return fails
+
+
+def _elastic(plan, cluster, churn, latency=4.0):
+    rp = ElasticReplanner(SPEC, cluster, P, SCHED_CFG,
+                          ElasticConfig(replan_latency_s=latency,
+                                        straggler_threshold=0.5))
+    return AsyncRLSimulator(plan, P, SimConfig(
+        **SIM, **churn, replanner=rp, check_invariants=True)).run()
+
+
+# ------------------------------------------------------------- determinism
+def test_schedule_deterministic(cluster):
+    """Same Cluster + SchedulerConfig ⇒ identical ScheduledPlan decision
+    (guards the reschedule warm-start against nondeterminism)."""
+    a = schedule(SPEC, cluster, P, SCHED_CFG)
+    b = schedule(SPEC, cluster, P, SCHED_CFG)
+    assert a.signature() == b.signature()
+    assert a.delta == b.delta and a.gamma == b.gamma
+
+
+def test_reschedule_deterministic_and_provenanced(cluster, plan):
+    survivors = Cluster(devices=cluster.devices[:24],
+                        cross_type_bw=cluster.cross_type_bw)
+    a = reschedule(SPEC, survivors, plan, P, SCHED_CFG, reason="failure")
+    b = reschedule(SPEC, survivors, plan, P, SCHED_CFG, reason="failure")
+    assert a.signature() == b.signature()
+    # provenance chain: epoch bumped, parent recorded, δ pinned
+    assert a.plan_epoch == plan.plan_epoch + 1
+    assert a.parent_epoch == plan.plan_epoch
+    assert a.provenance == "replan:failure"
+    assert a.delta == plan.delta
+    # the reduced plan only uses surviving devices
+    used = set(a.train_devices) | set(a.infer_devices)
+    assert used <= {d.index for d in survivors.devices}
+
+
+def test_simulator_deterministic_given_seed(plan):
+    r1 = AsyncRLSimulator(plan, P, SimConfig(**SIM, seed=7)).run()
+    r2 = AsyncRLSimulator(plan, P, SimConfig(**SIM, seed=7)).run()
+    assert r1.wall_time_s == r2.wall_time_s
+    assert r1.tokens_consumed == r2.tokens_consumed
+    assert r1.rollouts_launched == r2.rollouts_launched
+
+
+# ------------------------------------------------------------ conservation
+def test_conservation_ledger_no_churn(plan):
+    res = AsyncRLSimulator(plan, P, SimConfig(
+        **SIM, check_invariants=True)).run()
+    assert res.steps == SIM["n_steps"]
+    # launched == trained + dropped + buffered + still generating
+    assert res.rollouts_launched == (res.rollouts_trained + res.dropped +
+                                     res.rollouts_in_buffer +
+                                     res.rollouts_generating)
+    assert res.rollouts_trained == SIM["n_steps"] * SIM["rollouts_per_step"]
+
+
+def test_conservation_ledger_across_swap(plan, cluster):
+    res = _elastic(plan, cluster,
+                   dict(failures=_fast_replica_failures(plan)))
+    assert res.steps == SIM["n_steps"]
+    assert len(res.swaps) >= 1           # the replan actually happened
+    assert res.rollouts_launched == (res.rollouts_trained + res.dropped +
+                                     res.rollouts_in_buffer +
+                                     res.rollouts_generating)
+
+
+# --------------------------------------------------------- η across swaps
+def test_staleness_bound_holds_across_plan_swap(plan, cluster):
+    """Acceptance: the η bound holds on both sides of ≥1 mid-run swap."""
+    eta = SIM["eta"]
+    res = _elastic(plan, cluster,
+                   dict(failures=_fast_replica_failures(plan)))
+    assert len(res.swaps) >= 1
+    assert res.max_staleness <= eta
+    assert res.mean_staleness <= eta
+    for s in res.swaps:
+        assert s.max_staleness_before <= eta
+        assert s.max_staleness_after <= eta
+        assert s.mean_staleness_before <= eta
+        assert s.mean_staleness_after <= eta
+        assert s.t_commit >= s.t_request
+        assert s.n_replicas_after > 0
+
+
+def test_sustained_straggler_triggers_replan(plan, cluster):
+    idx = len(AsyncRLSimulator(plan, P).replicas) - 1
+    res = _elastic(plan, cluster, dict(
+        stragglers=[StragglerInjection(idx, factor=0.1, t_start=5.0)]))
+    assert any(tr.reason == "straggler" for tr in res.replan_triggers)
+    assert len(res.swaps) >= 1
+    assert res.max_staleness <= SIM["eta"]
+
+
+# ----------------------------------------------------- replanning pays off
+def test_elastic_beats_static_under_failures(plan, cluster):
+    churn = dict(failures=_fast_replica_failures(plan))
+    static = AsyncRLSimulator(plan, P, SimConfig(
+        **SIM, **churn, check_invariants=True)).run()
+    el = _elastic(plan, cluster, churn)
+    assert el.throughput_tps >= static.throughput_tps
+    # throughput attribution covers the whole run, split at the swap
+    assert [e.epoch for e in el.plan_epochs] == \
+        sorted(e.epoch for e in el.plan_epochs)
+    assert sum(e.steps for e in el.plan_epochs) == el.steps
+
+
+# ------------------------------------------------ epoch accounting plumbing
+def test_replica_device_mapping_disjoint(plan, cluster):
+    rp = ElasticReplanner(SPEC, cluster, P, SCHED_CFG)
+    rmap = rp.replica_devices(plan)
+    assert len(rmap) == len(AsyncRLSimulator(plan, P).replicas)
+    seen = set()
+    infer = set(plan.infer_devices)
+    for devs in rmap:
+        assert devs, "replica mapped to no devices"
+        for d in devs:
+            assert d.index in infer
+            assert d.index not in seen    # no device serves two replicas
+            seen.add(d.index)
+
+
+def test_controller_swap_preserves_version_stream():
+    ctl = StalenessController(StalenessConfig(eta=2, rollouts_per_step=4))
+    ctl.launch(4)
+    v = ctl.version
+    epoch = ctl.record_plan_swap()
+    assert epoch == 1
+    assert ctl.version == v               # swap never touches versions
+    assert ctl.in_flight == 4             # in-flight work survives the swap
+    ctl.consume([v] * 4)                  # still admissible afterwards
+    assert ctl.swap_history() == [(1, v)]
+
+
+def test_buffer_swap_keeps_rollouts_admissible():
+    buf = RolloutBuffer(StalenessConfig(eta=1, rollouts_per_step=2))
+    from repro.rl.buffer import Rollout
+    buf.launch(2)
+    for g in range(2):
+        buf.push(Rollout([1], [2], None, version=0, group_id=g))
+    assert buf.on_plan_swap() == 1
+    assert buf.plan_epoch == 1
+    buf.launch(1)                         # post-swap rollout gets the new epoch
+    buf.push(Rollout([1], [2], None, version=0, group_id=2))
+    batch = buf.pop_batch(2)              # η admission unaffected by swap
+    assert len(batch) == 2
+    assert [r.plan_epoch for r in batch] == [0, 0]   # stamped pre-swap
+    assert buf.pop_batch(1)[0].plan_epoch == 1       # stamped post-swap
+    assert buf.stats()["plan_swaps"] == 1

@@ -1,10 +1,14 @@
 """GRPO objective tests: loss math vs naive impl, advantage properties."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                      # minimal envs: seeded-sampling shim
+    from _prop import given, settings, st
 
 from repro.rl.grpo import (grpo_loss, group_advantages,
                            token_logp_from_logits)

@@ -1,8 +1,12 @@
 """Simulator, checkpointing, and packing tests."""
 import numpy as np
 import pytest
-import hypothesis.strategies as st
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                      # minimal envs: seeded-sampling shim
+    from _prop import given, settings, st
 
 from repro.core.cluster import paper_heterogeneous
 from repro.core.cost_model import LengthDistribution

@@ -1,6 +1,9 @@
 """Property-based tests of the bounded-staleness invariants (hypothesis)."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                      # minimal envs: seeded-sampling shim
+    from _prop import given, settings, st
 
 from repro.core.staleness import StalenessConfig, StalenessController
 
