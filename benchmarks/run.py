@@ -21,6 +21,7 @@ MODULES = [
     "table4_cost_parity",
     "fig5_cost_efficiency",
     "fig6_elastic_recovery",
+    "fig7_multi_job",
     "table5_scheduler_speed",
     "roofline_report",
 ]

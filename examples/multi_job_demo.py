@@ -1,0 +1,72 @@
+"""Multi-job demo: two RL jobs sharing one mixed v5e/v5p TPU pool.
+
+A 1.5B job (loose η=4 budget) and a 7B job (tight η=2 budget, 4× priority
+weight) are arbitrated over 4 v5p + 24 v5e machines by the water-filling
+pool scheduler (core/pool.py).  At t=15s the 7B job loses a whole machine;
+the MultiJobSimulator drains the pool, re-arbitrates over the survivors,
+and commits a plan swap that may hand ICI domains *between* the jobs —
+each job's η staleness bound holds across the handoff.
+
+    PYTHONPATH=src python examples/multi_job_demo.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.cluster import tpu_heterogeneous
+from repro.core.cost_model import LengthDistribution
+from repro.core.model_spec import PAPER_MODELS
+from repro.core.pool import JobSpec, schedule_pool
+from repro.core.scheduler import SchedulerConfig
+from repro.core.staleness import StalenessConfig
+from repro.sim import (ElasticConfig, JobFailure, MultiJobSimulator,
+                       MultiSimConfig, PoolReplanner, replica_device_map)
+
+P = LengthDistribution(mean_len=1024, prompt_len=128)
+
+
+def cfg(eta):
+    return SchedulerConfig(tokens_per_step=2 ** 18, stable_iters=3,
+                           max_iters=12, adapt_delta=False,
+                           staleness=StalenessConfig(eta=eta))
+
+
+jobs = [
+    JobSpec("math-1.5b", PAPER_MODELS["1.5B"], P, cfg(eta=4), weight=1.0),
+    JobSpec("code-7b", PAPER_MODELS["7B"], P, cfg(eta=2), weight=4.0),
+]
+cluster = tpu_heterogeneous(16, 96)          # 4 v5p + 24 v5e machines
+
+pool = schedule_pool(jobs, cluster)
+pool.assert_partition(cluster)
+print("pool arbitration (water-filling on weighted per-job throughput):")
+print(pool.describe())
+
+# kill every code-7b replica on one of its machines at t=15s
+plan = pool.plans["code-7b"]
+rmap = replica_device_map(cluster.subset(plan.infer_devices), plan)
+node = rmap[0][0].node
+fails = [JobFailure("code-7b", i, t_fail=15.0)
+         for i, devs in enumerate(rmap) if devs and devs[0].node == node]
+print(f"\ninjecting {len(fails)} permanent failures at t=15s "
+      f"(machine {node}, owned by code-7b)")
+
+replanner = PoolReplanner(cluster,
+                          elastic=ElasticConfig(replan_latency_s=5.0))
+res = MultiJobSimulator(pool, MultiSimConfig(
+    n_steps=10, failures=fails, replanner=replanner,
+    check_invariants=True)).run()
+
+print("\nrun summary:")
+print(res.summary())
+for h in res.handoffs:
+    print(f"\ncross-job handoff at t={h.t:.1f}s: {h.n_devices} devices "
+          f"{h.from_job} → {h.to_job}  (indices {h.device_indices})")
+for job in jobs:
+    r = res.per_job[job.name]
+    print(f"\n{job.name}: tput={r.throughput_tps:.0f} tok/s  "
+          f"max_staleness={r.max_staleness} ≤ η={job.eta}  "
+          f"swaps={len(r.swaps)}")
+    assert r.max_staleness <= job.eta
+print("\nη bounds held for every job across the handoff ✓")

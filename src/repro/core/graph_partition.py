@@ -49,6 +49,25 @@ def _group_nodes(cluster: Cluster) -> Dict[str, List[List[Device]]]:
     return out
 
 
+def ici_domains(cluster: Cluster) -> List[List[Device]]:
+    """Whole ICI domains (machines) in deterministic (type, node) order.
+
+    This is the unit of movement everywhere in the scheduling stack: the γ
+    repartition moves domains between D_T and D_I *within* a job, and the
+    pool arbitration (core/pool.py) moves domains between jobs' slices.
+    """
+    groups = _group_nodes(cluster)
+    return [n for t in sorted(groups) for n in groups[t]]
+
+
+def subcluster(cluster: Cluster, devices: Sequence[Device]) -> Cluster:
+    """A job's slice as a Cluster: node ids and link model preserved, so the
+    per-slice partition/search phases see the same topology the devices
+    actually have."""
+    return Cluster(devices=sorted(devices, key=lambda d: d.index),
+                   cross_type_bw=cluster.cross_type_bw)
+
+
 def eq3_objective(cluster: Cluster, d_train: Sequence[Device],
                   d_infer: Sequence[Device]) -> float:
     total_link = cluster.aggregate_link_bw(cluster.devices)

@@ -42,18 +42,45 @@ except Exception:                                        # pragma: no cover
 
 
 # ------------------------------------------------------------- Ψ enumeration
+def slice_node_widths(d_infer: Sequence[Device]) -> Dict[str, int]:
+    """Per-type max devices co-located on one machine *within a slice*.
+
+    Multi-job slices and post-failure survivor sets can own a machine only
+    partially; TP is confined to one machine, so Ψ must be enumerated
+    against what the slice actually holds per node, not the profile's
+    nominal devices_per_node.
+    """
+    per_node: Dict[Tuple[str, int], int] = {}
+    for d in d_infer:
+        key = (d.type_name, d.node)
+        per_node[key] = per_node.get(key, 0) + 1
+    widths: Dict[str, int] = {}
+    for (tname, _), c in per_node.items():
+        widths[tname] = max(widths.get(tname, 0), c)
+    return widths
+
+
 def enumerate_replica_configs(
     spec: ModelSpec,
     type_counts: Dict[str, int],
     P: LengthDistribution,
     *,
     max_pp: int = 2,
+    node_widths: Optional[Dict[str, int]] = None,
 ) -> List[Tuple[ReplicaConfig, ReplicaCost]]:
-    """Build Ψ: feasible replica configs with their profiled throughput h_ψ."""
+    """Build Ψ: feasible replica configs with their profiled throughput h_ψ.
+
+    ``node_widths`` restricts TP degrees to what a single machine of the
+    slice can host (see ``slice_node_widths``); without it the nominal
+    ``devices_per_node`` is used (full-machine slices).
+    """
     out: List[Tuple[ReplicaConfig, ReplicaCost]] = []
     for tname, count in sorted(type_counts.items()):
         prof = PROFILES[tname]
-        tp_opts = [t for t in (1, 2, 4, 8) if t <= prof.devices_per_node]
+        width = prof.devices_per_node
+        if node_widths is not None:
+            width = min(width, node_widths.get(tname, width))
+        tp_opts = [t for t in (1, 2, 4, 8) if t <= width]
         for tp in tp_opts:
             for pp in range(1, max_pp + 1):
                 cfg = ReplicaConfig(tname, (tp,) * pp)
@@ -132,7 +159,9 @@ def solve_rollout_milp(
     type_counts: Dict[str, int] = {}
     for d in d_infer:
         type_counts[d.type_name] = type_counts.get(d.type_name, 0) + 1
-    configs = enumerate_replica_configs(spec, type_counts, P, max_pp=max_pp)
+    configs = enumerate_replica_configs(
+        spec, type_counts, P, max_pp=max_pp,
+        node_widths=slice_node_widths(d_infer))
     counts, solver, optimal = _max_throughput_counts(configs, type_counts)
 
     assignments: List[RolloutAssignment] = []
@@ -167,7 +196,9 @@ def solve_rollout_milp_bisection(
     type_counts: Dict[str, int] = {}
     for d in d_infer:
         type_counts[d.type_name] = type_counts.get(d.type_name, 0) + 1
-    configs = enumerate_replica_configs(spec, type_counts, P, max_pp=max_pp)
+    configs = enumerate_replica_configs(
+        spec, type_counts, P, max_pp=max_pp,
+        node_widths=slice_node_widths(d_infer))
     if not configs:
         empty = RolloutPlan(assignments=(), makespan=math.inf,
                             total_rollouts=total_rollouts)

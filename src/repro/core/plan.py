@@ -73,6 +73,10 @@ class ScheduledPlan:
     plan_epoch: int = 0
     parent_epoch: Optional[int] = None  # epoch this plan was derived from
     provenance: str = "initial"         # "initial" | "replan:<reason>"
+    # --- multi-job: which job of the pool this plan serves.  Single-job
+    # schedules keep the default; the pool arbitration (core/pool.py) stamps
+    # the JobSpec name so ownership/handoff provenance is self-describing.
+    job: str = "job0"
 
     @property
     def objective(self) -> float:
@@ -103,7 +107,7 @@ class ScheduledPlan:
 
     def describe(self) -> str:
         return (
-            f"[epoch {self.plan_epoch}: {self.provenance}]  "
+            f"[{self.job} epoch {self.plan_epoch}: {self.provenance}]  "
             f"D_T={len(self.train_devices)}dev  D_I={len(self.infer_devices)}dev  "
             f"γ={self.gamma:.3f}\n  σ: {self.train_plan.describe()}\n"
             f"  τ: {self.rollout_plan.describe()}\n"

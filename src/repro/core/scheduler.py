@@ -48,6 +48,12 @@ class SchedulerConfig:
             self.staleness = StalenessConfig()
 
 
+class InfeasibleScheduleError(RuntimeError):
+    """Algorithm 1 found no feasible plan for the given slice — the one
+    failure the pool arbitration is allowed to treat as 'slice infeasible'
+    (any other error is a bug and must propagate)."""
+
+
 @dataclass
 class _PhaseResult:
     plan: ScheduledPlan
@@ -157,13 +163,20 @@ def _gamma_bisection(
     return best, iters
 
 
-def schedule(
+def schedule_slice(
     spec: ModelSpec,
     cluster: Cluster,
     P: Optional[LengthDistribution] = None,
     cfg: Optional[SchedulerConfig] = None,
+    *,
+    job: str = "job0",
 ) -> ScheduledPlan:
-    """Run Algorithm 1 and return the best ScheduledPlan found."""
+    """Run Algorithm 1 on one device slice and return the best plan found.
+
+    This is the per-job engine: ``cluster`` is the slice the pool
+    arbitration (core/pool.py) granted to ``job`` — for single-job use it
+    is simply the whole pool (see ``schedule``).
+    """
     P = P or LengthDistribution()
     cfg = cfg or SchedulerConfig()
     t0 = time.perf_counter()
@@ -195,10 +208,31 @@ def schedule(
         plan, _ = solve_for_delta(cfg.staleness.delta0())
 
     if plan is None:
-        raise RuntimeError("scheduler found no feasible plan for cluster "
-                           f"{cluster.type_counts} / model {spec.name}")
+        raise InfeasibleScheduleError(
+            "scheduler found no feasible plan for cluster "
+            f"{cluster.type_counts} / model {spec.name}")
+    plan.job = job
     plan.wall_time_s = time.perf_counter() - t0
     return plan
+
+
+def schedule(
+    spec: ModelSpec,
+    cluster: Cluster,
+    P: Optional[LengthDistribution] = None,
+    cfg: Optional[SchedulerConfig] = None,
+) -> ScheduledPlan:
+    """Single-job entry point: schedule one RL job over the whole pool.
+
+    Thin wrapper over a one-job ``core.pool.schedule_pool`` — a pool with a
+    single job grants it every ICI domain and degenerates to Algorithm 1 on
+    the full cluster, so existing callers see identical plans.
+    """
+    from .pool import JobSpec, schedule_pool   # local import: pool → scheduler
+    job = JobSpec(name="job0", model=spec,
+                  P=P or LengthDistribution(),
+                  sched_cfg=cfg or SchedulerConfig())
+    return schedule_pool([job], cluster).plans["job0"]
 
 
 # ------------------------------------------------------ elastic replanning
@@ -247,10 +281,11 @@ def reschedule(
         full_cfg = replace(
             cfg, adapt_delta=False,
             staleness=replace(cfg.staleness, delta_init=delta))
-        best = schedule(spec, cluster, P, full_cfg)
+        best = schedule_slice(spec, cluster, P, full_cfg, job=prev_plan.job)
     else:
         best.iterations = iters
 
+    best.job = prev_plan.job
     best.plan_epoch = prev_plan.plan_epoch + 1
     best.parent_epoch = prev_plan.plan_epoch
     best.provenance = f"replan:{reason}"

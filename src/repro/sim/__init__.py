@@ -1,11 +1,17 @@
-from .events import (FailureInjection, PlanSwapRecord, ReplanTrigger,
-                     StragglerInjection)
-from .replan import ElasticConfig, ElasticReplanner
-from .simulator import AsyncRLSimulator, PlanEpochStat, SimConfig, SimResult
+from .events import (FailureInjection, HandoffRecord, JobFailure,
+                     PlanSwapRecord, ReplanTrigger, StragglerInjection)
+from .replan import (ElasticConfig, ElasticReplanner, PoolReplanner,
+                     replica_device_map)
+from .simulator import (AsyncRLSimulator, DeviceLedger, MultiJobSimResult,
+                        MultiJobSimulator, MultiSimConfig, PlanEpochStat,
+                        SimConfig, SimResult)
 
 __all__ = [
     "AsyncRLSimulator", "SimConfig", "SimResult", "PlanEpochStat",
     "ElasticConfig", "ElasticReplanner",
     "FailureInjection", "StragglerInjection",
     "ReplanTrigger", "PlanSwapRecord",
+    "MultiJobSimulator", "MultiSimConfig", "MultiJobSimResult",
+    "PoolReplanner", "DeviceLedger", "JobFailure", "HandoffRecord",
+    "replica_device_map",
 ]

@@ -64,6 +64,26 @@ class FailureInjection:
 
 
 @dataclass
+class JobFailure:
+    """Multi-job fault injection: replica ``replica_idx`` of ``job``'s live
+    plan dies permanently at ``t_fail`` (MultiJobSimulator)."""
+    job: str
+    replica_idx: int
+    t_fail: float
+
+
+@dataclass
+class HandoffRecord:
+    """One cross-job device transfer committed by a pool replan: the device
+    ledger's audit trail that no device ever serves two jobs."""
+    t: float
+    from_job: str
+    to_job: str
+    n_devices: int
+    device_indices: List[int]
+
+
+@dataclass
 class ReplanTrigger:
     """Why the simulator asked the scheduler for a new plan."""
     time: float

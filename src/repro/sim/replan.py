@@ -29,7 +29,31 @@ from repro.core.cluster import Cluster, Device
 from repro.core.cost_model import LengthDistribution
 from repro.core.model_spec import ModelSpec
 from repro.core.plan import ScheduledPlan
+from repro.core.pool import PoolConfig, PoolPlan, replan_pool
 from repro.core.scheduler import SchedulerConfig, reschedule
+
+
+def replica_device_map(infer_devices: Sequence[Device],
+                       plan: ScheduledPlan) -> List[List[Device]]:
+    """Devices occupied by each flattened replica of ``plan``.
+
+    Mirrors the simulator's flattening (assignments in order, ``count``
+    replicas each); replica k of a ψ-assignment takes the next
+    ``n_devices`` unclaimed D_I devices of ψ's profile type.  Shared by the
+    single-job ``ElasticReplanner`` and the multi-job ``PoolReplanner``.
+    """
+    pools: Dict[str, List[Device]] = {}
+    for d in infer_devices:
+        pools.setdefault(d.type_name, []).append(d)
+    out: List[List[Device]] = []
+    for a in plan.rollout_plan.assignments:
+        pool = pools.get(a.config.profile_name, [])
+        for _ in range(a.count):
+            take, pool = pool[: a.config.n_devices], \
+                pool[a.config.n_devices:]
+            out.append(take)
+        pools[a.config.profile_name] = pool
+    return out
 
 
 @dataclass
@@ -59,24 +83,9 @@ class ElasticReplanner:
 
     # ------------------------------------------------------------- mapping
     def replica_devices(self, plan: ScheduledPlan) -> List[List[Device]]:
-        """Devices occupied by each flattened replica of ``plan``.
-
-        Mirrors the simulator's flattening (assignments in order, ``count``
-        replicas each); replica k of a ψ-assignment takes the next
-        ``n_devices`` unclaimed D_I devices of ψ's profile type.
-        """
-        pools: Dict[str, List[Device]] = {}
-        for d in self.cluster.subset(plan.infer_devices):
-            pools.setdefault(d.type_name, []).append(d)
-        out: List[List[Device]] = []
-        for a in plan.rollout_plan.assignments:
-            pool = pools.get(a.config.profile_name, [])
-            for _ in range(a.count):
-                take, pool = pool[: a.config.n_devices], \
-                    pool[a.config.n_devices:]
-                out.append(take)
-            pools[a.config.profile_name] = pool
-        return out
+        """Devices occupied by each flattened replica of ``plan``."""
+        return replica_device_map(self.cluster.subset(plan.infer_devices),
+                                  plan)
 
     # ------------------------------------------------------------ survivors
     def exclude_replicas(self, plan: ScheduledPlan,
@@ -109,4 +118,60 @@ class ElasticReplanner:
             return reschedule(self.spec, cluster, prev_plan,
                               self.P, self.sched_cfg, reason=reason)
         except RuntimeError:
+            return None
+
+
+class PoolReplanner:
+    """Multi-job analogue of ``ElasticReplanner``: when a failure shrinks a
+    job's slice, re-arbitrate the *whole pool* over the survivors
+    (``core.pool.replan_pool``) — the new ``PoolPlan`` may hand surviving
+    ICI domains between jobs, which the simulator commits through the same
+    drain/commit path as a single-job swap.
+    """
+
+    def __init__(self, cluster: Cluster,
+                 pool_cfg: Optional[PoolConfig] = None,
+                 elastic: Optional["ElasticConfig"] = None):
+        self.cluster = cluster
+        self.pool_cfg = pool_cfg or PoolConfig()
+        self.elastic = elastic or ElasticConfig()
+        self.excluded: Set[int] = set()    # device indices lost for good
+
+    def replica_devices(self, plan: ScheduledPlan) -> List[List[Device]]:
+        return replica_device_map(self.cluster.subset(plan.infer_devices),
+                                  plan)
+
+    def exclude_replicas(self, plan: ScheduledPlan,
+                         replica_idxs: Sequence[int]) -> List[int]:
+        """Permanently remove the devices behind these replicas; returns the
+        newly-dead device indices (for the simulator's ledger)."""
+        rmap = self.replica_devices(plan)
+        dead: List[int] = []
+        for i in replica_idxs:
+            if 0 <= i < len(rmap):
+                for d in rmap[i]:
+                    if d.index not in self.excluded:
+                        self.excluded.add(d.index)
+                        dead.append(d.index)
+        return dead
+
+    def surviving_cluster(self) -> Cluster:
+        survivors = [d for d in self.cluster.devices
+                     if d.index not in self.excluded]
+        return Cluster(devices=survivors,
+                       cross_type_bw=self.cluster.cross_type_bw)
+
+    def replan(self, prev: PoolPlan, reason: str = "failure",
+               frozen: Sequence[str] = ()) -> Optional[PoolPlan]:
+        """Re-arbitrate over the survivors; None when no feasible pool plan
+        exists (every job keeps its old plan minus the dead replicas).
+        ``frozen`` jobs (finished in the runtime) keep their slices and
+        never receive handed-off devices."""
+        cluster = self.surviving_cluster()
+        if len(cluster) < 2:
+            return None
+        try:
+            return replan_pool(prev, cluster, self.pool_cfg, reason=reason,
+                               frozen=frozen)
+        except (RuntimeError, ValueError):
             return None

@@ -50,6 +50,11 @@ possibly reassigned — replica.
 
 This is how the paper's throughput tables are reproduced without H800/H20
 hardware, and how fault-tolerance is validated at scale.
+
+``MultiJobSimulator`` (below) generalizes the machinery to N jobs sharing
+one pool: N plan state machines over a shared ``DeviceLedger``, with
+pool-level drain/commit swaps that can hand whole ICI domains between
+jobs (core/pool.py arbitration) while preserving every job's η bound.
 """
 from __future__ import annotations
 
@@ -60,9 +65,10 @@ import numpy as np
 
 from repro.core.cost_model import LengthDistribution
 from repro.core.plan import ScheduledPlan
-from .events import (EventQueue, FailureInjection, PlanSwapRecord,
-                     ReplanTrigger, StragglerInjection)
-from .replan import ElasticReplanner
+from repro.core.pool import JobSpec, PoolPlan
+from .events import (EventQueue, FailureInjection, HandoffRecord, JobFailure,
+                     PlanSwapRecord, ReplanTrigger, StragglerInjection)
+from .replan import ElasticReplanner, PoolReplanner, replica_device_map
 
 
 @dataclass
@@ -266,9 +272,14 @@ class AsyncRLSimulator:
             train_busy += t_train
             trainer_busy_until = now + dur
             q.push(now + dur, "train_done", None)
-            # resume capacity-paused replicas
-            while paused:
-                launch(paused.pop(), now)
+            # resume capacity-paused replicas; drain a snapshot so a replica
+            # that immediately re-pauses (capacity still full) is not popped
+            # again in the same pass (that would spin forever whenever
+            # n_rep exceeds the (η+1)·B capacity)
+            resume = paused[:]
+            paused.clear()
+            for i in resume:
+                launch(i, now)
             check(now)
 
         def trigger_replan(now: float, reason: str, replica_idx: int) -> None:
@@ -465,3 +476,427 @@ class AsyncRLSimulator:
 
 def _lognorm(P: LengthDistribution):
     return P.lognorm_params()
+
+
+# ===================================================================== multi
+class DeviceLedger:
+    """Shared device-ownership ledger for N concurrent jobs.
+
+    Every device is owned by exactly one job (or excluded as dead); a pool
+    replan commits ownership changes atomically through ``apply``, which
+    records cross-job ``HandoffRecord``s and rejects resurrections of
+    excluded devices.  ``conserved`` is the global invariant the tests
+    assert after every swap: owned ⊎ excluded == the initial device set.
+    """
+
+    def __init__(self, owner: Dict[int, str]):
+        self.owner: Dict[int, str] = dict(owner)
+        self.excluded: Set[int] = set()
+        self.initial: Set[int] = set(owner)
+        self.handoffs: List[HandoffRecord] = []
+
+    def exclude(self, indices) -> None:
+        for i in indices:
+            self.owner.pop(i, None)
+            self.excluded.add(i)
+
+    def apply(self, new_owner: Dict[int, str], t: float) -> List[HandoffRecord]:
+        moves: Dict[tuple, List[int]] = {}
+        for i, nj in new_owner.items():
+            assert i not in self.excluded, f"dead device {i} resurrected"
+            oj = self.owner.get(i)
+            if oj is not None and oj != nj:
+                moves.setdefault((oj, nj), []).append(i)
+        recs = [HandoffRecord(t, a, b, len(v), sorted(v))
+                for (a, b), v in sorted(moves.items())]
+        self.handoffs.extend(recs)
+        self.owner = dict(new_owner)
+        return recs
+
+    @property
+    def conserved(self) -> bool:
+        return (set(self.owner) | self.excluded == self.initial
+                and not set(self.owner) & self.excluded)
+
+
+@dataclass
+class MultiSimConfig:
+    """Shared knobs of a multi-job run (per-job η comes from each JobSpec)."""
+    n_steps: int = 20                      # training steps per job
+    rollouts_per_step: int = 32            # B, per job
+    reward_cost_s: float = 0.1
+    seed: int = 0
+    failures: Sequence[JobFailure] = field(default_factory=list)
+    replanner: Optional[PoolReplanner] = None
+    check_invariants: bool = False
+
+
+@dataclass
+class MultiJobSimResult:
+    per_job: Dict[str, SimResult]
+    handoffs: List[HandoffRecord]          # cross-job device transfers
+    pool_swaps: int                        # committed pool replans
+    wall_time_s: float
+    owner_final: Dict[int, str]
+    excluded: Set[int]
+
+    def weighted_throughput(self, weights: Dict[str, float]) -> float:
+        return sum(weights.get(n, 1.0) * r.throughput_tps
+                   for n, r in self.per_job.items())
+
+    def summary(self) -> str:
+        rows = [f"{n}: {r.summary()}" for n, r in sorted(self.per_job.items())]
+        rows.append(f"pool: swaps={self.pool_swaps} "
+                    f"handoffs={len(self.handoffs)} "
+                    f"excluded={len(self.excluded)}dev")
+        return "\n".join(rows)
+
+
+class _JobRun:
+    """One job's plan state machine inside the shared event loop — the same
+    semantics as ``AsyncRLSimulator`` (capacity control, η admission,
+    drain/commit swaps) scoped to the job's slice and version stream."""
+
+    def __init__(self, job: JobSpec, plan: ScheduledPlan,
+                 cfg: MultiSimConfig):
+        self.job = job
+        self.name = job.name
+        self.plan = plan
+        self.P = job.P
+        self.eta = job.eta
+        self.B = cfg.rollouts_per_step
+        self.n_steps = cfg.n_steps
+        self.capacity = (self.eta + 1) * self.B
+        self.rate: List[float] = _flatten_replicas(plan)
+        self.n_rep = len(self.rate)
+        self.alive = [True] * self.n_rep
+        self.epoch = plan.plan_epoch
+        self.t_train = plan.cost_train / max(plan.delta, 1)
+        self.t_sync = plan.cost_update / max(plan.delta, 1)
+        self.version = 0
+        self.buffer: List[tuple] = []          # (version, length)
+        self.in_flight = 0
+        self.generating = 0
+        self.paused: List[int] = []
+        self.idle: Set[int] = set()            # drained, awaiting commit
+        self.pending_dead: Set[int] = set()
+        self.steps = 0
+        self.tokens = 0.0
+        self.stale_hist: List[int] = []
+        self.stalls_capacity = 0
+        self.stalls_data = 0
+        self.dropped = 0
+        self.launched = 0
+        self.consumed = 0
+        self.gen_busy_sum = 0.0
+        self.train_busy = 0.0
+        self.rep_seconds = 0.0
+        self.trainer_busy_until = 0.0
+        self.done_t: Optional[float] = None    # when step n_steps completed
+        self.swaps: List[PlanSwapRecord] = []
+        self.swap_hist_idx: List[int] = []
+        self.epoch_stats: List[PlanEpochStat] = []
+        self.epoch_open = dict(epoch=self.epoch, provenance=plan.provenance,
+                               t_start=0.0, steps0=0, tokens0=0.0)
+
+    # ------------------------------------------------------------ bookkeeping
+    def check(self, now: float) -> None:
+        assert self.in_flight == self.generating + len(self.buffer), \
+            (self.name, now, self.in_flight, self.generating, len(self.buffer))
+        assert self.launched == (self.consumed + self.dropped
+                                 + self.in_flight), \
+            (self.name, now, self.launched, self.consumed, self.dropped,
+             self.in_flight)
+        assert 0 <= self.in_flight <= self.capacity
+
+    def close_epoch(self, now: float) -> None:
+        self.epoch_stats.append(PlanEpochStat(
+            epoch=self.epoch_open["epoch"],
+            provenance=self.epoch_open["provenance"],
+            t_start=self.epoch_open["t_start"], t_end=now,
+            steps=self.steps - self.epoch_open["steps0"],
+            tokens=self.tokens - self.epoch_open["tokens0"]))
+
+    def commit(self, new_plan: ScheduledPlan, now: float, reason: str,
+               t_request: float) -> None:
+        """Hot-swap this job onto ``new_plan`` (its slice may have grown or
+        shrunk via a cross-job handoff).  The version stream and buffer
+        carry over untouched — that is what keeps η_j intact."""
+        n_before = sum(self.alive)
+        self.close_epoch(now)
+        self.rep_seconds += self.n_rep * (now - self.epoch_open["t_start"])
+        self.plan = new_plan
+        self.epoch = new_plan.plan_epoch
+        self.epoch_open.update(epoch=self.epoch,
+                               provenance=new_plan.provenance,
+                               t_start=now, steps0=self.steps,
+                               tokens0=self.tokens)
+        self.rate = _flatten_replicas(new_plan)
+        self.n_rep = len(self.rate)
+        self.alive = [True] * self.n_rep
+        self.t_train = new_plan.cost_train / max(new_plan.delta, 1)
+        self.t_sync = new_plan.cost_update / max(new_plan.delta, 1)
+        h = self.stale_hist
+        self.swaps.append(PlanSwapRecord(
+            epoch=self.epoch, t_request=t_request, t_commit=now,
+            reason=reason, n_replicas_before=n_before,
+            n_replicas_after=self.n_rep,
+            mean_staleness_before=float(np.mean(h)) if h else 0.0,
+            max_staleness_before=int(np.max(h)) if h else 0))
+        self.swap_hist_idx.append(len(h))
+        self.paused.clear()
+        self.idle.clear()
+
+    def result(self, wall: float) -> SimResult:
+        job_wall = self.done_t if self.done_t is not None else wall
+        job_wall = max(job_wall, 1e-9)
+        # utilization is measured over the job's own lifetime (a finished
+        # job's fleet idles until the pool's last event — that idle time is
+        # not the job's to waste), matching the single-job simulator
+        self.rep_seconds += self.n_rep * max(
+            job_wall - self.epoch_open["t_start"], 0.0)
+        self.close_epoch(job_wall)
+        for rec, cut in zip(self.swaps, self.swap_hist_idx):
+            h = self.stale_hist[cut:]
+            rec.mean_staleness_after = float(np.mean(h)) if h else 0.0
+            rec.max_staleness_after = int(np.max(h)) if h else 0
+        h = self.stale_hist
+        return SimResult(
+            wall_time_s=job_wall,
+            steps=self.steps,
+            tokens_consumed=self.tokens,
+            throughput_tps=self.tokens / job_wall,
+            train_busy_frac=self.train_busy / job_wall,
+            gen_busy_frac=(self.gen_busy_sum / self.rep_seconds
+                           if self.rep_seconds > 0 else 0.0),
+            mean_staleness=float(np.mean(h)) if h else 0.0,
+            max_staleness=int(np.max(h)) if h else 0,
+            stalls_capacity=self.stalls_capacity,
+            stalls_data=self.stalls_data,
+            infer_latency_s=(job_wall / max(self.steps, 1)
+                             - self.t_train - self.t_sync),
+            train_latency_s=self.t_train,
+            sync_latency_s=self.t_sync,
+            dropped=self.dropped,
+            rollouts_launched=self.launched,
+            rollouts_trained=self.consumed,
+            rollouts_in_buffer=len(self.buffer),
+            rollouts_generating=self.generating,
+            swaps=self.swaps,
+            plan_epochs=self.epoch_stats,
+        )
+
+
+class MultiJobSimulator:
+    """N concurrent plan state machines over one shared device ledger.
+
+    Executes a ``PoolPlan``: each job runs the AReaL async-RL semantics on
+    its own slice, with its own rollout buffer, weight-version stream, and
+    η_j staleness budget.  A permanent ``JobFailure`` in one job's slice
+    triggers a *pool-level* replan (``PoolReplanner`` →
+    ``core.pool.replan_pool``): the whole pool drains (a stop-the-world
+    arbitration window — no job launches new rollouts while ownership is
+    in flux), the new ``PoolPlan`` may hand surviving ICI domains between
+    jobs, and every job whose slice changed commits its new plan through
+    the same drain/commit path as a single-job swap.  In-flight rollouts
+    finish into their job's buffer; version streams never cross jobs, so
+    each η_j bound is preserved independently (asserted in
+    tests/test_multi_job.py).
+
+    Relative to ``AsyncRLSimulator`` the multi-job machine supports
+    permanent failures only (no transient downtime or stragglers yet —
+    ROADMAP open item).
+    """
+
+    def __init__(self, pool: PoolPlan, cfg: MultiSimConfig = None):
+        self.pool = pool
+        self.cfg = cfg or MultiSimConfig()
+        self.jobs: Dict[str, _JobRun] = {
+            j.name: _JobRun(j, pool.plans[j.name], self.cfg)
+            for j in pool.jobs}
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> MultiJobSimResult:
+        cfg = self.cfg
+        rng = np.random.default_rng(cfg.seed)
+        q = EventQueue()
+        replanner = cfg.replanner
+        elastic = replanner.elastic if replanner is not None else None
+        ledger = DeviceLedger(self.pool.owner)
+        cur_pool = self.pool
+        jobs = self.jobs
+
+        state = "RUNNING"                      # pool-level: RUNNING | DRAINING
+        drain_scheduled = False
+        drain_reason = ""
+        drain_t0 = 0.0
+        last_commit = -np.inf
+        pool_swaps = 0
+        t = 0.0
+
+        def launch(jr: _JobRun, i: int, now: float) -> None:
+            if i >= jr.n_rep or not jr.alive[i] or jr.steps >= jr.n_steps:
+                return
+            if state == "DRAINING":            # ownership in flux: hold fire
+                jr.idle.add(i)
+                return
+            if jr.in_flight >= jr.capacity:
+                jr.paused.append(i)
+                jr.stalls_capacity += 1
+                return
+            jr.in_flight += 1
+            jr.launched += 1
+            jr.generating += 1
+            length = float(np.clip(rng.lognormal(*_lognorm(jr.P)),
+                                   16, jr.P.max_len))
+            dur = (length + jr.P.prompt_len) / max(jr.rate[i], 1e-9)
+            jr.gen_busy_sum += dur
+            q.push(now + dur + cfg.reward_cost_s, "rollout_done",
+                   (jr.name, jr.epoch, i, jr.version, length))
+
+        def maybe_train(jr: _JobRun, now: float) -> None:
+            if jr.steps >= jr.n_steps or now < jr.trainer_busy_until:
+                return
+            fresh = [r for r in jr.buffer if jr.version - r[0] <= jr.eta]
+            n_evicted = len(jr.buffer) - len(fresh)
+            if n_evicted:
+                jr.dropped += n_evicted
+                jr.in_flight -= n_evicted
+                jr.buffer[:] = fresh
+            if len(jr.buffer) < jr.B:
+                jr.stalls_data += 1
+                return
+            batch = jr.buffer[: jr.B]
+            del jr.buffer[: jr.B]
+            jr.in_flight -= jr.B
+            jr.consumed += jr.B
+            for vtag, ln in batch:
+                jr.stale_hist.append(jr.version - vtag)
+                jr.tokens += ln + jr.P.prompt_len
+            dur = jr.t_train + jr.t_sync
+            jr.train_busy += jr.t_train
+            jr.trainer_busy_until = now + dur
+            q.push(now + dur, "train_done", (jr.name,))
+            # snapshot-drain: see the single-job maybe_train note
+            resume = jr.paused[:]
+            jr.paused.clear()
+            for i in resume:
+                launch(jr, i, now)
+            if cfg.check_invariants:
+                jr.check(now)
+
+        def trigger_replan(now: float, jr: _JobRun, replica_idx: int) -> None:
+            nonlocal drain_scheduled, drain_reason, drain_t0
+            if replanner is None:
+                return
+            jr.pending_dead.add(replica_idx)
+            if state == "DRAINING" or drain_scheduled:
+                return                         # accumulate into pending swap
+            ready = max(now + elastic.replan_latency_s,
+                        last_commit + elastic.min_interval_s)
+            drain_scheduled = True
+            drain_reason = f"failure:{jr.name}"
+            drain_t0 = now
+            q.push(ready - elastic.replan_latency_s, "pool_drain", None)
+
+        def commit_pool(now: float) -> None:
+            nonlocal state, drain_scheduled, cur_pool, last_commit, pool_swaps
+            for jr in jobs.values():
+                dead = replanner.exclude_replicas(jr.plan,
+                                                  sorted(jr.pending_dead))
+                ledger.exclude(dead)
+                for i in jr.pending_dead:
+                    if i < jr.n_rep:
+                        jr.alive[i] = False
+                jr.pending_dead.clear()
+            # finished jobs are frozen: they keep their slice and plans but
+            # never receive devices a running job could still use
+            finished = tuple(sorted(n for n, jr in jobs.items()
+                                    if jr.steps >= jr.n_steps))
+            new_pool = replanner.replan(cur_pool, drain_reason,
+                                        frozen=finished)
+            state = "RUNNING"
+            drain_scheduled = False
+            last_commit = now
+            if new_pool is None:
+                # no feasible pool: every job keeps its plan minus the dead
+                for jr in jobs.values():
+                    for i in sorted(jr.idle):
+                        launch(jr, i, now)
+                    jr.idle.clear()
+                return
+            pool_swaps += 1
+            ledger.apply(new_pool.owner, now)
+            for jr in jobs.values():
+                new_plan = new_pool.plans[jr.name]
+                if new_plan is jr.plan:        # slice untouched: just resume
+                    for i in sorted(jr.idle):
+                        launch(jr, i, now)
+                    jr.idle.clear()
+                else:
+                    jr.commit(new_plan, now, drain_reason, drain_t0)
+                    for i in range(jr.n_rep):
+                        launch(jr, i, now)
+            cur_pool = new_pool
+            if cfg.check_invariants:
+                assert ledger.conserved
+
+        for f in cfg.failures:
+            q.push(f.t_fail, "fail", f)
+        for jr in jobs.values():
+            for i in range(jr.n_rep):
+                launch(jr, i, 0.0)
+
+        def all_done() -> bool:
+            return all(jr.steps >= jr.n_steps for jr in jobs.values())
+
+        while len(q) and not all_done():
+            ev = q.pop()
+            t = ev.time
+            if ev.kind == "rollout_done":
+                name, ev_epoch, i, vtag, length = ev.payload
+                jr = jobs[name]
+                jr.generating -= 1
+                if jr.version - vtag > jr.eta:
+                    jr.dropped += 1
+                    jr.in_flight -= 1
+                else:
+                    jr.buffer.append((vtag, length))
+                if ev_epoch == jr.epoch:       # old-epoch replicas stay down
+                    launch(jr, i, t)
+                maybe_train(jr, t)
+            elif ev.kind == "train_done":
+                (name,) = ev.payload
+                jr = jobs[name]
+                jr.steps += 1
+                jr.version += 1
+                if jr.steps >= jr.n_steps and jr.done_t is None:
+                    jr.done_t = t
+                maybe_train(jr, t)
+            elif ev.kind == "fail":
+                f = ev.payload
+                jr = jobs.get(f.job)
+                if jr is not None and f.replica_idx < jr.n_rep:
+                    jr.alive[f.replica_idx] = False
+                    if elastic is not None and elastic.replan_on_failure:
+                        trigger_replan(t, jr, f.replica_idx)
+            elif ev.kind == "pool_drain":
+                state = "DRAINING"
+                q.push(t + elastic.replan_latency_s, "pool_ready", None)
+            elif ev.kind == "pool_ready":
+                commit_pool(t)
+            for jr in jobs.values():
+                if t >= jr.trainer_busy_until:
+                    maybe_train(jr, t)
+                if cfg.check_invariants:
+                    jr.check(t)
+
+        wall = t if t > 0 else 1e-9
+        return MultiJobSimResult(
+            per_job={n: jr.result(wall) for n, jr in jobs.items()},
+            handoffs=ledger.handoffs,
+            pool_swaps=pool_swaps,
+            wall_time_s=wall,
+            owner_final=dict(ledger.owner),
+            excluded=set(ledger.excluded),
+        )

@@ -1,0 +1,266 @@
+"""Multi-job pool invariants: device conservation across jobs and swaps,
+per-job η bounds under cross-job handoffs, arbitration determinism, and
+the single-job wrapper contract (extends tests/test_elastic_replan.py
+patterns to N jobs)."""
+import pytest
+
+from repro.core.cluster import Cluster, paper_heterogeneous
+from repro.core.cost_model import LengthDistribution
+from repro.core.graph_partition import ici_domains, subcluster
+from repro.core.milp import enumerate_replica_configs, slice_node_widths
+from repro.core.model_spec import PAPER_MODELS
+from repro.core.pool import (JobSpec, PoolConfig, replan_pool,
+                             schedule_pool)
+from repro.core.scheduler import SchedulerConfig, schedule, schedule_slice
+from repro.core.staleness import PoolStalenessRegistry, StalenessConfig
+from repro.rl.buffer import JobBuffers
+from repro.sim import (ElasticConfig, JobFailure, MultiJobSimulator,
+                       MultiSimConfig, PoolReplanner, replica_device_map)
+
+P = LengthDistribution(mean_len=1024, prompt_len=128)
+
+
+def _cfg(eta: int = 4) -> SchedulerConfig:
+    return SchedulerConfig(tokens_per_step=2 ** 18, stable_iters=3,
+                           max_iters=12, adapt_delta=False,
+                           staleness=StalenessConfig(eta=eta))
+
+
+def _jobs():
+    """Mixed scale and mixed η: the 7B job runs a tighter staleness budget."""
+    return [JobSpec("j1.5b", PAPER_MODELS["1.5B"], P, _cfg(eta=4),
+                    weight=1.0),
+            JobSpec("j7b", PAPER_MODELS["7B"], P, _cfg(eta=2), weight=4.0)]
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    return paper_heterogeneous(8, 56)      # 1 H800 node + 7 H20 nodes
+
+
+@pytest.fixture(scope="module")
+def pool(cluster):
+    return schedule_pool(_jobs(), cluster)
+
+
+def _kill_one_node_of(pool_plan, cluster, job_name, t_fail=30.0):
+    plan = pool_plan.plans[job_name]
+    rmap = replica_device_map(cluster.subset(plan.infer_devices), plan)
+    node = rmap[0][0].node
+    fails = [JobFailure(job_name, i, t_fail=t_fail)
+             for i, devs in enumerate(rmap) if devs and devs[0].node == node]
+    assert fails
+    return fails
+
+
+def _run_with_failure(pool_plan, cluster, n_steps=8):
+    rp = PoolReplanner(cluster, elastic=ElasticConfig(replan_latency_s=4.0))
+    return MultiJobSimulator(pool_plan, MultiSimConfig(
+        n_steps=n_steps, failures=_kill_one_node_of(pool_plan, cluster,
+                                                    "j7b"),
+        replanner=rp, check_invariants=True)).run()
+
+
+# ---------------------------------------------------------------- ownership
+def test_pool_plan_partitions_devices(pool, cluster):
+    pool.assert_partition(cluster)
+    # slices are ICI-domain granular: a machine never splits across jobs
+    for dom in ici_domains(cluster):
+        owners = {pool.owner[d.index] for d in dom}
+        assert len(owners) == 1
+
+
+def test_device_conservation_across_cross_job_swap(pool, cluster):
+    res = _run_with_failure(pool, cluster)
+    assert res.pool_swaps >= 1
+    # owned ⊎ excluded == the initial device set, after every handoff
+    owned = set(res.owner_final)
+    assert owned | res.excluded == {d.index for d in cluster.devices}
+    assert not owned & res.excluded
+    for h in res.handoffs:
+        assert h.from_job != h.to_job
+        assert set(h.device_indices) <= owned
+    # per-job rollout ledgers stay conserved too
+    for r in res.per_job.values():
+        assert r.rollouts_launched == (r.rollouts_trained + r.dropped +
+                                       r.rollouts_in_buffer +
+                                       r.rollouts_generating)
+
+
+# ------------------------------------------------------------- η per job
+def test_eta_bounds_hold_independently_across_handoff(pool, cluster):
+    """Acceptance: each job's own η budget holds on both sides of a swap
+    that moved devices *between* jobs."""
+    res = _run_with_failure(pool, cluster)
+    assert len(res.handoffs) >= 1           # a cross-job handoff happened
+    for job in pool.jobs:
+        r = res.per_job[job.name]
+        assert r.max_staleness <= job.eta, (job.name, r.max_staleness)
+        for s in r.swaps:
+            assert s.max_staleness_before <= job.eta
+            assert s.max_staleness_after <= job.eta
+            assert s.t_commit >= s.t_request
+
+
+def test_delta_pinned_per_job_across_pool_replan(pool, cluster):
+    dead_node = cluster.subset(pool.plans["j7b"].infer_devices)[0].node
+    survivors = Cluster([d for d in cluster.devices if d.node != dead_node],
+                        cluster.cross_type_bw)
+    new = replan_pool(pool, survivors, reason="failure")
+    new.assert_partition(survivors)
+    for job in pool.jobs:
+        assert new.plans[job.name].delta == pool.plans[job.name].delta
+    assert new.pool_epoch == pool.pool_epoch + 1
+    # damaged/changed jobs carry replan provenance
+    changed = [n for n in new.plans
+               if new.plans[n].plan_epoch != pool.plans[n].plan_epoch]
+    assert "j7b" in changed
+    for n in changed:
+        assert new.plans[n].provenance == "replan:failure"
+
+
+# ------------------------------------------------------------- determinism
+def test_arbitration_deterministic(cluster):
+    a = schedule_pool(_jobs(), cluster)
+    b = schedule_pool(_jobs(), cluster)
+    assert a.signature() == b.signature()
+    assert a.transfers == b.transfers
+
+
+def test_multi_sim_deterministic_given_seed(pool, cluster):
+    r1 = _run_with_failure(pool, cluster)
+    r2 = _run_with_failure(pool, cluster)
+    assert r1.wall_time_s == r2.wall_time_s
+    assert r1.owner_final == r2.owner_final
+    for n in r1.per_job:
+        assert r1.per_job[n].tokens_consumed == r2.per_job[n].tokens_consumed
+        assert r1.per_job[n].rollouts_launched == \
+            r2.per_job[n].rollouts_launched
+
+
+# ------------------------------------------------------ single-job wrapper
+def test_schedule_wrapper_matches_slice_engine():
+    cluster = paper_heterogeneous(16, 16)
+    spec = PAPER_MODELS["1.5B"]
+    via_pool = schedule(spec, cluster, P, _cfg())
+    direct = schedule_slice(spec, cluster, P, _cfg())
+    assert via_pool.signature() == direct.signature()
+    assert via_pool.job == direct.job == "job0"
+
+
+# ------------------------------------------------------- slice-aware MILP
+def test_psi_enumeration_respects_slice_node_widths(cluster):
+    # a slice that owns only 3 devices of an 8-wide H800 machine must not
+    # host tp=4 replicas (TP is confined to one machine)
+    h800 = cluster.devices_of_type("H800")[:3]
+    widths = slice_node_widths(h800)
+    assert widths == {"H800": 3}
+    configs = enumerate_replica_configs(
+        PAPER_MODELS["1.5B"], {"H800": 3}, P, node_widths=widths)
+    assert configs
+    assert all(max(cfg.tp_per_stage) <= 2 for cfg, _ in configs)
+
+
+def test_arbitration_never_splits_a_machine(pool, cluster):
+    res = _run_with_failure(pool, cluster)
+    by_node = {}
+    for d in cluster.devices:
+        if d.index in res.owner_final:
+            by_node.setdefault(d.node, set()).add(res.owner_final[d.index])
+    for node, owners in by_node.items():
+        assert len(owners) == 1, (node, owners)
+
+
+# ------------------------------------------------- per-job buffers/versions
+def test_job_buffers_handoff_bumps_epochs_not_versions():
+    bufs = JobBuffers()
+    a = bufs.add_job("a", StalenessConfig(eta=2, rollouts_per_step=2))
+    b = bufs.add_job("b", StalenessConfig(eta=1, rollouts_per_step=2))
+    a.launch(2)
+    from repro.rl.buffer import Rollout
+    for g in range(2):
+        a.push(Rollout([1], [2], None, version=0, group_id=g))
+    va, vb = a.version, b.version
+    epochs = bufs.on_device_handoff("b", "a")
+    assert epochs == {"a": 1, "b": 1}
+    assert a.version == va and b.version == vb   # versions untouched
+    assert len(a.pop_batch(2)) == 2              # η admission unaffected
+    assert bufs.stats()["a"]["plan_swaps"] == 1
+    with pytest.raises(ValueError):
+        bufs.add_job("a")
+
+
+def test_pool_staleness_registry_handoff():
+    reg = PoolStalenessRegistry()
+    ca = reg.add_job("a", StalenessConfig(eta=3, rollouts_per_step=4))
+    cb = reg.add_job("b", StalenessConfig(eta=1, rollouts_per_step=4))
+    ca.launch(4)
+    ca.bump_version()
+    log = reg.record_handoff("a", "b")
+    assert log[0] == "a" and log[3] == "b"
+    assert ca.plan_epoch == 1 and cb.plan_epoch == 1
+    assert ca.version == 1 and cb.version == 0   # streams independent
+    assert reg.handoff_history() == [log]
+    ca.consume([1] * 4)
+    reg.assert_bounds()                          # 0 ≤ η for both
+
+
+# -------------------------------------------------- capacity-bound regime
+def test_more_replicas_than_capacity_terminates(pool, cluster):
+    """η·B capacity below the replica count must pause the surplus fleet,
+    not spin the resume loop forever (both simulators share the fix)."""
+    from repro.sim import AsyncRLSimulator, SimConfig
+    plan = schedule_slice(PAPER_MODELS["1.5B"],
+                          paper_heterogeneous(16, 16), P, _cfg())
+    n_rep = len(AsyncRLSimulator(plan, P).replicas)
+    cap_cfg = SimConfig(n_steps=4, rollouts_per_step=2, eta=1,
+                        reward_cost_s=0.1, check_invariants=True)
+    assert (cap_cfg.eta + 1) * cap_cfg.rollouts_per_step < n_rep
+    res = AsyncRLSimulator(plan, P, cap_cfg).run()
+    assert res.steps == 4
+    multi = MultiJobSimulator(pool, MultiSimConfig(
+        n_steps=2, rollouts_per_step=2, check_invariants=True)).run()
+    for r in multi.per_job.values():
+        assert r.steps == 2
+
+
+# ----------------------------------------------------- starved-slice repair
+def test_replan_repairs_fully_dead_slice():
+    """Losing a job's entire slice must not abort the pool replan: the
+    transfer loop donates surviving domains until the job is feasible
+    again (feasible-count dominates the arbitration score)."""
+    cluster = paper_heterogeneous(32, 32)
+    pool = schedule_pool(_jobs(), cluster)
+    dead = set(pool.job_devices("j7b"))
+    survivors = Cluster([d for d in cluster.devices if d.index not in dead],
+                        cluster.cross_type_bw)
+    new = replan_pool(pool, survivors, reason="failure")
+    new.assert_partition(survivors)
+    assert new.job_devices("j7b"), "starved job was not repaired"
+    assert new.plans["j7b"].delta == pool.plans["j7b"].delta
+    used = set(new.plans["j7b"].train_devices) \
+        | set(new.plans["j7b"].infer_devices)
+    assert used <= {d.index for d in survivors.devices}
+
+
+def test_replan_frozen_job_keeps_slice_and_gets_no_devices(pool, cluster):
+    """A finished job is frozen out of arbitration: its plan and slice are
+    carried over verbatim and the failed job recovers from elsewhere."""
+    dead_node = cluster.subset(pool.plans["j7b"].infer_devices)[0].node
+    survivors = Cluster([d for d in cluster.devices if d.node != dead_node],
+                        cluster.cross_type_bw)
+    new = replan_pool(pool, survivors, reason="failure",
+                      frozen=["j1.5b"])
+    assert new.plans["j1.5b"] is pool.plans["j1.5b"]
+    assert new.job_devices("j1.5b") == pool.job_devices("j1.5b")
+    assert new.plans["j7b"].plan_epoch == pool.plans["j7b"].plan_epoch + 1
+    with pytest.raises(ValueError):
+        replan_pool(pool, survivors, frozen=["j1.5b", "j7b"])
+
+
+# ------------------------------------------------------------- seed repair
+def test_pool_rejects_undersized_pools():
+    cluster = paper_heterogeneous(8, 8)          # 2 domains, 2 jobs × 2 min
+    with pytest.raises(RuntimeError):
+        schedule_pool(_jobs(), cluster,
+                      PoolConfig(min_domains_per_job=2))

@@ -94,10 +94,12 @@ MINI_DRYRUN = textwrap.dedent("""
             params_sds, opt_sds, batch_sds)
         compiled = lowered.compile()
     stats = parse_collectives(compiled.as_text())
+    ca = compiled.cost_analysis() or dict()
+    if isinstance(ca, (list, tuple)):      # jax 0.4.x returns [dict]
+        ca = ca[0] if ca else dict()
     print(json.dumps(dict(ok=True,
                           collectives=sum(stats.counts.values()),
-                          flops=float((compiled.cost_analysis() or
-                                       dict()).get("flops", 0)))))
+                          flops=float(ca.get("flops", 0)))))
 """)
 
 
