@@ -22,6 +22,7 @@ MODULES = [
     "fig5_cost_efficiency",
     "fig6_elastic_recovery",
     "fig7_multi_job",
+    "fig8_autotune_gain",
     "table5_scheduler_speed",
     "roofline_report",
 ]

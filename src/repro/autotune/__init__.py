@@ -1,0 +1,30 @@
+"""Measured-cost subsystem: Pallas kernel autotuner + CostDB + overlay.
+
+Closes the kernel → cost-model → scheduler loop: ``sweep`` times the
+repo's Pallas kernels over per-device-type config spaces, ``CostDB``
+persists the winners (versioned, mergeable, shape-bucket interpolated),
+``MeasuredCostModel`` re-derives the scheduler's efficiency factors from
+the measurements, and ``load_tuned_defaults`` feeds the winning block
+sizes back into the kernels' entry points.
+
+    # sweep (interpreter mode on CPU, wall-clock on TPU) and persist
+    python -m repro.autotune sweep --tiny --emit-costdb experiments/autotune/costdb.json
+    # inspect / merge
+    python -m repro.autotune show experiments/autotune/costdb.json
+    python -m repro.autotune merge a.json b.json -o merged.json
+
+    # schedule with measured costs
+    db = CostDB.load("experiments/autotune/costdb.json")
+    plan = schedule(spec, cluster, cost_provider=MeasuredCostModel(db))
+"""
+from .costdb import (CostDB, CostDBSchemaError, CostDBVersionError, Record,
+                     SCHEMA_VERSION)
+from .measured import MeasuredCostModel, load_tuned_defaults
+from .space import SPACES, ShapeBucket
+from .sweep import run_sweep
+
+__all__ = [
+    "CostDB", "CostDBSchemaError", "CostDBVersionError", "Record",
+    "SCHEMA_VERSION", "MeasuredCostModel", "load_tuned_defaults",
+    "SPACES", "ShapeBucket", "run_sweep",
+]

@@ -1,0 +1,273 @@
+"""Search spaces for the Pallas kernel autotuner.
+
+One ``KernelSpace`` per kernel: the tunable knobs with their candidate
+values, the shape buckets to sweep, and analytic FLOP/byte/VMEM models of
+one kernel invocation (accounting for the padding ops.py applies — an
+oversized block on a small sequence *executes* more FLOPs than the math
+needs, and that waste is exactly what the tuner should see).
+
+The per-device-type restriction is VMEM: a config whose working set
+exceeds the device's VMEM budget is not enumerated for that type (the
+compiled kernel would fail to fit; interpret mode would happily "run" it
+and corrupt the sweep with configs that can never ship).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+F32 = 4
+
+# Per-device-type VMEM budget, bytes.  Both current TPU generations carry
+# ~16 MB/core; leave headroom for double buffering (Pallas pipelines the
+# next block's DMA while computing).  GPU profiles (H800/H20) get a shared
+#-memory-ish budget so the same sweep prices them too.
+VMEM_BUDGET: Dict[str, float] = {
+    "TPUv5e": 16e6 * 0.6,
+    "TPUv5p": 16e6 * 0.6,
+    "H800": 16e6 * 0.6,
+    "H20": 16e6 * 0.6,
+}
+DEFAULT_VMEM_BUDGET = 16e6 * 0.6
+
+
+@dataclass(frozen=True)
+class ShapeBucket:
+    """One point of the sweep grid; ``size`` is the bucket's interpolation
+    coordinate (the dimension the cost scales with — sequence/cache len)."""
+
+    name: str
+    dims: Tuple[Tuple[str, int], ...]
+
+    @property
+    def d(self) -> Dict[str, int]:
+        return dict(self.dims)
+
+    @property
+    def size(self) -> int:
+        d = self.d
+        return d.get("S") or d.get("C") or 0
+
+    @staticmethod
+    def make(name: str, **dims: int) -> "ShapeBucket":
+        return ShapeBucket(name=name, dims=tuple(sorted(dims.items())))
+
+
+def _pad_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+@dataclass
+class KernelSpace:
+    name: str
+    knobs: Dict[str, Sequence[int]]
+    shapes: List[ShapeBucket]
+    tiny_shapes: List[ShapeBucket]
+    tiny_knobs: Dict[str, Sequence[int]]
+
+    def configs(self, tiny: bool = False) -> List[Dict[str, int]]:
+        knobs = self.tiny_knobs if tiny else self.knobs
+        names = sorted(knobs)
+        return [dict(zip(names, vals))
+                for vals in itertools.product(*(knobs[n] for n in names))]
+
+    def buckets(self, tiny: bool = False) -> List[ShapeBucket]:
+        return self.tiny_shapes if tiny else self.shapes
+
+    # --- analytic models (overridden per kernel below) ---------------------
+    def flops(self, shape: ShapeBucket, cfg: Dict[str, int]) -> float:
+        raise NotImplementedError
+
+    def flops_interpret(self, shape: ShapeBucket,
+                        cfg: Dict[str, int]) -> float:
+        """FLOPs the *interpreter* executes: ``pl.when`` tile-skipping is a
+        device-side win, the interpret path runs every tile.  cost_analysis
+        calibration must compare against this count, then correct the
+        device-side ``flops`` model."""
+        return self.flops(shape, cfg)
+
+    def useful_flops(self, shape: ShapeBucket) -> float:
+        raise NotImplementedError
+
+    def bytes_moved(self, shape: ShapeBucket, cfg: Dict[str, int]) -> float:
+        raise NotImplementedError
+
+    def vmem_bytes(self, shape: ShapeBucket, cfg: Dict[str, int]) -> float:
+        raise NotImplementedError
+
+    def grid_steps(self, shape: ShapeBucket, cfg: Dict[str, int]) -> int:
+        raise NotImplementedError
+
+    def feasible(self, shape: ShapeBucket, cfg: Dict[str, int],
+                 device_type: str) -> bool:
+        budget = VMEM_BUDGET.get(device_type, DEFAULT_VMEM_BUDGET)
+        return self.vmem_bytes(shape, cfg) <= budget
+
+
+# ------------------------------------------------------------ flash attention
+class FlashAttentionSpace(KernelSpace):
+    """[B, S, H, D] causal self-attention, grid (B, H, nQ, nK)."""
+
+    def _padded(self, shape: ShapeBucket, cfg: Dict[str, int]):
+        d = shape.d
+        sq = _pad_up(d["S"], cfg["block_q"])
+        sk = _pad_up(d["S"], cfg["block_k"])
+        return d["B"], sq, sk, d["H"], _pad_up(d["D"], 128)
+
+    def flops(self, shape, cfg):
+        B, sq, sk, H, D = self._padded(shape, cfg)
+        bk = cfg["block_k"]
+        # QK^T + PV = 4·D flops per executed score cell.  Causality skips
+        # fully-masked tiles, but the diagonal tile is computed whole: each
+        # query row executes ≈ its causal prefix rounded up to a block_k
+        # multiple (mean waste bk/2) — the block_k-dependent term the tuner
+        # trades against per-tile overheads.
+        return 4.0 * B * H * D * sq * (sq / 2.0 + bk / 2.0)
+
+    def flops_interpret(self, shape, cfg):
+        B, sq, sk, H, D = self._padded(shape, cfg)
+        return 4.0 * B * H * D * sq * sk          # every tile, no skipping
+
+    def useful_flops(self, shape):
+        d = shape.d
+        return 4.0 * d["B"] * d["H"] * d["D"] * d["S"] * d["S"] / 2.0
+
+    def bytes_moved(self, shape, cfg):
+        B, sq, sk, H, D = self._padded(shape, cfg)
+        n_q = sq // cfg["block_q"]
+        # q read + o written once; k/v re-streamed once per *q-tile* (the
+        # kv grid axis is innermost), ≈half skipped under causality — so a
+        # larger block_q directly cuts HBM traffic.  bf16 throughout.
+        return 2.0 * B * H * (sq * D * 2            # q + o
+                              + 2 * sk * D * max(1, n_q) / 2.0)
+
+    def vmem_bytes(self, shape, cfg):
+        D = _pad_up(shape.d["D"], 128)
+        bq, bk = cfg["block_q"], cfg["block_k"]
+        blocks = (bq * D + 2 * bk * D + bq * D) * 2          # q, k, v, o bf16
+        scratch = (bq * D + 2 * bq) * F32                    # acc, m, l
+        work = bq * bk * F32 * 3                             # s, p, masks
+        return 2 * blocks + scratch + work                   # double buffer
+
+    def grid_steps(self, shape, cfg):
+        B, sq, sk, H, _ = self._padded(shape, cfg)
+        return B * H * (sq // cfg["block_q"]) * (sk // cfg["block_k"])
+
+
+# ------------------------------------------------------------ decode attention
+class DecodeAttentionSpace(KernelSpace):
+    """[B, H, D] query over a [B, C, Hkv, D] cache, grid (B, Hkv, nC)."""
+
+    def _padded(self, shape: ShapeBucket, cfg: Dict[str, int]):
+        d = shape.d
+        bc = min(cfg["block_c"], d["C"]) if d["C"] >= 128 else d["C"]
+        return d["B"], _pad_up(d["C"], bc), d["H"], d["Hkv"], \
+            _pad_up(d["D"], 128), bc
+
+    def flops(self, shape, cfg):
+        B, C, H, Hkv, D, _ = self._padded(shape, cfg)
+        return 4.0 * B * H * D * C
+
+    def useful_flops(self, shape):
+        d = shape.d
+        return 4.0 * d["B"] * d["H"] * d["D"] * d["C"]
+
+    def bytes_moved(self, shape, cfg):
+        B, C, H, Hkv, D, _ = self._padded(shape, cfg)
+        # decode is cache-read dominated: K+V streamed once, q/o negligible.
+        return 2.0 * B * (2 * C * Hkv * D + 2 * H * D)
+
+    def vmem_bytes(self, shape, cfg):
+        d = shape.d
+        _, _, H, Hkv, D, bc = self._padded(shape, cfg)
+        G = H // Hkv
+        blocks = (G * D + 2 * bc * D) * 2 + bc * 4           # q, k, v, k_pos
+        scratch = (G * D + 2 * G) * F32
+        work = G * bc * F32 * 2
+        return 2 * blocks + scratch + work
+
+    def grid_steps(self, shape, cfg):
+        B, C, _, Hkv, _, bc = self._padded(shape, cfg)
+        return B * Hkv * (C // bc)
+
+
+# ---------------------------------------------------------------- mLSTM scan
+class SsmScanSpace(KernelSpace):
+    """[BH, S, D] chunked recurrence, grid (BH, n_chunks)."""
+
+    def _padded(self, shape: ShapeBucket, cfg: Dict[str, int]):
+        d = shape.d
+        return d["B"] * d["H"], _pad_up(d["S"], cfg["chunk"]), d["D"], \
+            cfg["chunk"]
+
+    def flops(self, shape, cfg):
+        BH, S, D, T = self._padded(shape, cfg)
+        nch = S // T
+        # per chunk: scores/wmat (2·T²·D), PV (2·T²·D), qC (2·T·D²),
+        # C update (2·T·D²), n/decay terms (≈2·T·D + T²)
+        per = 4.0 * T * T * D + 4.0 * T * D * D + 2.0 * T * D + T * T
+        return BH * nch * per
+
+    def useful_flops(self, shape):
+        d = shape.d
+        T0 = 64                         # reference chunking for "useful" work
+        nch = _pad_up(d["S"], T0) // T0
+        per = 4.0 * T0 * T0 * d["D"] + 4.0 * T0 * d["D"] * d["D"]
+        return d["B"] * d["H"] * nch * per
+
+    def bytes_moved(self, shape, cfg):
+        BH, S, D, _ = self._padded(shape, cfg)
+        return 2.0 * BH * S * (4 * D + 2)            # q,k,v,h + ig,fg bf16
+
+    def vmem_bytes(self, shape, cfg):
+        D = shape.d["D"]
+        T = cfg["chunk"]
+        blocks = (4 * T * D + 2 * T) * 2             # q,k,v,h, gates bf16
+        scratch = (D * D + D + 1) * F32              # C, n, m carries
+        work = (T * T * 3 + T * D) * F32             # dmat, wmat, scores
+        return 2 * blocks + scratch + work
+
+    def grid_steps(self, shape, cfg):
+        BH, S, _, T = self._padded(shape, cfg)
+        return BH * (S // T)
+
+
+FLASH_ATTENTION = FlashAttentionSpace(
+    name="flash_attention",
+    knobs={"block_q": (64, 128, 256, 512), "block_k": (64, 128, 256, 512)},
+    tiny_knobs={"block_q": (64, 128), "block_k": (64, 128, 256, 512)},
+    shapes=[ShapeBucket.make("b1_s1024_h8_d128", B=1, S=1024, H=8, D=128),
+            ShapeBucket.make("b1_s4096_h8_d128", B=1, S=4096, H=8, D=128),
+            ShapeBucket.make("b1_s16384_h8_d128", B=1, S=16384, H=8, D=128)],
+    tiny_shapes=[ShapeBucket.make("b1_s4096_h8_d128",
+                                  B=1, S=4096, H=8, D=128)],
+)
+
+DECODE_ATTENTION = DecodeAttentionSpace(
+    name="decode_attention",
+    knobs={"block_c": (128, 256, 512, 1024, 2048)},
+    tiny_knobs={"block_c": (128, 256, 512, 1024)},
+    shapes=[ShapeBucket.make("b32_c2048_h8_kv2_d128",
+                             B=32, C=2048, H=8, Hkv=2, D=128),
+            ShapeBucket.make("b32_c8192_h8_kv2_d128",
+                             B=32, C=8192, H=8, Hkv=2, D=128),
+            ShapeBucket.make("b32_c32768_h8_kv2_d128",
+                             B=32, C=32768, H=8, Hkv=2, D=128)],
+    tiny_shapes=[ShapeBucket.make("b32_c8192_h8_kv2_d128",
+                                  B=32, C=8192, H=8, Hkv=2, D=128)],
+)
+
+SSM_SCAN = SsmScanSpace(
+    name="ssm_scan",
+    knobs={"chunk": (16, 32, 64, 128, 256)},
+    tiny_knobs={"chunk": (32, 64, 128, 256)},
+    shapes=[ShapeBucket.make("b1_s2048_h4_d256", B=1, S=2048, H=4, D=256),
+            ShapeBucket.make("b1_s8192_h4_d256", B=1, S=8192, H=4, D=256)],
+    tiny_shapes=[ShapeBucket.make("b1_s2048_h4_d256",
+                                  B=1, S=2048, H=4, D=256)],
+)
+
+SPACES: Dict[str, KernelSpace] = {
+    s.name: s for s in (FLASH_ATTENTION, DECODE_ATTENTION, SSM_SCAN)
+}

@@ -1,0 +1,64 @@
+"""Sweep driver: kernels × shape buckets × configs → CostDB."""
+from __future__ import annotations
+
+import sys
+from typing import Callable, Dict, List, Optional, Sequence
+
+from ..core.cluster import PROFILES
+from .bench import bench_shape, configs_tried, on_device_type
+from .costdb import KERNELS, CostDB, Record
+from .space import SPACES
+
+DEFAULT_DEVICE_TYPES = ("TPUv5e", "TPUv5p")
+
+
+def run_sweep(
+    kernels: Optional[Sequence[str]] = None,
+    device_types: Optional[Sequence[str]] = None,
+    *,
+    tiny: bool = False,
+    base: Optional[CostDB] = None,
+    log: Callable[[str], None] = lambda s: print(s, file=sys.stderr),
+) -> CostDB:
+    """Sweep and return a CostDB (merged over ``base`` when given).
+
+    ``tiny`` is the CI mode: one shape bucket per kernel, ≤8 configs each,
+    interpreter calibration only.
+    """
+    kernels = list(kernels or KERNELS)
+    device_types = list(device_types or DEFAULT_DEVICE_TYPES)
+    for k in kernels:
+        if k not in SPACES:
+            raise KeyError(f"unknown kernel {k!r} (known: {sorted(SPACES)})")
+    for dt in device_types:
+        if dt not in PROFILES:
+            raise KeyError(f"unknown device type {dt!r} "
+                           f"(known: {sorted(PROFILES)})")
+    local = on_device_type()
+    log(f"autotune sweep: kernels={kernels} device_types={device_types} "
+        f"tiny={tiny} local_accelerator={local or 'none (interpret mode)'}")
+
+    db = CostDB()
+    if base is not None:
+        db.merge(base)
+    for kernel in kernels:
+        space = SPACES[kernel]
+        for shape in space.buckets(tiny=tiny):
+            best = bench_shape(kernel, shape, device_types, tiny=tiny,
+                               log=log)
+            for dt, m in best.items():
+                rec = Record(
+                    shape=shape.d, size=shape.size,
+                    best_config=m.config, time_s=m.time_s,
+                    flops=m.flops, useful_flops=m.useful_flops,
+                    bytes=m.bytes, mode=m.mode,
+                    configs_tried=configs_tried(kernel, shape, dt,
+                                                tiny=tiny))
+                prev = db.lookup(dt, kernel, shape.name)
+                if prev is None or rec.better_than(prev):
+                    db.put(dt, kernel, shape.name, rec)
+                cfg = " ".join(f"{k}={v}"
+                               for k, v in sorted(m.config.items()))
+                log(f"  {kernel:18s} {shape.name:24s} {dt:8s} -> {cfg}  "
+                    f"t={m.time_s * 1e3:.3f}ms ({m.mode})")
+    return db

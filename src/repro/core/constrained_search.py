@@ -18,8 +18,8 @@ import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .cluster import Cluster, Device, PROFILES
-from .cost_model import (TRAIN_MFU, StageSpec, TrainCost, TrainPlan,
-                         train_step_cost)
+from .cost_model import (CostProvider, StageSpec, TrainCost, TrainPlan,
+                         resolve_provider, train_step_cost)
 from .model_spec import ModelSpec
 
 _POW2 = (1, 2, 4, 8, 16)
@@ -73,8 +73,10 @@ def constrained_search(
     tokens_per_step: float,
     seq_len: float = 8192.0,
     microbatch_options: Sequence[int] = (4, 8, 16, 32),
+    cost_provider: Optional[CostProvider] = None,
 ) -> Tuple[Optional[TrainPlan], TrainCost]:
     """Return (σ, C_T-per-step).  σ is None when no feasible plan exists."""
+    provider = resolve_provider(cost_provider)
     by_type: Dict[str, int] = {}
     for d in d_train:
         by_type[d.type_name] = by_type.get(d.type_name, 0) + 1
@@ -103,7 +105,7 @@ def constrained_search(
             continue
         # layers ∝ effective stage FLOPS
         weights = [
-            dp * tp * PROFILES[t].flops * TRAIN_MFU.get(t, 0.4)
+            dp * tp * PROFILES[t].flops * provider.train_mfu(PROFILES[t])
             for (t, dp, tp) in stage_protos
         ]
         layers = _layer_split(spec, weights)
@@ -114,7 +116,7 @@ def constrained_search(
             )
             plan = TrainPlan(stages=stages, microbatches=mb)
             cost = train_step_cost(spec, plan, tokens_per_step=tokens_per_step,
-                                   seq_len=seq_len)
+                                   seq_len=seq_len, cost_provider=provider)
             if not cost.feasible:
                 continue
             if best_cost is None or cost.total < best_cost.total:
@@ -133,17 +135,20 @@ def exhaustive_search(
     *,
     tokens_per_step: float,
     seq_len: float = 8192.0,
+    cost_provider: Optional[CostProvider] = None,
 ) -> Tuple[Optional[TrainPlan], TrainCost]:
     """Unconstrained baseline used by Table 5: also enumerates cross-type
     TP/DP blocks (which the constrained search prunes) and all microbatch
     choices, exploding the candidate count."""
+    provider = resolve_provider(cost_provider)
     by_type: Dict[str, int] = {}
     for d in d_train:
         by_type[d.type_name] = by_type.get(d.type_name, 0) + 1
     type_names = sorted(by_type)
 
     best_plan, best_cost = constrained_search(
-        spec, cluster, d_train, tokens_per_step=tokens_per_step, seq_len=seq_len)
+        spec, cluster, d_train, tokens_per_step=tokens_per_step,
+        seq_len=seq_len, cost_provider=provider)
 
     # Cross-type "mixed" stages: emulate by evaluating every split of each
     # type's devices across 1..4 stages and every interleaving order — this is
@@ -177,7 +182,8 @@ def exhaustive_search(
                         stage_protos.append((tname, dp, tp))
                 if not ok or not stage_protos or len(stage_protos) > spec.n_layers:
                     continue
-                weights = [dp * tp * PROFILES[t].flops * TRAIN_MFU.get(t, .4)
+                weights = [dp * tp * PROFILES[t].flops
+                           * provider.train_mfu(PROFILES[t])
                            for (t, dp, tp) in stage_protos]
                 layers = _layer_split(spec, weights)
                 for mb in (2, 4, 8, 16, 32, 64):
@@ -186,7 +192,8 @@ def exhaustive_search(
                     plan = TrainPlan(stages=stages, microbatches=mb)
                     cost = train_step_cost(spec, plan,
                                            tokens_per_step=tokens_per_step,
-                                           seq_len=seq_len)
+                                           seq_len=seq_len,
+                                           cost_provider=provider)
                     if cost.feasible and (best_cost is None
                                           or cost.total < best_cost.total):
                         best_plan, best_cost = plan, cost

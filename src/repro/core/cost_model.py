@@ -57,7 +57,107 @@ MEM_UTIL = 0.90          # usable fraction of HBM
 
 
 def _mfu(table: Dict[str, float], profile: DeviceProfile) -> float:
-    return table.get(profile.name, 0.40)
+    try:
+        return table[profile.name]
+    except KeyError:
+        raise KeyError(
+            f"no calibrated efficiency factor for device profile "
+            f"{profile.name!r} (known: {sorted(table)}). Add the profile to "
+            f"the tables in core/cost_model.py, or supply a MeasuredCostModel "
+            f"built from an autotune CostDB (repro.autotune) that covers it."
+        ) from None
+
+
+_EFF_TABLES: Dict[str, Dict[str, float]] = {
+    "TRAIN_MFU": TRAIN_MFU,
+    "PREFILL_MFU": PREFILL_MFU,
+    "DECODE_COMPUTE_EFF": DECODE_COMPUTE_EFF,
+    "DECODE_ENGINE_EFF": DECODE_ENGINE_EFF,
+}
+
+
+def _assert_profile_coverage() -> None:
+    """Every registered DeviceProfile must have an entry in every efficiency
+    table — the scheduler prices plans for any profile in PROFILES, and a
+    silent default would skew every MILP coefficient for that type."""
+    missing = [(t, p) for t, tab in _EFF_TABLES.items()
+               for p in PROFILES if p not in tab]
+    assert not missing, (
+        f"efficiency tables missing profiles: {missing} — every profile in "
+        f"core.cluster.PROFILES needs calibrated constants in each table")
+
+
+_assert_profile_coverage()
+
+
+# ---------------------------------------------------------------- providers
+class CostProvider:
+    """Per-device efficiency factors consumed by the cost models.
+
+    The scheduler's roofline models are parameterized by achieved-fraction
+    factors (MFU, HBM efficiency, serving-engine efficiency).  A provider
+    supplies them per DeviceProfile; the default ``AnalyticCostModel`` reads
+    the calibrated constant tables above, and ``repro.autotune``'s
+    ``MeasuredCostModel`` overlays factors re-derived from Pallas kernel
+    measurements, falling back to the analytic constants per factor and per
+    device type when its CostDB lacks coverage.
+    """
+
+    def train_mfu(self, profile: DeviceProfile) -> float:
+        raise NotImplementedError
+
+    def prefill_mfu(self, profile: DeviceProfile) -> float:
+        raise NotImplementedError
+
+    def decode_compute_eff(self, profile: DeviceProfile) -> float:
+        raise NotImplementedError
+
+    def decode_engine_eff(self, profile: DeviceProfile) -> float:
+        raise NotImplementedError
+
+    def hbm_eff(self, profile: DeviceProfile) -> float:
+        raise NotImplementedError
+
+    def factors(self, profile: DeviceProfile) -> Dict[str, float]:
+        return {
+            "train_mfu": self.train_mfu(profile),
+            "prefill_mfu": self.prefill_mfu(profile),
+            "decode_compute_eff": self.decode_compute_eff(profile),
+            "decode_engine_eff": self.decode_engine_eff(profile),
+            "hbm_eff": self.hbm_eff(profile),
+        }
+
+
+class AnalyticCostModel(CostProvider):
+    """Today's hand-calibrated constants, packaged behind the provider API.
+
+    This is the default everywhere: plans produced with ``cost_provider=None``
+    and ``cost_provider=AnalyticCostModel()`` are bit-identical.
+    """
+
+    name = "analytic"
+
+    def train_mfu(self, profile: DeviceProfile) -> float:
+        return _mfu(TRAIN_MFU, profile)
+
+    def prefill_mfu(self, profile: DeviceProfile) -> float:
+        return _mfu(PREFILL_MFU, profile)
+
+    def decode_compute_eff(self, profile: DeviceProfile) -> float:
+        return _mfu(DECODE_COMPUTE_EFF, profile)
+
+    def decode_engine_eff(self, profile: DeviceProfile) -> float:
+        return _mfu(DECODE_ENGINE_EFF, profile)
+
+    def hbm_eff(self, profile: DeviceProfile) -> float:
+        return HBM_EFF
+
+
+ANALYTIC = AnalyticCostModel()
+
+
+def resolve_provider(provider: Optional[CostProvider]) -> CostProvider:
+    return ANALYTIC if provider is None else provider
 
 
 # ------------------------------------------------------------------- plans
@@ -187,9 +287,11 @@ def train_step_cost(
     seq_len: float = 8192.0,
     opt_state_bytes: int = 8,   # AdamW m+v in fp32 after ZeRO cast policy
     cross_stage_bw: Optional[float] = None,
+    cost_provider: Optional[CostProvider] = None,
 ) -> TrainCost:
     """C_Train: one optimizer-step latency for a global batch of
     ``tokens_per_step`` tokens at average sequence length ``seq_len``."""
+    provider = resolve_provider(cost_provider)
     total_params = spec.params()
     active_params = spec.params(active_only=True)
 
@@ -211,7 +313,7 @@ def train_step_cost(
         attn_flops = (12.0 * st.n_layers * spec.hd * spec.n_heads
                       * tokens_per_step * attn_ctx / 2.0)
         flops = lin_flops + attn_flops
-        eff_flops = st.dp * st.tp * prof.flops * _mfu(TRAIN_MFU, prof)
+        eff_flops = st.dp * st.tp * prof.flops * provider.train_mfu(prof)
         t_compute = flops / eff_flops
 
         # --- TP collectives: 4 all-reduces per layer (2 fwd + 2 bwd) of the
@@ -291,12 +393,14 @@ def replica_throughput(
     P: LengthDistribution,
     *,
     batch_cap: int = 256,
+    cost_provider: Optional[CostProvider] = None,
 ) -> ReplicaCost:
     """h_ψ: steady-state generated tokens/s of one rollout replica (§4.2.2).
 
     HexGen-style: memory-derived max batch, prefill compute roofline, decode
     max(weight-read, KV-read, compute) roofline per step, TP latency adders.
     """
+    provider = resolve_provider(cost_provider)
     prof = cfg.profile
     n = cfg.n_devices
     p_len, o_len = P.prompt_len, P.mean()
@@ -319,15 +423,17 @@ def replica_throughput(
     # Prefill: compute-bound.
     pf_flops = 2.0 * active * batch * p_len \
         + 4.0 * spec.n_layers * spec.n_heads * spec.hd * batch * p_len**2 / 2.0
-    t_prefill = pf_flops / (n * prof.flops * _mfu(PREFILL_MFU, prof))
+    t_prefill = pf_flops / (n * prof.flops * provider.prefill_mfu(prof))
 
     # Decode step: one token for every sequence in the batch.
     avg_ctx = p_len + o_len / 2.0
     if spec.attn_window:
         avg_ctx = min(avg_ctx, spec.attn_window)
-    t_w = w_bytes / n / (prof.hbm_bw * HBM_EFF)                       # weight read
-    t_kv = batch * (kv_tok * avg_ctx + state_b) / n / (prof.hbm_bw * HBM_EFF)
-    t_c = 2.0 * active * batch / (n * prof.flops * _mfu(DECODE_COMPUTE_EFF, prof))
+    hbm_eff = provider.hbm_eff(prof)
+    t_w = w_bytes / n / (prof.hbm_bw * hbm_eff)                       # weight read
+    t_kv = batch * (kv_tok * avg_ctx + state_b) / n / (prof.hbm_bw * hbm_eff)
+    t_c = 2.0 * active * batch / (n * prof.flops
+                                  * provider.decode_compute_eff(prof))
     t_lat = 0.0
     tp = max(cfg.tp_per_stage)
     if tp > 1:
@@ -343,7 +449,7 @@ def replica_throughput(
     t_decode = max(t_w, t_kv, t_c) + t_lat + KERNEL_LAUNCH_US * 1e-6
 
     gen_time = t_prefill + o_len * t_decode
-    tps = batch * o_len / gen_time * DECODE_ENGINE_EFF.get(prof.name, 0.45)
+    tps = batch * o_len / gen_time * provider.decode_engine_eff(prof)
 
     mem = w_per_dev + batch * per_seq
     return ReplicaCost(
@@ -394,7 +500,9 @@ def weight_sync_cost(
 # ------------------------------------------------------- per-token economics
 def per_token_costs(spec: ModelSpec, profile: DeviceProfile,
                     P: Optional[LengthDistribution] = None,
-                    n_devices: int = 8) -> Tuple[float, float]:
+                    n_devices: int = 8,
+                    cost_provider: Optional[CostProvider] = None,
+                    ) -> Tuple[float, float]:
     """($/inference-token, $/training-token) for one device type — Table 1."""
     P = P or LengthDistribution()
     tp = min(n_devices, profile.devices_per_node)
@@ -403,14 +511,16 @@ def per_token_costs(spec: ModelSpec, profile: DeviceProfile,
     for t in (1, 2, 4, 8):
         if t > tp:
             continue
-        rc = replica_throughput(spec, ReplicaConfig(profile.name, (t,)), P)
+        rc = replica_throughput(spec, ReplicaConfig(profile.name, (t,)), P,
+                                cost_provider=cost_provider)
         if rc.feasible:
             best_tps = max(best_tps, rc.tokens_per_sec * (n_devices // t))
     infer_cost = (profile.price_per_hour * n_devices / 3600.0) / max(best_tps, 1e-9)
 
     plan = TrainPlan(stages=(StageSpec(profile.name, dp=max(1, n_devices // tp),
                                        tp=tp, n_layers=spec.n_layers),))
-    tc = train_step_cost(spec, plan, tokens_per_step=n_devices * 8192.0)
+    tc = train_step_cost(spec, plan, tokens_per_step=n_devices * 8192.0,
+                         cost_provider=cost_provider)
     train_tps = n_devices * 8192.0 / tc.total
     train_cost = (profile.price_per_hour * n_devices / 3600.0) / max(train_tps, 1e-9)
     return infer_cost, train_cost

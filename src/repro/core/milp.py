@@ -29,8 +29,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .cluster import Cluster, Device, PROFILES
-from .cost_model import (LengthDistribution, ReplicaConfig, ReplicaCost,
-                         replica_throughput)
+from .cost_model import (CostProvider, LengthDistribution, ReplicaConfig,
+                         ReplicaCost, replica_throughput)
 from .model_spec import ModelSpec
 from .plan import RolloutAssignment, RolloutPlan
 
@@ -67,6 +67,7 @@ def enumerate_replica_configs(
     *,
     max_pp: int = 2,
     node_widths: Optional[Dict[str, int]] = None,
+    cost_provider: Optional[CostProvider] = None,
 ) -> List[Tuple[ReplicaConfig, ReplicaCost]]:
     """Build Ψ: feasible replica configs with their profiled throughput h_ψ.
 
@@ -86,7 +87,8 @@ def enumerate_replica_configs(
                 cfg = ReplicaConfig(tname, (tp,) * pp)
                 if cfg.n_devices > count:
                     continue
-                rc = replica_throughput(spec, cfg, P)
+                rc = replica_throughput(spec, cfg, P,
+                                        cost_provider=cost_provider)
                 if rc.feasible and rc.tokens_per_sec > 0:
                     out.append((cfg, rc))
     return out
@@ -154,6 +156,7 @@ def solve_rollout_milp(
     *,
     total_rollouts: float,
     max_pp: int = 2,
+    cost_provider: Optional[CostProvider] = None,
 ) -> MILPResult:
     """Fast path: exact reduction of Eq. 2 (see module docstring)."""
     type_counts: Dict[str, int] = {}
@@ -161,7 +164,8 @@ def solve_rollout_milp(
         type_counts[d.type_name] = type_counts.get(d.type_name, 0) + 1
     configs = enumerate_replica_configs(
         spec, type_counts, P, max_pp=max_pp,
-        node_widths=slice_node_widths(d_infer))
+        node_widths=slice_node_widths(d_infer),
+        cost_provider=cost_provider)
     counts, solver, optimal = _max_throughput_counts(configs, type_counts)
 
     assignments: List[RolloutAssignment] = []
@@ -190,6 +194,7 @@ def solve_rollout_milp_bisection(
     max_pp: int = 2,
     tol: float = 1e-3,
     max_iters: int = 40,
+    cost_provider: Optional[CostProvider] = None,
 ) -> MILPResult:
     """Paper-literal Eq. 2 via Θ-bisection: each iterate solves the linear
     feasibility MILP  ∃y,x: Σx=B, x_ψ·len ≤ Θ·y_ψ·h_ψ, Σ v·y ≤ i."""
@@ -198,7 +203,8 @@ def solve_rollout_milp_bisection(
         type_counts[d.type_name] = type_counts.get(d.type_name, 0) + 1
     configs = enumerate_replica_configs(
         spec, type_counts, P, max_pp=max_pp,
-        node_widths=slice_node_widths(d_infer))
+        node_widths=slice_node_widths(d_infer),
+        cost_provider=cost_provider)
     if not configs:
         empty = RolloutPlan(assignments=(), makespan=math.inf,
                             total_rollouts=total_rollouts)

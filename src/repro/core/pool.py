@@ -37,11 +37,11 @@ from __future__ import annotations
 
 import math
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 from .cluster import Cluster, Device
-from .cost_model import LengthDistribution
+from .cost_model import CostProvider, LengthDistribution
 from .graph_partition import ici_domains, subcluster
 from .model_spec import ModelSpec
 from .plan import ScheduledPlan
@@ -406,14 +406,25 @@ def _finish(jobs: Sequence[JobSpec], domains: Sequence[List[Device]],
 
 # ------------------------------------------------------------- entry points
 def schedule_pool(jobs: Sequence[JobSpec], cluster: Cluster,
-                  cfg: Optional[PoolConfig] = None) -> PoolPlan:
-    """Offline pool arbitration: Eq. (1') over a fresh cluster."""
+                  cfg: Optional[PoolConfig] = None, *,
+                  cost_provider: Optional[CostProvider] = None) -> PoolPlan:
+    """Offline pool arbitration: Eq. (1') over a fresh cluster.
+
+    ``cost_provider`` (when given) overrides the efficiency-factor source in
+    every job's SchedulerConfig — the provider then travels with the jobs
+    into ``replan_pool`` via ``PoolPlan.jobs``.  Default (None) keeps each
+    job's own configuration, i.e. the analytic constant tables.
+    """
     from .scheduler import schedule_slice
     if not jobs:
         raise ValueError("schedule_pool needs at least one job")
     names = [j.name for j in jobs]
     if len(set(names)) != len(names):
         raise ValueError(f"duplicate job names: {names}")
+    if cost_provider is not None:
+        jobs = [replace(j, sched_cfg=replace(j.sched_cfg,
+                                             cost_provider=cost_provider))
+                for j in jobs]
     cfg = cfg or PoolConfig()
     t0 = time.perf_counter()
     domains = ici_domains(cluster)

@@ -22,7 +22,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .cluster import Cluster, Device
 from .constrained_search import constrained_search, exhaustive_search
-from .cost_model import LengthDistribution, TrainCost, weight_sync_cost
+from .cost_model import (CostProvider, LengthDistribution, TrainCost,
+                         weight_sync_cost)
 from .graph_partition import (PartitionResult, compute_fraction, partition,
                               partition_exhaustive)
 from .milp import solve_rollout_milp, solve_rollout_milp_bisection
@@ -42,6 +43,9 @@ class SchedulerConfig:
     staleness: StalenessConfig = None      # type: ignore[assignment]
     adapt_delta: bool = True
     milp_bisection: bool = False           # paper-literal Eq. 2 path
+    # None → the analytic constant tables (bit-identical to the pre-provider
+    # scheduler); a MeasuredCostModel overlays autotuned kernel measurements.
+    cost_provider: Optional[CostProvider] = None
 
     def __post_init__(self):
         if self.staleness is None:
@@ -72,7 +76,8 @@ def _evaluate_allocation(
     """Search-Phase: price one (D_T, D_I) allocation."""
     sigma, tcost = constrained_search(
         spec, cluster, part.train_devices,
-        tokens_per_step=cfg.tokens_per_step, seq_len=cfg.seq_len)
+        tokens_per_step=cfg.tokens_per_step, seq_len=cfg.seq_len,
+        cost_provider=cfg.cost_provider)
     if sigma is None:
         return None
 
@@ -80,7 +85,8 @@ def _evaluate_allocation(
     solver = (solve_rollout_milp_bisection if cfg.milp_bisection
               else solve_rollout_milp)
     milp_res = solver(spec, part.infer_devices, P,
-                      total_rollouts=delta * rollouts_per_step)
+                      total_rollouts=delta * rollouts_per_step,
+                      cost_provider=cfg.cost_provider)
     tau = milp_res.plan
     if not tau.assignments or not math.isfinite(tau.makespan):
         return None
@@ -170,6 +176,7 @@ def schedule_slice(
     cfg: Optional[SchedulerConfig] = None,
     *,
     job: str = "job0",
+    cost_provider: Optional[CostProvider] = None,
 ) -> ScheduledPlan:
     """Run Algorithm 1 on one device slice and return the best plan found.
 
@@ -179,6 +186,8 @@ def schedule_slice(
     """
     P = P or LengthDistribution()
     cfg = cfg or SchedulerConfig()
+    if cost_provider is not None:
+        cfg = replace(cfg, cost_provider=cost_provider)
     t0 = time.perf_counter()
 
     def solve_for_delta(delta: int) -> Tuple[Optional[ScheduledPlan], float]:
@@ -221,17 +230,25 @@ def schedule(
     cluster: Cluster,
     P: Optional[LengthDistribution] = None,
     cfg: Optional[SchedulerConfig] = None,
+    *,
+    cost_provider: Optional[CostProvider] = None,
 ) -> ScheduledPlan:
     """Single-job entry point: schedule one RL job over the whole pool.
 
     Thin wrapper over a one-job ``core.pool.schedule_pool`` — a pool with a
     single job grants it every ICI domain and degenerates to Algorithm 1 on
     the full cluster, so existing callers see identical plans.
+
+    ``cost_provider`` selects the efficiency-factor source (default: the
+    analytic constant tables — plans are bit-identical to passing nothing).
     """
     from .pool import JobSpec, schedule_pool   # local import: pool → scheduler
+    cfg = cfg or SchedulerConfig()
+    if cost_provider is not None:
+        cfg = replace(cfg, cost_provider=cost_provider)
     job = JobSpec(name="job0", model=spec,
                   P=P or LengthDistribution(),
-                  sched_cfg=cfg or SchedulerConfig())
+                  sched_cfg=cfg)
     return schedule_pool([job], cluster).plans["job0"]
 
 
@@ -245,6 +262,7 @@ def reschedule(
     *,
     reason: str = "failure",
     gamma_halfwidth: float = 0.15,
+    cost_provider: Optional[CostProvider] = None,
 ) -> ScheduledPlan:
     """Fast incremental re-run of the repartition phase for elastic recovery.
 
@@ -265,6 +283,8 @@ def reschedule(
     """
     P = P or LengthDistribution()
     cfg = cfg or SchedulerConfig()
+    if cost_provider is not None:
+        cfg = replace(cfg, cost_provider=cost_provider)
     t0 = time.perf_counter()
     delta = prev_plan.delta
 
@@ -310,12 +330,14 @@ def schedule_without_search(
     def evaluate(part: PartitionResult) -> Optional[ScheduledPlan]:
         sigma, tcost = exhaustive_search(
             spec, cluster, part.train_devices,
-            tokens_per_step=cfg.tokens_per_step, seq_len=cfg.seq_len)
+            tokens_per_step=cfg.tokens_per_step, seq_len=cfg.seq_len,
+            cost_provider=cfg.cost_provider)
         if sigma is None:
             return None
         rollouts = delta * cfg.tokens_per_step / max(P.mean(), 1.0)
         milp_res = solve_rollout_milp_bisection(
-            spec, part.infer_devices, P, total_rollouts=rollouts)
+            spec, part.infer_devices, P, total_rollouts=rollouts,
+            cost_provider=cfg.cost_provider)
         tau = milp_res.plan
         if not tau.assignments:
             return None

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from .kernel import flash_decode
 from .ref import decode_attention_ref
+from .. import tuning
 
 
 def _on_cpu() -> bool:
@@ -23,13 +24,17 @@ def decode_attention(
     *,
     window: Optional[int] = None,
     scale: Optional[float] = None,
-    block_c: int = 512,
+    block_c: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """One decode token over the KV cache.  Returns [B, H, D]."""
+    """One decode token over the KV cache.  Returns [B, H, D].
+
+    block_c=None resolves through the per-device-type tuned table
+    (kernels.tuning; autotune CostDB winners), falling back to 512."""
     B, H, D = q.shape
     _, C, Hkv, _ = k.shape
     G = H // Hkv
+    block_c = tuning.resolve("decode_attention", "block_c", block_c)
     interpret = _on_cpu() if interpret is None else interpret
     # scale from the TRUE head dim (padding below would skew it)
     scale = scale if scale is not None else 1.0 / (D ** 0.5)

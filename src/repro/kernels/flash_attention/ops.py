@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from .kernel import flash_attention_fwd
 from .ref import attention_ref
+from .. import tuning
 
 
 def _on_cpu() -> bool:
@@ -36,9 +37,12 @@ def _pad_to(x, multiple, axis):
 @functools.partial(jax.custom_vjp,
                    nondiff_argnums=(3, 4, 5, 6, 7, 8))
 def flash_attention(q, k, v, causal=True, window=None, scale=None,
-                    block_q=128, block_k=128, interpret=None):
+                    block_q=None, block_k=None, interpret=None):
     """q [B,Sq,H,D], k/v [B,Sk,Hkv,D] -> [B,Sq,H,D].  Contiguous positions
-    (training/prefill path: q rows at positions 0..Sq-1, k at 0..Sk-1)."""
+    (training/prefill path: q rows at positions 0..Sq-1, k at 0..Sk-1).
+
+    block_q/block_k=None resolve through the per-device-type tuned table
+    (kernels.tuning; autotune CostDB winners), falling back to 128×128."""
     return _fwd_impl(q, k, v, causal, window, scale, block_q, block_k,
                      interpret)
 
@@ -46,6 +50,8 @@ def flash_attention(q, k, v, causal=True, window=None, scale=None,
 def _fwd_impl(q, k, v, causal, window, scale, block_q, block_k, interpret):
     B, Sq, H, D = q.shape
     _, Sk, Hkv, _ = k.shape
+    block_q = tuning.resolve("flash_attention", "block_q", block_q)
+    block_k = tuning.resolve("flash_attention", "block_k", block_k)
     interpret = _on_cpu() if interpret is None else interpret
     scale = scale if scale is not None else 1.0 / math.sqrt(D)
 

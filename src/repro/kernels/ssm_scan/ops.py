@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from .kernel import mlstm_scan_kernel
 from .ref import mlstm_scan_ref
+from .. import tuning
 
 NEG = -1e30
 
@@ -16,10 +17,14 @@ def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-def mlstm_scan(q, k, v, ig, fg, *, chunk: int = 64,
+def mlstm_scan(q, k, v, ig, fg, *, chunk: Optional[int] = None,
                interpret: Optional[bool] = None) -> jax.Array:
-    """Model layout: q/k/v [B, S, H, D]; ig/fg [B, S, H] → [B, S, H, D]."""
+    """Model layout: q/k/v [B, S, H, D]; ig/fg [B, S, H] → [B, S, H, D].
+
+    chunk=None resolves through the per-device-type tuned table
+    (kernels.tuning; autotune CostDB winners), falling back to 64."""
     B, S, H, D = q.shape
+    chunk = tuning.resolve("ssm_scan", "chunk", chunk)
     interpret = _on_cpu() if interpret is None else interpret
 
     pad = (-S) % chunk

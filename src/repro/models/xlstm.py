@@ -194,7 +194,9 @@ def _layer_fwd(lp: Dict, h: Array, cfg: ModelConfig) -> Array:
     q, k, v, ig, fg = _project(lp, x, cfg)
     if cfg.use_pallas:
         from repro.kernels.ssm_scan.ops import mlstm_scan
-        o = mlstm_scan(q, k, v, ig, fg, chunk=CHUNK)          # [B,S,H,D]
+        # chunk=None → per-device-type tuned table (kernels.tuning), which
+        # falls back to CHUNK=64 when no autotune CostDB is loaded
+        o = mlstm_scan(q, k, v, ig, fg, chunk=None)           # [B,S,H,D]
     else:
         o = mlstm_chunkwise(q, k, v, ig, fg)                  # [B,S,H,D]
     B, S = x.shape[:2]

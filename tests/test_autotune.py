@@ -1,0 +1,277 @@
+"""Measured-cost subsystem: CostDB, MeasuredCostModel, provider plumbing."""
+import math
+
+import pytest
+
+from repro.autotune import (CostDB, CostDBSchemaError, CostDBVersionError,
+                            MeasuredCostModel, Record, SCHEMA_VERSION,
+                            load_tuned_defaults, run_sweep)
+from repro.autotune.bench import estimate_time
+from repro.autotune.space import SPACES, ShapeBucket
+from repro.core.cluster import PROFILES, DeviceProfile, paper_heterogeneous
+from repro.core.cost_model import (ANALYTIC, AnalyticCostModel,
+                                   DECODE_ENGINE_EFF, HBM_EFF, PREFILL_MFU,
+                                   TRAIN_MFU, _EFF_TABLES, _mfu,
+                                   LengthDistribution, ReplicaConfig,
+                                   replica_throughput)
+from repro.core.model_spec import PAPER_MODELS
+from repro.core.scheduler import SchedulerConfig, schedule
+from repro.kernels import tuning
+
+
+def _rec(size=4096, time_s=1e-3, mode="interpret", config=None, **over):
+    kw = dict(shape={"B": 1, "S": size, "H": 8, "D": 128}, size=size,
+              best_config=config or {"block_q": 128, "block_k": 128},
+              time_s=time_s, flops=4e10, useful_flops=3.5e10, bytes=3e8,
+              mode=mode, configs_tried=8)
+    kw.update(over)
+    return Record(**kw)
+
+
+# ------------------------------------------------------------------- CostDB
+def test_costdb_roundtrip(tmp_path):
+    db = CostDB()
+    db.put("TPUv5e", "flash_attention", "b1_s4096", _rec())
+    db.put("TPUv5p", "decode_attention", "b32_c8192",
+           _rec(config={"block_c": 512}))
+    p = tmp_path / "db.json"
+    db.save(p)
+    back = CostDB.load(p)
+    assert back.to_json() == db.to_json()
+    assert back.lookup("TPUv5e", "flash_attention", "b1_s4096") == \
+        db.lookup("TPUv5e", "flash_attention", "b1_s4096")
+
+
+def test_costdb_merge_better_record_wins():
+    a = CostDB()
+    a.put("TPUv5e", "flash_attention", "b", _rec(time_s=2e-3))
+    b = CostDB()
+    b.put("TPUv5e", "flash_attention", "b", _rec(time_s=1e-3))
+    b.put("TPUv5p", "flash_attention", "b", _rec(time_s=9e-3))
+    a.merge(b)
+    assert a.lookup("TPUv5e", "flash_attention", "b").time_s == 1e-3
+    assert a.lookup("TPUv5p", "flash_attention", "b").time_s == 9e-3
+    # a real device measurement beats a faster interpreter estimate
+    c = CostDB()
+    c.put("TPUv5e", "flash_attention", "b", _rec(time_s=5e-3, mode="device"))
+    a.merge(c)
+    assert a.lookup("TPUv5e", "flash_attention", "b").mode == "device"
+    d = CostDB()
+    d.put("TPUv5e", "flash_attention", "b", _rec(time_s=1e-4))
+    a.merge(d)   # interpret estimate never displaces a device measurement
+    assert a.lookup("TPUv5e", "flash_attention", "b").mode == "device"
+
+
+def test_costdb_version_mismatch_raises(tmp_path):
+    db = CostDB()
+    db.put("TPUv5e", "flash_attention", "b", _rec())
+    payload = db.to_json()
+    payload["schema_version"] = SCHEMA_VERSION + 1
+    import json
+    p = tmp_path / "future.json"
+    p.write_text(json.dumps(payload))
+    with pytest.raises(CostDBVersionError):
+        CostDB.load(p)
+    other = CostDB(schema_version=SCHEMA_VERSION + 1)
+    with pytest.raises(CostDBVersionError):
+        CostDB().merge(other)
+
+
+def test_costdb_schema_validation():
+    with pytest.raises(CostDBSchemaError):
+        CostDB().put("TPUv5e", "flash_attention", "b", _rec(time_s=-1.0))
+    with pytest.raises(CostDBSchemaError):
+        CostDB().put("TPUv5e", "flash_attention", "b", _rec(mode="guess"))
+    with pytest.raises(CostDBSchemaError):
+        CostDB.from_json({"entries": {}})
+    with pytest.raises(CostDBSchemaError):
+        CostDB.from_json({"schema_version": SCHEMA_VERSION,
+                          "entries": {"TPUv5e": {"not_a_kernel": {}}}})
+    # device types must resolve against core.cluster.PROFILES — a foreign
+    # key would otherwise KeyError deep inside the scheduler/fig8
+    with pytest.raises(CostDBSchemaError, match="TPUv4"):
+        CostDB().put("TPUv4", "flash_attention", "b", _rec())
+
+
+def test_interpolation_monotone():
+    db = CostDB()
+    db.put("TPUv5e", "flash_attention", "s1k", _rec(size=1024, time_s=1e-3))
+    db.put("TPUv5e", "flash_attention", "s4k", _rec(size=4096, time_s=9e-3))
+    db.put("TPUv5e", "flash_attention", "s16k",
+           _rec(size=16384, time_s=1.2e-1))
+    sizes = [512, 1024, 1500, 2048, 4096, 6000, 10000, 16384, 30000]
+    times = [db.interpolated_time("TPUv5e", "flash_attention", s)
+             for s in sizes]
+    assert all(t is not None and t > 0 for t in times)
+    for lo, hi in zip(times[:-1], times[1:]):
+        assert hi > lo, (times, "interpolated time must grow with size")
+    # exact at the buckets
+    assert math.isclose(times[sizes.index(4096)], 9e-3)
+    # no coverage → None (caller falls back to analytic)
+    assert db.interpolated_time("TPUv5e", "decode_attention", 4096) is None
+    assert db.interpolated_time("H800", "flash_attention", 4096) is None
+
+
+# -------------------------------------------------------- MeasuredCostModel
+def test_empty_db_falls_back_to_analytic():
+    m = MeasuredCostModel(CostDB())
+    for prof in PROFILES.values():
+        assert m.factors(prof) == ANALYTIC.factors(prof)
+
+
+def test_partial_db_falls_back_per_factor_and_type():
+    db = CostDB()
+    db.put("TPUv5e", "flash_attention", "b", _rec())
+    m = MeasuredCostModel(db)
+    v5e, v5p = PROFILES["TPUv5e"], PROFILES["TPUv5p"]
+    # covered: flash-derived factors move
+    assert m.prefill_mfu(v5e) != ANALYTIC.prefill_mfu(v5e)
+    assert m.train_mfu(v5e) != ANALYTIC.train_mfu(v5e)
+    # no decode records → HBM factors stay analytic even for the covered type
+    assert m.hbm_eff(v5e) == ANALYTIC.hbm_eff(v5e)
+    # uncovered type → fully analytic
+    assert m.factors(v5p) == ANALYTIC.factors(v5p)
+
+
+def test_measured_efficiency_derivation():
+    prof = PROFILES["TPUv5e"]
+    db = CostDB()
+    rec = _rec(time_s=1e-3)
+    db.put("TPUv5e", "flash_attention", "b", rec)
+    m = MeasuredCostModel(db)
+    want = rec.useful_flops / (rec.time_s * prof.flops)
+    assert math.isclose(m.prefill_mfu(prof), want, rel_tol=1e-9)
+    ratio = TRAIN_MFU["TPUv5e"] / PREFILL_MFU["TPUv5e"]
+    assert math.isclose(m.train_mfu(prof), want * ratio, rel_tol=1e-9)
+
+
+# -------------------------------------------------------- provider plumbing
+P_FAST = LengthDistribution(mean_len=1024, prompt_len=128)
+CFG_FAST = SchedulerConfig(tokens_per_step=2 ** 18, stable_iters=3,
+                           max_iters=8, adapt_delta=False)
+
+
+def test_schedule_identical_with_default_provider():
+    """Guard against plan drift: no provider, explicit analytic provider,
+    and an empty-DB measured overlay must all make the same decision and
+    price it identically (byte-identical costs)."""
+    cluster = paper_heterogeneous(8, 16)
+    spec = PAPER_MODELS["1.5B"]
+    base = schedule(spec, cluster, P_FAST, CFG_FAST)
+    for provider in (AnalyticCostModel(), MeasuredCostModel(CostDB())):
+        p = schedule(spec, cluster, P_FAST, CFG_FAST, cost_provider=provider)
+        assert p.signature() == base.signature()
+        assert p.cost_train == base.cost_train
+        assert p.cost_infer == base.cost_infer
+        assert p.objective == base.objective
+
+
+def test_measured_provider_changes_pricing():
+    cluster = paper_heterogeneous(8, 16)
+    spec = PAPER_MODELS["1.5B"]
+    db = CostDB()
+    # pretend H20 prefill measures far below the analytic guess
+    db.put("H20", "flash_attention", "b",
+           _rec(time_s=5e-3, useful_flops=3.5e10))
+    base = schedule(spec, cluster, P_FAST, CFG_FAST)
+    p = schedule(spec, cluster, P_FAST, CFG_FAST,
+                 cost_provider=MeasuredCostModel(db))
+    assert (p.signature() != base.signature()
+            or p.cost_infer != base.cost_infer
+            or p.cost_train != base.cost_train)
+
+
+def test_replica_throughput_uses_provider():
+    spec = PAPER_MODELS["1.5B"]
+    class Half(AnalyticCostModel):
+        def decode_engine_eff(self, profile):
+            return super().decode_engine_eff(profile) / 2.0
+    rc = replica_throughput(spec, ReplicaConfig("H20", (4,)), P_FAST)
+    rc_half = replica_throughput(spec, ReplicaConfig("H20", (4,)), P_FAST,
+                                 cost_provider=Half())
+    assert math.isclose(rc_half.tokens_per_sec, rc.tokens_per_sec / 2.0,
+                        rel_tol=1e-9)
+
+
+# ------------------------------------------------------------ strict tables
+def test_mfu_unknown_profile_raises():
+    ghost = DeviceProfile(name="GhostTPU", flops=1e12, hbm_bw=1e11,
+                          hbm_cap=8 * 1024 ** 3, intra_bw=1e10, inter_bw=1e9)
+    with pytest.raises(KeyError, match="GhostTPU"):
+        _mfu(TRAIN_MFU, ghost)
+    with pytest.raises(KeyError, match="MeasuredCostModel"):
+        ANALYTIC.decode_engine_eff(ghost)
+
+
+def test_profile_coverage():
+    for tname, table in _EFF_TABLES.items():
+        for p in PROFILES:
+            assert p in table, (tname, p)
+
+
+# ------------------------------------------------------------ sweep + tuning
+def test_tiny_sweep_smoke():
+    """Interpreter-mode sweep of one shape per kernel: every requested
+    (device × kernel) gets a record, the schema round-trips, and the
+    derived factors differ from the analytic tables."""
+    db = run_sweep(tiny=True, log=lambda s: None)
+    assert CostDB.from_json(db.to_json()).to_json() == db.to_json()
+    for dt in ("TPUv5e", "TPUv5p"):
+        for kernel in ("flash_attention", "decode_attention", "ssm_scan"):
+            recs = db.records(dt, kernel)
+            assert recs, (dt, kernel)
+            for r in recs.values():
+                assert r.mode == "interpret"      # CI runs on CPU
+                assert r.configs_tried <= 8       # the --tiny contract
+    m = MeasuredCostModel(db)
+    moved = any(
+        abs(getattr(m, key)(PROFILES[dt]) - getattr(ANALYTIC, key)(
+            PROFILES[dt])) / getattr(ANALYTIC, key)(PROFILES[dt]) > 0.05
+        for dt in ("TPUv5e", "TPUv5p")
+        for key in ("train_mfu", "prefill_mfu", "hbm_eff"))
+    assert moved, "sweep-derived factors identical to the analytic tables"
+
+
+def test_estimator_prefers_feasible_blocks():
+    space = SPACES["flash_attention"]
+    shape = ShapeBucket.make("s", B=1, S=4096, H=8, D=128)
+    prof = PROFILES["TPUv5e"]
+    # padding waste: a block far larger than the sequence must price worse
+    small = estimate_time(space, ShapeBucket.make("s", B=1, S=256, H=8,
+                                                  D=128),
+                          {"block_q": 128, "block_k": 128}, prof)
+    huge = estimate_time(space, ShapeBucket.make("s", B=1, S=256, H=8,
+                                                 D=128),
+                         {"block_q": 512, "block_k": 512}, prof)
+    assert small < huge
+    assert space.feasible(shape, {"block_q": 128, "block_k": 128}, "TPUv5e")
+
+
+def test_tuned_defaults_flow_into_ops():
+    db = CostDB()
+    db.put("TPUv5e", "flash_attention", "b",
+           _rec(config={"block_q": 256, "block_k": 128}))
+    db.put("TPUv5e", "ssm_scan", "b", _rec(config={"chunk": 128}))
+    tuning.clear_tuned()
+    try:
+        n = load_tuned_defaults(db)
+        assert n == 2
+        with tuning.override_device_type("TPUv5e"):
+            assert tuning.tuned_config("flash_attention") == {
+                "block_q": 256, "block_k": 128}
+            assert tuning.resolve("ssm_scan", "chunk", None) == 128
+            # explicit arg still wins over the tuned table
+            assert tuning.resolve("ssm_scan", "chunk", 32) == 32
+        # off-device (CPU/unknown): historical defaults
+        with tuning.override_device_type(None):
+            assert tuning.tuned_config("flash_attention") == {
+                "block_q": 128, "block_k": 128}
+    finally:
+        tuning.clear_tuned()
+
+
+def test_register_tuned_rejects_unknown_knobs():
+    with pytest.raises(KeyError):
+        tuning.register_tuned("TPUv5e", "flash_attention", {"block_z": 64})
+    with pytest.raises(KeyError):
+        tuning.register_tuned("TPUv5e", "warp_drive", {"block_q": 64})

@@ -44,6 +44,31 @@ def test_flash_attention_sweep(B, Sq, Sk, H, Hkv, D, dtype, causal, window):
                                np.asarray(ref, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("block_q,block_k", [
+    (8, 32),                     # asymmetric, q-minor
+    (32, 8),                     # asymmetric, k-minor
+    (64, 16),                    # the autotuner's small-seq candidates
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 20)])
+def test_flash_attention_block_configs(block_q, block_k, causal, window):
+    """Tuned (non-default) tilings must match the reference oracle — the
+    autotuner may pick any of these, so correctness can't be a property of
+    the 128×128 default alone."""
+    B, Sq, Sk, H, Hkv, D = 2, 48, 80, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(block_q * 100 + block_k), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D))
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, D))
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, D))
+    qp = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+    kp = jnp.broadcast_to(jnp.arange(Sk), (B, Sk))
+    out = flash_attention(q, k, v, causal, window, None, block_q, block_k,
+                          True)
+    ref = attention_ref(q, k, v, q_positions=qp, k_positions=kp,
+                        causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
 def test_flash_attention_grad_matches_ref():
     ks = jax.random.split(jax.random.PRNGKey(7), 3)
     q = jax.random.normal(ks[0], (1, 24, 2, 8))
