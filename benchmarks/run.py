@@ -23,6 +23,7 @@ MODULES = [
     "fig6_elastic_recovery",
     "fig7_multi_job",
     "fig8_autotune_gain",
+    "fig9_continuous_batching",
     "table5_scheduler_speed",
     "roofline_report",
 ]

@@ -43,11 +43,14 @@ _MICRO_SHAPES = {
     "flash_attention": ShapeBucket.make("micro", B=1, S=256, H=2, D=128),
     "decode_attention": ShapeBucket.make("micro", B=4, C=256, H=4, Hkv=2,
                                          D=128),
+    "paged_attention": ShapeBucket.make("micro", B=4, C=256, H=4, Hkv=2,
+                                        D=128),
     "ssm_scan": ShapeBucket.make("micro", B=1, S=256, H=2, D=128),
 }
 _MICRO_CONFIGS = {
     "flash_attention": {"block_q": 64, "block_k": 64},
     "decode_attention": {"block_c": 128},
+    "paged_attention": {"page_size": 128},
     "ssm_scan": {"chunk": 64},
 }
 
@@ -99,6 +102,24 @@ def _kernel_fn(kernel: str, shape: ShapeBucket,
                                     block_c=cfg["block_c"],
                                     interpret=interpret)
         return fn, (q, k, v, q_pos, k_pos)
+
+    if kernel == "paged_attention":
+        from ..kernels.paged_attention.ops import paged_decode_attention
+        pg = cfg["page_size"]
+        pages = -(-d["C"] // pg)
+        P = d["B"] * pages + 1                      # + the null page
+        q = jax.random.normal(ks[0], (d["B"], d["H"], d["D"]), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (P, pg, d["Hkv"], d["D"]), jnp.bfloat16)
+        v = jax.random.normal(ks[2], k.shape, jnp.bfloat16)
+        # shuffled tables: the gather must price non-contiguous pages
+        perm = jax.random.permutation(ks[3], jnp.arange(1, P, dtype=jnp.int32))
+        bt = perm.reshape(d["B"], pages)
+        lens = jnp.full((d["B"],), d["C"], jnp.int32)
+
+        def fn(q, k, v, bt, lens):
+            return paged_decode_attention(q, k, v, bt, lens,
+                                          interpret=interpret)
+        return fn, (q, k, v, bt, lens)
 
     if kernel == "ssm_scan":
         from ..kernels.ssm_scan.ops import mlstm_scan

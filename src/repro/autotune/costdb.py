@@ -6,7 +6,7 @@ JSON schema (``SCHEMA_VERSION`` guards compatibility):
       "schema_version": 1,
       "entries": {
         "<device_type>": {                  # DeviceProfile name, e.g. TPUv5e
-          "<kernel>": {                     # flash_attention | decode_attention | ssm_scan
+          "<kernel>": {                     # one of KERNELS below
             "<bucket>": {                   # shape-bucket name, e.g. b1_s4096_h8_d128
               "shape":        {"B": 1, "S": 4096, ...},
               "size":         4096,         # interpolation coordinate (S or C)
@@ -44,7 +44,8 @@ from typing import Dict, List, Optional, Tuple
 
 SCHEMA_VERSION = 1
 
-KERNELS = ("flash_attention", "decode_attention", "ssm_scan")
+KERNELS = ("flash_attention", "decode_attention", "paged_attention",
+           "ssm_scan")
 
 
 class CostDBVersionError(RuntimeError):

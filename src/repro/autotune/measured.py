@@ -72,10 +72,17 @@ class MeasuredCostModel(CostProvider):
             ratio = (self.fallback.train_mfu(profile)
                      / max(self.fallback.prefill_mfu(profile), 1e-9))
             out["train_mfu"] = _clip(eff * ratio)
-        decode = self.db.records(profile.name, "decode_attention").values()
-        if decode:
+        decode = list(self.db.records(profile.name,
+                                      "decode_attention").values())
+        # the paged decode kernel is the serving engine's cache-read path —
+        # its buckets sharpen the same HBM-stream estimate (absent ones
+        # change nothing: the union degenerates to the dense records)
+        paged = list(self.db.records(profile.name,
+                                     "paged_attention").values())
+        if decode or paged:
             out["hbm_eff"] = _clip(statistics.median(
-                r.hbm_efficiency(profile.hbm_bw) for r in decode))
+                r.hbm_efficiency(profile.hbm_bw) for r in decode + paged))
+        if decode:
             comp = statistics.median(
                 r.compute_efficiency(profile.flops) for r in decode)
             out["decode_compute_eff"] = _clip(

@@ -192,6 +192,54 @@ class DecodeAttentionSpace(KernelSpace):
         return B * Hkv * (C // bc)
 
 
+# ------------------------------------------------------------ paged attention
+class PagedAttentionSpace(KernelSpace):
+    """[B, H, D] query over a paged pool, grid (B, Hkv, pages).
+
+    The knob is the page size itself: the page is the kernel's KV tile
+    *and* the serving engine's allocation unit.  Small pages cut
+    internal fragmentation (a sequence wastes half a page on average)
+    but pay more grid steps and worse streaming; big pages the reverse.
+    The executed-FLOP model prices exactly that tail waste.
+    """
+
+    def _padded(self, shape: ShapeBucket, cfg: Dict[str, int]):
+        d = shape.d
+        pg = cfg["page_size"]
+        pages = -(-d["C"] // pg)
+        return d["B"], pages * pg, d["H"], d["Hkv"], \
+            _pad_up(d["D"], 128), pg, pages
+
+    def flops(self, shape, cfg):
+        B, Cp, H, Hkv, D, _, _ = self._padded(shape, cfg)
+        # resident pages are computed whole; the tail page's masked slots
+        # are executed waste, exactly like an oversized block_c
+        return 4.0 * B * H * D * Cp
+
+    def useful_flops(self, shape):
+        d = shape.d
+        return 4.0 * d["B"] * d["H"] * d["D"] * d["C"]
+
+    def bytes_moved(self, shape, cfg):
+        B, Cp, H, Hkv, D, _, pages = self._padded(shape, cfg)
+        # K+V pages streamed once per sequence (gathered, non-contiguous),
+        # q/o negligible, plus the int32 block-table row
+        return 2.0 * B * (2 * Cp * Hkv * D + 2 * H * D) + 4.0 * B * pages
+
+    def vmem_bytes(self, shape, cfg):
+        d = shape.d
+        _, _, H, Hkv, D, pg, _ = self._padded(shape, cfg)
+        G = H // Hkv
+        blocks = (G * D + 2 * pg * D) * 2                    # q, k, v bf16
+        scratch = (G * D + 2 * G) * F32
+        work = G * pg * F32 * 2
+        return 2 * blocks + scratch + work
+
+    def grid_steps(self, shape, cfg):
+        B, _, _, Hkv, _, _, pages = self._padded(shape, cfg)
+        return B * Hkv * pages
+
+
 # ---------------------------------------------------------------- mLSTM scan
 class SsmScanSpace(KernelSpace):
     """[BH, S, D] chunked recurrence, grid (BH, n_chunks)."""
@@ -258,6 +306,20 @@ DECODE_ATTENTION = DecodeAttentionSpace(
                                   B=32, C=8192, H=8, Hkv=2, D=128)],
 )
 
+PAGED_ATTENTION = PagedAttentionSpace(
+    name="paged_attention",
+    knobs={"page_size": (64, 128, 256, 512)},
+    tiny_knobs={"page_size": (64, 128, 256)},
+    shapes=[ShapeBucket.make("b32_c2048_h8_kv2_d128",
+                             B=32, C=2048, H=8, Hkv=2, D=128),
+            ShapeBucket.make("b32_c8192_h8_kv2_d128",
+                             B=32, C=8192, H=8, Hkv=2, D=128),
+            ShapeBucket.make("b32_c32768_h8_kv2_d128",
+                             B=32, C=32768, H=8, Hkv=2, D=128)],
+    tiny_shapes=[ShapeBucket.make("b32_c8192_h8_kv2_d128",
+                                  B=32, C=8192, H=8, Hkv=2, D=128)],
+)
+
 SSM_SCAN = SsmScanSpace(
     name="ssm_scan",
     knobs={"chunk": (16, 32, 64, 128, 256)},
@@ -269,5 +331,6 @@ SSM_SCAN = SsmScanSpace(
 )
 
 SPACES: Dict[str, KernelSpace] = {
-    s.name: s for s in (FLASH_ATTENTION, DECODE_ATTENTION, SSM_SCAN)
+    s.name: s for s in (FLASH_ATTENTION, DECODE_ATTENTION, PAGED_ATTENTION,
+                        SSM_SCAN)
 }

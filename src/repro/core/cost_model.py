@@ -385,6 +385,9 @@ class ReplicaCost:
     per_device_mem: float
     feasible: bool
     reason: str = ""
+    # fraction of the decode-step roofline attributable to KV-cache reads —
+    # the context-proportional share a GenTimeModel grows with length
+    kv_frac: float = 0.0
 
 
 def replica_throughput(
@@ -456,7 +459,65 @@ def replica_throughput(
         batch=batch, prefill_time=t_prefill, decode_step_time=t_decode,
         tokens_per_sec=tps, per_device_mem=mem,
         feasible=mem <= prof.hbm_cap * MEM_UTIL,
+        kv_frac=t_kv / t_decode if t_decode > 0 else 0.0,
     )
+
+
+# --------------------------------------------------------- generation time
+@dataclass
+class GenTimeModel:
+    """Length-distribution-aware generation time for one rollout.
+
+    The simulator historically charged a rollout of length L a *fixed*
+    per-token constant: (prompt + L) / h_ψ.  Real decode is not constant
+    per token — every step re-reads the KV cache, so the per-token cost
+    grows linearly with context and a long rollout is superlinearly more
+    expensive than a short one (the tail that continuous batching exists
+    to absorb).  This model prices that:
+
+        T(L) = t_prefill + a·L + b·L·(prompt + L/2)
+
+    (a = context-independent share: weight read, launch, collectives;
+    b = per-context-token share: the KV stream; prompt + L/2 is the mean
+    context over the rollout).  ``duration`` rescales T so a mean-length
+    rollout still takes (prompt + mean)/tokens_per_sec — the plan-level
+    throughput h_ψ stays authoritative, the model redistributes time over
+    the length distribution.
+
+    Coefficients come from the cost model (``from_replica_cost``) or are
+    fit to a serving engine's per-request samples (serve.feedback).
+    """
+
+    a: float                       # seconds/token, context-independent
+    b: float                       # seconds/token per context token
+    t_prefill: float = 0.0
+
+    def raw(self, prompt_len: float, length: float) -> float:
+        return (self.t_prefill + self.a * length
+                + self.b * length * (prompt_len + length / 2.0))
+
+    def duration(self, length: float, *, prompt_len: float,
+                 tokens_per_sec: float, mean_len: float) -> float:
+        """Seconds for one rollout of ``length`` on a replica whose
+        steady-state rate is ``tokens_per_sec`` under mean length
+        ``mean_len``."""
+        base = (mean_len + prompt_len) / max(tokens_per_sec, 1e-9)
+        ref = self.raw(prompt_len, mean_len)
+        if ref <= 0.0:
+            return (length + prompt_len) / max(tokens_per_sec, 1e-9)
+        return base * self.raw(prompt_len, length) / ref
+
+    @classmethod
+    def from_replica_cost(cls, rc: "ReplicaCost",
+                          P: "LengthDistribution") -> "GenTimeModel":
+        """Split the replica's decode roofline into constant vs
+        context-proportional shares (kv_frac) evaluated at the mean
+        context the roofline was priced at."""
+        per_tok = rc.decode_step_time / max(rc.batch, 1)
+        avg_ctx = P.prompt_len + P.mean() / 2.0
+        b = rc.kv_frac * per_tok / max(avg_ctx, 1.0)
+        a = (1.0 - rc.kv_frac) * per_tok
+        return cls(a=a, b=b, t_prefill=rc.prefill_time / max(rc.batch, 1))
 
 
 # --------------------------------------------------------------- weight sync

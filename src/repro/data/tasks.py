@@ -68,6 +68,19 @@ class MathTaskGenerator:
     def batch(self, n: int) -> List[MathTask]:
         return [self.sample() for _ in range(n)]
 
+    def equal_length_batch(self, n: int) -> List[MathTask]:
+        """n tasks sharing one prompt length — the case where a static
+        right-padded engine and the paged serving engine are exactly
+        equivalent (no padding → identical RoPE positions), used by the
+        engine-identity tests and fig9."""
+        bylen: dict = {}
+        while True:
+            t = self.sample()
+            bylen.setdefault(len(t.prompt_ids), []).append(t)
+            best = max(bylen.values(), key=len)
+            if len(best) >= n:
+                return best[:n]
+
     # ------------------------------------------------------------- reward
     def reward(self, task: MathTask, completion_ids: Sequence[int],
                shaped: bool = False) -> float:

@@ -1,0 +1,56 @@
+"""jit'd wrapper for paged flash-decode: model layout → kernel layout.
+
+Unlike the dense decode kernel there is no per-call tiling knob: the tile
+*is* the page, and the page size is a property of the pool the serving
+engine allocated.  The autotuner still owns that choice — the
+``paged_attention``/``page_size`` entry in ``kernels.tuning`` is what
+``serve.kv_cache.PagedKVCache`` resolves when it builds the pool.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import paged_flash_decode
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def paged_decode_attention(
+    q: jax.Array,              # [B, H, D]
+    k_pages: jax.Array,        # [P, page, Hkv, D] global pool
+    v_pages: jax.Array,        # [P, page, Hkv, D]
+    block_tables: jax.Array,   # [B, maxp] page ids (unused entries → 0)
+    lengths: jax.Array,        # [B] valid context length incl. the query
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """One decode token over a paged KV cache.  Returns [B, H, D]."""
+    B, H, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    G = H // Hkv
+    interpret = _on_cpu() if interpret is None else interpret
+    # scale from the TRUE head dim (padding below would skew it)
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+
+    pd = (-D) % 128
+    if pd:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pd)))
+        k_pages = jnp.pad(k_pages, ((0, 0), (0, 0), (0, 0), (0, pd)))
+        v_pages = jnp.pad(v_pages, ((0, 0), (0, 0), (0, 0), (0, pd)))
+
+    # every table entry is DMA'd even when its page is skipped — clamp so a
+    # stale/unset entry can never index outside the pool
+    block_tables = jnp.clip(block_tables.astype(jnp.int32), 0, P - 1)
+
+    qg = q.reshape(B, Hkv, G, D + pd)
+    o = paged_flash_decode(qg, k_pages, v_pages, block_tables,
+                           lengths.astype(jnp.int32), window=window,
+                           scale=scale, interpret=interpret)
+    return o.reshape(B, H, D + pd)[..., :D]

@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for paged decode attention.
+
+One query token per sequence attends over a *paged* KV cache: fixed-size
+pages live in a global pool ([P, page, Hkv, D]); each sequence owns an
+ordered list of page ids (its block table).  Logical slot ``i`` of a
+sequence is ``pool[table[i // page], i % page]`` and holds the token at
+absolute position ``i``; only the first ``length`` slots are valid.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_decode_attention_ref(
+    q: jax.Array,             # [B, H, D]        one new token per sequence
+    k_pages: jax.Array,       # [P, page, Hkv, D] global page pool
+    v_pages: jax.Array,       # [P, page, Hkv, D]
+    block_tables: jax.Array,  # [B, maxp] int32  page ids, row-major order
+    lengths: jax.Array,       # [B] int32        valid context incl. the query
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, H, D = q.shape
+    _, page, Hkv, _ = k_pages.shape
+    maxp = block_tables.shape[1]
+    C = maxp * page
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    kd = k_pages[block_tables].reshape(B, C, Hkv, D).astype(jnp.float32)
+    vd = v_pages[block_tables].reshape(B, C, Hkv, D).astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bchd->bhgc", qf, kd) * scale
+
+    pos = jnp.arange(C, dtype=jnp.int32)[None, :]              # logical slot
+    ok = pos < lengths[:, None]
+    if window is not None:
+        ok = ok & (pos > (lengths[:, None] - 1) - window)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    any_ok = jnp.any(ok, axis=-1)[:, None, None, None]
+    o = jnp.einsum("bhgc,bchd->bhgd", p, vd)
+    o = jnp.where(any_ok, o, 0.0)
+    return o.reshape(B, H, D).astype(q.dtype)

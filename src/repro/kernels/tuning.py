@@ -23,6 +23,9 @@ BUILTIN_DEFAULTS: Dict[str, Dict[str, int]] = {
     "flash_attention": {"block_q": 128, "block_k": 128},
     "decode_attention": {"block_c": 512},
     "ssm_scan": {"chunk": 64},
+    # consumed by serve.kv_cache when sizing the paged pool (the page IS
+    # the kernel tile, so the knob lives with the cache, not the call)
+    "paged_attention": {"page_size": 128},
 }
 
 # (device_type, kernel) -> {knob: value}

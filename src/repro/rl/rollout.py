@@ -39,10 +39,12 @@ class GenConfig:
 
 class RolloutEngine:
     def __init__(self, cfg: ModelConfig, store: WeightStore,
-                 gen: GenConfig = GenConfig(), rng_seed: int = 0):
+                 gen: Optional[GenConfig] = None, rng_seed: int = 0):
         self.cfg = cfg
         self.store = store
-        self.gen = gen
+        # a dataclass default argument would be ONE shared instance across
+        # every engine — mutating one engine's gen would leak into all
+        self.gen = gen if gen is not None else GenConfig()
         self.model = get_model(cfg)
         self._rng = jax.random.PRNGKey(rng_seed)
         self._decode = jax.jit(
@@ -135,5 +137,9 @@ class RolloutEngine:
             ))
         metrics = {"weight_swaps": swaps, "versions": sorted(versions_used),
                    "mean_len": float(np.mean([len(r.completion_ids)
-                                              for r in rollouts]))}
+                                              for r in rollouts])),
+                   # every decode step runs ALL B rows, finished or not —
+                   # the static-batch waste fig9 compares against
+                   "decode_steps": t - 1,
+                   "decode_slot_steps": (t - 1) * B}
         return rollouts, metrics

@@ -1,0 +1,28 @@
+"""Continuous-batching generation subsystem (PR 4).
+
+The static ``rl.rollout.RolloutEngine`` right-pads a batch and burns
+decode slots on finished rows; the paper prices generation as if a real
+serving engine kept the HBM-bound decode loop full.  This package *is*
+that engine:
+
+  * ``kv_cache``  — paged KV pool: fixed-size blocks, per-sequence block
+    tables, alloc/free free-list, occupancy stats.
+  * ``model``     — paged forward passes (chunked prefill + batched decode
+    over the pool) for the dense-transformer family, backed by the
+    ``kernels.paged_attention`` Pallas kernel on TPU.
+  * ``engine``    — the continuous scheduler: per-step admission from the
+    queue, evict-on-EOS, interleaved prefill-chunk + decode steps under a
+    token budget, segment-boundary weight swap with oldest-version
+    staleness accounting (AReaL semantics, unchanged from the static
+    engine).
+  * ``feedback``  — the loop back to the planner: ``ServingCostModel``
+    (a ``CostProvider`` whose decode_engine_eff comes from *observed*
+    serving behavior) and gen-time fitting for the simulator's
+    length-distribution-aware generation-time model.
+"""
+from .engine import PagedEngine, ServeConfig
+from .feedback import EngineReport, ServingCostModel, fit_gen_time
+from .kv_cache import PagedKVCache
+
+__all__ = ["PagedEngine", "ServeConfig", "PagedKVCache",
+           "EngineReport", "ServingCostModel", "fit_gen_time"]

@@ -1,0 +1,435 @@
+"""Continuous-batching generation engine over the paged KV cache.
+
+The static ``RolloutEngine`` admits one right-padded batch, decodes every
+row until the *slowest* row finishes, and only then returns — finished
+rows burn decode slots, and the slot count is frozen at batch boundaries.
+This engine runs the standard serving loop instead:
+
+  per step:  admit-from-queue  →  one batched decode token for every
+             active sequence  →  prefill chunks with the leftover token
+             budget  →  evict finished sequences (EOS / per-request cap),
+             freeing their pages and slots for the queue.
+
+AReaL semantics are preserved exactly: generation proceeds in *segments*
+(``GenConfig.segment`` decode steps); at segment boundaries the engine
+checks the weight store and swaps mid-sequence, every in-flight request
+records the new contributing version, and a finished trajectory is
+accounted against the OLDEST version it touched (the conservative choice
+— ``rl.buffer`` admission keeps holding unchanged).
+
+When the page pool runs dry mid-decode the youngest sequence is preempted
+vLLM-style: its pages are freed and the request returns to the head of
+the queue for full recomputation (work is lost, correctness is not).
+
+``generate(tasks)`` matches the static engine's surface (rollouts +
+metrics) so launchers and trainers can swap engines; the stepwise
+``submit``/``step`` API is what tests and serving drivers use to
+interleave weight publishes with generation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tasks import MathTask
+from repro.models.api import ModelConfig
+from repro.rl.buffer import Rollout
+from repro.rl.rollout import GenConfig
+from repro.rl.weight_sync import WeightStore
+
+from .kv_cache import PagedKVCache
+from .model import paged_decode_step, paged_prefill_chunk
+
+
+@dataclass
+class ServeConfig:
+    max_slots: int = 8                 # concurrent sequences (decode batch)
+    max_len: int = 512                 # prompt + completion cap per request
+    page_size: Optional[int] = None    # None → tuned table (kernels.tuning)
+    num_pages: Optional[int] = None    # None → worst case (paging never blocks)
+    prefill_chunk: int = 32            # tokens per prefill call
+    token_budget: Optional[int] = None # per step; None → slots + one chunk
+
+
+@dataclass
+class EngineStats:
+    max_slots: int = 0
+    decode_steps: int = 0              # batched decode invocations
+    decode_slot_steps: int = 0         # Σ active slots over decode steps
+    prefill_tokens: int = 0
+    tokens_generated: int = 0          # completion tokens kept
+    preempted_slot_steps: int = 0      # decode work discarded by preemption
+    weight_swaps: int = 0
+    admissions: int = 0
+    preemptions: int = 0
+    completed: int = 0
+    wall_time_s: float = 0.0
+    page_occ_sum: float = 0.0
+    pool_util_sum: float = 0.0
+    occ_samples: int = 0
+    gen_samples: List[Tuple[int, float]] = field(default_factory=list)
+
+    @property
+    def slot_occupancy(self) -> float:
+        """Kept-token fraction of decode slot capacity — the measured analog
+        of the cost model's DECODE_ENGINE_EFF 'continuous batching gaps'.
+        Slot-steps a preemption discarded consumed capacity but kept
+        nothing, so they count against the engine."""
+        cap = self.decode_steps * self.max_slots
+        kept = self.decode_slot_steps - self.preempted_slot_steps
+        return kept / cap if cap else 1.0
+
+    @property
+    def page_occupancy(self) -> float:
+        return (self.page_occ_sum / self.occ_samples
+                if self.occ_samples else 1.0)
+
+
+@dataclass
+class _Request:
+    idx: int                           # submission order (rollout ordering)
+    task: Any
+    group_id: int
+    prompt: List[int]
+    max_new: int
+    state: str = "QUEUED"              # QUEUED | PREFILL | DECODE
+    slot: int = -1
+    prefill_done: int = 0
+    tokens: List[int] = field(default_factory=list)
+    logps: List[float] = field(default_factory=list)
+    versions: Set[int] = field(default_factory=set)
+    t_admit: float = 0.0
+
+    @property
+    def plen(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def written(self) -> int:
+        """Logical slots holding K/V (prompt + all but the last sampled)."""
+        return self.plen + max(len(self.tokens) - 1, 0)
+
+    @property
+    def finished(self) -> bool:
+        return bool(self.tokens) and len(self.tokens) >= self.max_new
+
+
+class PagedEngine:
+    def __init__(self, cfg: ModelConfig, store: WeightStore,
+                 gen: Optional[GenConfig] = None,
+                 serve: Optional[ServeConfig] = None, rng_seed: int = 0):
+        if cfg.family not in ("dense", "vlm"):
+            raise ValueError(
+                f"paged serving covers the dense-transformer family; "
+                f"{cfg.family!r} models use the static RolloutEngine")
+        self.cfg = cfg
+        self.store = store
+        self.gen = gen or GenConfig()
+        self.serve = serve or ServeConfig()
+        self._rng = jax.random.PRNGKey(rng_seed)
+        self._params, self._version = store.fetch(dtype=cfg.jdtype)
+        self.kv = PagedKVCache(cfg, max_slots=self.serve.max_slots,
+                               max_len=self.serve.max_len,
+                               num_pages=self.serve.num_pages,
+                               page_size=self.serve.page_size)
+        self.stats = EngineStats(max_slots=self.serve.max_slots)
+        self._queue: List[_Request] = []
+        self._active: Dict[int, _Request] = {}       # slot → request
+        self._done: List[_Request] = []
+        self._decode = jax.jit(
+            lambda p, kp, vp, bt, tok, pos:
+            paged_decode_step(p, self.cfg, kp, vp, bt, tok, pos))
+        self._prefill = jax.jit(
+            lambda p, kp, vp, row, toks, p0:
+            paged_prefill_chunk(p, self.cfg, kp, vp, row, toks, p0))
+
+    # ---------------------------------------------------------------- utils
+    def _split(self):
+        self._rng, k = jax.random.split(self._rng)
+        return k
+
+    def _sample(self, logits: jax.Array, key) -> Tuple[np.ndarray, np.ndarray]:
+        """logits [..., padded_vocab] → (token ids, chosen logps)."""
+        logits = logits[..., :self.cfg.vocab].astype(jnp.float32)
+        if self.gen.greedy:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            tok = jax.random.categorical(
+                key, logits / self.gen.temperature, axis=-1).astype(jnp.int32)
+        logp = jnp.take_along_axis(jax.nn.log_softmax(logits, axis=-1),
+                                   tok[..., None], axis=-1)[..., 0]
+        return np.asarray(tok), np.asarray(logp)
+
+    def _maybe_swap_weights(self) -> None:
+        if self.store.version > self._version:
+            self._params, self._version = self.store.fetch(
+                dtype=self.cfg.jdtype)
+            self.stats.weight_swaps += 1
+            for r in self._active.values():
+                r.versions.add(self._version)
+
+    # ------------------------------------------------------------ admission
+    def submit(self, tasks: Sequence[MathTask], *, group_offset: int = 0,
+               max_new_per_task: Optional[Sequence[int]] = None) -> None:
+        base = len(self._queue) + len(self._active) + len(self._done)
+        for j, t in enumerate(tasks):
+            max_new = (self.gen.max_new_tokens if max_new_per_task is None
+                       else int(max_new_per_task[j]))
+            total = len(t.prompt_ids) + max_new
+            if total > self.serve.max_len:
+                raise ValueError(f"request needs {total} > "
+                                 f"max_len={self.serve.max_len} slots")
+            if self.kv.pages_needed(total) > self.kv.num_pages - 1:
+                raise ValueError("pool smaller than one full sequence")
+            self._queue.append(_Request(idx=base + j, task=t,
+                                        group_id=group_offset + j,
+                                        prompt=list(t.prompt_ids),
+                                        max_new=max_new))
+
+    def _admit(self, now: float) -> None:
+        while self._queue and self.kv.free_slots:
+            req = self._queue[0]
+            # prompt pages + one decode-headroom page — but never demand
+            # more than the request will EVER need, or a short-completion
+            # request whose total exactly fits the pool could never admit
+            need = min(self.kv.pages_needed(req.plen) + 1,
+                       self.kv.pages_needed(req.plen + req.max_new))
+            if self.kv.free_pages < need:
+                break
+            self._queue.pop(0)
+            slot = self.kv.alloc_slot()
+            ok = self.kv.ensure(slot, req.plen)
+            assert ok, "admission checked free_pages"
+            req.slot, req.state = slot, "PREFILL"
+            req.t_admit = now
+            req.versions = {self._version}
+            self._active[slot] = req
+            self.stats.admissions += 1
+
+    # ------------------------------------------------------------- eviction
+    def _finish(self, req: _Request, now: float) -> None:
+        self.kv.free_slot(req.slot)
+        del self._active[req.slot]
+        req.slot = -1
+        self._done.append(req)
+        self.stats.completed += 1
+        self.stats.gen_samples.append((len(req.tokens), now - req.t_admit))
+
+    def _preempt_youngest(self) -> bool:
+        """Pool exhausted: kick the most recently admitted sequence back to
+        the queue head for recomputation (vLLM recompute policy).  Both
+        decoding and mid-prefill sequences are candidates — only the oldest
+        decoding sequence is protected, so forward progress is guaranteed."""
+        decoding = [r for r in self._active.values() if r.state == "DECODE"]
+        protected = (min(decoding, key=lambda r: r.t_admit)
+                     if decoding else None)
+        victims = [r for r in self._active.values() if r is not protected]
+        if not victims:
+            return False
+        victim = max(victims, key=lambda r: r.t_admit)
+        self.kv.free_slot(victim.slot)
+        del self._active[victim.slot]
+        victim.slot = -1
+        victim.state = "QUEUED"
+        victim.prefill_done = 0
+        # the victim's tokens are discarded and recomputed: un-count them
+        # so kept-token metrics (occupancy, tokens/s) stay honest
+        self.stats.tokens_generated -= len(victim.tokens)
+        self.stats.preempted_slot_steps += max(len(victim.tokens) - 1, 0)
+        victim.tokens, victim.logps = [], []
+        self._queue.insert(0, victim)
+        self.stats.preemptions += 1
+        return True
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> bool:
+        """One engine iteration (admit → decode → prefill → evict).
+        Returns False when nothing is left to do."""
+        if not (self._queue or self._active):
+            return False
+        now = time.time()
+        self._admit(now)
+        try:
+            return self._step_body(now)
+        finally:
+            # wall time accrues per step so the stepwise submit/step/collect
+            # path reports real lifetime throughput, not 0
+            self.stats.wall_time_s += time.time() - now
+
+    def _step_body(self, now: float) -> bool:
+        decode_slots = sorted(s for s, r in self._active.items()
+                              if r.state == "DECODE")
+        budget = (self.serve.token_budget
+                  or self.serve.max_slots + self.serve.prefill_chunk)
+
+        if decode_slots:
+            # grow every sequence's table for the token it is about to
+            # write; preempt youngest-first until the pool covers the rest
+            while True:
+                lacking = [s for s in decode_slots
+                           if not self.kv.ensure(s, self._active[s].written
+                                                 + 1)]
+                if not lacking:
+                    break
+                if not self._preempt_youngest():
+                    raise RuntimeError(
+                        "page pool exhausted with a single sequence active "
+                        "— num_pages cannot cover max_len")
+                decode_slots = [s for s in decode_slots if s in self._active]
+            if decode_slots:
+                self._decode_batch(decode_slots, now)
+                budget -= len(decode_slots)
+
+        for slot in sorted(s for s, r in self._active.items()
+                           if r.state == "PREFILL"):
+            if budget <= 0:
+                break
+            budget -= self._prefill_one(self._active[slot])
+
+        for slot in sorted(self._active):
+            req = self._active[slot]
+            if req.state == "DECODE" and req.finished:
+                self._finish(req, now)
+        return True
+
+    def _decode_batch(self, slots: List[int], now: float) -> None:
+        if self.stats.decode_steps % max(self.gen.segment, 1) == 0:
+            self._maybe_swap_weights()
+        S = self.serve.max_slots
+        token = np.zeros((S,), np.int32)
+        pos = np.zeros((S,), np.int32)
+        # rows not decoding this step (idle OR mid-prefill) get a zeroed
+        # table row: their dummy write lands in the null page instead of a
+        # prefilling sequence's first real page
+        bt = np.zeros_like(self.kv.block_tables)
+        for s in slots:
+            r = self._active[s]
+            token[s] = r.tokens[-1]
+            pos[s] = r.written                       # slot the token lands in
+            bt[s] = self.kv.block_tables[s]
+        logits, nk, nv = self._decode(
+            self._params, self.kv.k_pages, self.kv.v_pages,
+            jnp.asarray(bt), jnp.asarray(token), jnp.asarray(pos))
+        self.kv.k_pages, self.kv.v_pages = nk, nv
+        toks, logps = self._sample(logits, self._split())
+        for s in slots:
+            r = self._active[s]
+            r.tokens.append(int(toks[s]))
+            r.logps.append(float(logps[s]))
+            self.kv.seq_lens[s] = r.written
+            self.stats.tokens_generated += 1
+            if r.tokens[-1] == self.gen.eos_id:
+                r.max_new = len(r.tokens)               # stop this row
+        self.stats.decode_steps += 1
+        self.stats.decode_slot_steps += len(slots)
+        occ = self.kv.occupancy()
+        self.stats.page_occ_sum += occ["page_occupancy"]
+        self.stats.pool_util_sum += occ["pool_util"]
+        self.stats.occ_samples += 1
+
+    def _prefill_one(self, req: _Request) -> int:
+        chunk = self.serve.prefill_chunk
+        n = min(chunk, req.plen - req.prefill_done)
+        toks = np.zeros((chunk,), np.int32)
+        toks[:n] = req.prompt[req.prefill_done:req.prefill_done + n]
+        # pad rows write past the prompt: beyond the allocated pages they
+        # land in the null page, inside them they hit slots this sequence
+        # overwrites at exactly those positions later, and every read masks
+        # by current length — unobservable either way
+        ok = self.kv.ensure(req.slot, req.plen)
+        assert ok, "admission reserved these"
+        logits, nk, nv = self._prefill(
+            self._params, self.kv.k_pages, self.kv.v_pages,
+            jnp.asarray(self.kv.block_tables[req.slot]),
+            jnp.asarray(toks), jnp.int32(req.prefill_done))
+        self.kv.k_pages, self.kv.v_pages = nk, nv
+        req.prefill_done += n
+        self.stats.prefill_tokens += n
+        if req.prefill_done >= req.plen:
+            first, logp = self._sample(logits[n - 1], self._split())
+            req.tokens.append(int(first))
+            req.logps.append(float(logp))
+            req.state = "DECODE"
+            self.kv.seq_lens[req.slot] = req.plen
+            self.stats.tokens_generated += 1
+            if req.tokens[-1] == self.gen.eos_id:
+                req.max_new = 1                       # EOS straight away
+        return n
+
+    # -------------------------------------------------------------- frontend
+    @property
+    def pending(self) -> int:
+        return len(self._queue) + len(self._active)
+
+    def drain(self) -> None:
+        while self.step():
+            pass
+
+    def collect(self, since: int = 0) -> Tuple[List[Rollout], Dict]:
+        """Package finished requests (submission order) into rollouts +
+        *lifetime* engine metrics — the stepwise counterpart of
+        ``generate`` (which reports per-call deltas)."""
+        return self._package(since, wall_s=self.stats.wall_time_s,
+                             base=EngineStats(max_slots=self.serve.max_slots))
+
+    def generate(self, tasks: Sequence[MathTask], *, group_offset: int = 0,
+                 max_new_per_task: Optional[Sequence[int]] = None,
+                 ) -> Tuple[List[Rollout], Dict]:
+        """Static-engine-compatible frontend: one completion per task.
+        Metrics are per-call deltas, like the static engine's."""
+        t0 = time.time()
+        n_before = len(self._done)
+        base = dataclasses.replace(self.stats, gen_samples=[])
+        self.submit(tasks, group_offset=group_offset,
+                    max_new_per_task=max_new_per_task)
+        self.drain()               # step() accrues stats.wall_time_s itself
+        dt = time.time() - t0
+        return self._package(n_before, wall_s=dt, base=base)
+
+    def _package(self, since: int, *, wall_s: float,
+                 base: "EngineStats") -> Tuple[List[Rollout], Dict]:
+        new = sorted(self._done[since:], key=lambda r: r.idx)
+        rollouts, versions_used = [], set()
+        for r in new:
+            versions_used |= r.versions
+            comp = list(r.tokens)
+            if self.gen.eos_id in comp:                # cut at first EOS
+                comp = comp[:comp.index(self.gen.eos_id) + 1]
+            rollouts.append(Rollout(
+                prompt_ids=list(r.prompt),
+                completion_ids=comp,
+                behavior_logp=np.asarray(r.logps[:len(comp)], np.float32),
+                version=min(r.versions),               # conservative staleness
+                group_id=r.group_id,
+                task=r.task,
+            ))
+        st = self.stats
+        steps = st.decode_steps - base.decode_steps
+        slot_steps = st.decode_slot_steps - base.decode_slot_steps
+        kept_steps = slot_steps - (st.preempted_slot_steps
+                                   - base.preempted_slot_steps)
+        occ_n = st.occ_samples - base.occ_samples
+        tokens = st.tokens_generated - base.tokens_generated
+        metrics = {
+            "weight_swaps": st.weight_swaps - base.weight_swaps,
+            "versions": sorted(versions_used),
+            "mean_len": (float(np.mean([len(r.completion_ids)
+                                        for r in rollouts]))
+                         if rollouts else 0.0),
+            "decode_steps": steps,
+            "decode_slot_steps": slot_steps,
+            "prefill_tokens": st.prefill_tokens - base.prefill_tokens,
+            "slot_occupancy": (kept_steps / (steps * st.max_slots)
+                               if steps else 1.0),
+            "page_occupancy": ((st.page_occ_sum - base.page_occ_sum) / occ_n
+                               if occ_n else 1.0),
+            "preemptions": st.preemptions - base.preemptions,
+            "tokens_per_sec": tokens / wall_s if wall_s > 0 else 0.0,
+        }
+        return rollouts, metrics

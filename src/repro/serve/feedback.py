@@ -1,0 +1,108 @@
+"""Serving → scheduler feedback: measured generation behavior as costs.
+
+Generation-side analog of ``autotune.MeasuredCostModel``: kernel
+microbenchmarks can measure the decode roofline, but the *engine-level*
+factor — continuous-batching gaps, admission stalls, sampling and
+scheduling overhead — is exactly what no microbenchmark sees (the
+analytic tables guess it as ``DECODE_ENGINE_EFF``).  The engine measures
+it directly: ``slot_occupancy`` is the kept-token fraction of decode slot
+capacity, the thing the constant approximates.  ``ServingCostModel``
+overlays that observation per device type onto any fallback provider, so
+``schedule``/``schedule_pool`` price rollout replicas (h_ψ) from observed
+serving behavior; with no report for a type it defers to the fallback,
+and with no provider at all plans stay bit-identical to the analytic
+tables.
+
+``fit_gen_time`` turns the engine's per-request (length, seconds) samples
+into a ``core.cost_model.GenTimeModel`` — the length-distribution-aware
+generation-time model the simulator consumes instead of a fixed
+per-token constant.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.autotune.measured import _clip       # shared [floor, ceil] clamp
+from repro.core.cluster import DeviceProfile
+from repro.core.cost_model import (ANALYTIC, CostProvider, GenTimeModel)
+
+from .engine import EngineStats
+
+
+@dataclass(frozen=True)
+class EngineReport:
+    """One engine's observed serving behavior on one device type."""
+
+    device_type: str               # DeviceProfile name, e.g. "TPUv5e"
+    engine: str                    # "paged" | "static"
+    tokens_per_sec: float
+    slot_occupancy: float          # kept tokens / (decode steps × slots)
+    page_occupancy: float          # live tokens / allocated page capacity
+    batch_slots: int
+    decode_steps: int
+
+    @classmethod
+    def from_stats(cls, stats: EngineStats, device_type: str,
+                   *, engine: str = "paged",
+                   tokens_per_sec: float = 0.0) -> "EngineReport":
+        return cls(device_type=device_type, engine=engine,
+                   tokens_per_sec=tokens_per_sec,
+                   slot_occupancy=stats.slot_occupancy,
+                   page_occupancy=stats.page_occupancy,
+                   batch_slots=stats.max_slots,
+                   decode_steps=stats.decode_steps)
+
+
+class ServingCostModel(CostProvider):
+    """CostProvider overlay: decode_engine_eff from engine reports."""
+
+    name = "serving"
+
+    def __init__(self, reports: Union[Iterable[EngineReport],
+                                      Dict[str, EngineReport]],
+                 fallback: Optional[CostProvider] = None):
+        if isinstance(reports, dict):
+            self.reports = dict(reports)
+        else:
+            self.reports = {r.device_type: r for r in reports}
+        self.fallback = fallback if fallback is not None else ANALYTIC
+
+    def decode_engine_eff(self, profile: DeviceProfile) -> float:
+        rep = self.reports.get(profile.name)
+        if rep is None or rep.decode_steps <= 0:
+            return self.fallback.decode_engine_eff(profile)
+        return _clip(rep.slot_occupancy)
+
+    # every roofline-level factor defers to the fallback provider
+    def train_mfu(self, profile: DeviceProfile) -> float:
+        return self.fallback.train_mfu(profile)
+
+    def prefill_mfu(self, profile: DeviceProfile) -> float:
+        return self.fallback.prefill_mfu(profile)
+
+    def decode_compute_eff(self, profile: DeviceProfile) -> float:
+        return self.fallback.decode_compute_eff(profile)
+
+    def hbm_eff(self, profile: DeviceProfile) -> float:
+        return self.fallback.hbm_eff(profile)
+
+
+def fit_gen_time(samples: Sequence[Tuple[int, float]],
+                 prompt_len: float = 0.0) -> Optional[GenTimeModel]:
+    """Least-squares fit of T(L) = t_prefill + a·L + b·L·(prompt + L/2)
+    over the engine's per-request (completion length, seconds) samples.
+    Needs ≥3 distinct lengths to resolve the quadratic; returns None
+    otherwise (callers keep the analytic model)."""
+    if len({ln for ln, _ in samples}) < 3:
+        return None
+    L = np.asarray([ln for ln, _ in samples], np.float64)
+    T = np.asarray([t for _, t in samples], np.float64)
+    X = np.stack([np.ones_like(L), L, L * (prompt_len + L / 2.0)], axis=1)
+    coef, *_ = np.linalg.lstsq(X, T, rcond=None)
+    tp, a, b = (max(float(c), 0.0) for c in coef)
+    if a == 0.0 and b == 0.0:
+        return None
+    return GenTimeModel(a=a, b=b, t_prefill=tp)

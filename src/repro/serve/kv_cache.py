@@ -1,0 +1,124 @@
+"""Paged KV cache: fixed-size blocks, block tables, alloc/free pool.
+
+Device side, the cache is two pools ``[L, P, page, Hkv, D]`` (keys and
+values for every layer) plus an int32 block table ``[max_slots, maxp]``;
+host side, this class is the allocator: a LIFO free list of page ids, a
+free list of sequence slots, and per-slot length bookkeeping.  Pages are
+allocated lazily as sequences grow (admission only reserves the prompt),
+so pool memory tracks *actual* context, not the right-padded worst case —
+the whole point of paging.
+
+Page id 0 is reserved as the null sink: unused block-table entries point
+at it, and the batched decode step routes inactive slots' writes there
+(the gather-based kernel DMAs every table entry, so all entries must name
+a valid page).
+
+``page_size=None`` resolves through the per-device-type tuned table
+(``kernels.tuning``; the autotuner's ``paged_attention`` winners), falling
+back to 128.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import tuning
+from repro.models.api import ModelConfig
+
+
+class PagedKVCache:
+    def __init__(self, cfg: ModelConfig, *, max_slots: int, max_len: int,
+                 num_pages: Optional[int] = None,
+                 page_size: Optional[int] = None):
+        self.cfg = cfg
+        self.page = tuning.resolve("paged_attention", "page_size", page_size)
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.maxp = -(-max_len // self.page)           # pages per sequence
+        # default pool: worst case + null page — callers shrink num_pages to
+        # make paging bite (admission then waits on frees)
+        self.num_pages = (1 + max_slots * self.maxp if num_pages is None
+                          else num_pages)
+        if self.num_pages < 2:
+            raise ValueError("pool needs the null page plus ≥1 usable page")
+
+        shape = (cfg.n_layers, self.num_pages, self.page, cfg.n_kv_heads,
+                 cfg.hd)
+        self.k_pages = jnp.zeros(shape, cfg.jdtype)
+        self.v_pages = jnp.zeros(shape, cfg.jdtype)
+        self.block_tables = np.zeros((max_slots, self.maxp), np.int32)
+        self.seq_lens = np.zeros((max_slots,), np.int32)
+
+        self._free_pages: List[int] = list(range(self.num_pages - 1, 0, -1))
+        self._free_slots: List[int] = list(range(max_slots - 1, -1, -1))
+        self._pages_of: Dict[int, List[int]] = {}
+
+    # -------------------------------------------------------------- alloc
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 0) // self.page)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free_pages)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free_slots)
+
+    def alloc_slot(self) -> Optional[int]:
+        if not self._free_slots:
+            return None
+        slot = self._free_slots.pop()
+        self._pages_of[slot] = []
+        self.seq_lens[slot] = 0
+        self.block_tables[slot, :] = 0
+        return slot
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot``'s block table to cover ``n_tokens`` logical slots.
+        False (with no partial allocation) when the pool can't cover it."""
+        owned = self._pages_of[slot]
+        need = self.pages_needed(n_tokens) - len(owned)
+        if need <= 0:
+            return True
+        if need > len(self._free_pages) or n_tokens > self.max_len:
+            return False
+        for _ in range(need):
+            pid = self._free_pages.pop()
+            self.block_tables[slot, len(owned)] = pid
+            owned.append(pid)
+        return True
+
+    def free_slot(self, slot: int) -> None:
+        for pid in self._pages_of.pop(slot):
+            self._free_pages.append(pid)
+        self.block_tables[slot, :] = 0
+        self.seq_lens[slot] = 0
+        self._free_slots.append(slot)
+
+    # -------------------------------------------------------------- stats
+    @property
+    def pages_in_use(self) -> int:
+        return sum(len(p) for p in self._pages_of.values())
+
+    @property
+    def slots_in_use(self) -> int:
+        return self.max_slots - len(self._free_slots)
+
+    def page_occupancy(self) -> float:
+        """Fraction of allocated page capacity holding live tokens — the
+        internal-fragmentation metric the page-size knob trades against."""
+        cap = self.pages_in_use * self.page
+        return float(int(self.seq_lens.sum()) / cap) if cap else 1.0
+
+    def occupancy(self) -> Dict[str, float]:
+        usable = self.num_pages - 1
+        return {
+            "pages_in_use": float(self.pages_in_use),
+            "pages_total": float(usable),
+            "pool_util": self.pages_in_use / usable if usable else 0.0,
+            "page_occupancy": self.page_occupancy(),
+            "slots_in_use": float(self.slots_in_use),
+        }

@@ -1,0 +1,144 @@
+"""Paged forward passes for the dense-transformer family.
+
+Mirrors ``models/transformer.py``'s prefill/decode math exactly (same
+blocks, same rope, same masked-softmax attention semantics) but reads and
+writes the **paged** cache: per step, new K/V land at logical slot
+``pos`` → physical ``(table[pos // page], pos % page)``, and attention
+runs either through the Pallas ``paged_attention`` kernel
+(``cfg.use_pallas``) or a gather + ``blocks.attention`` reference path
+whose extra pool slots are exactly masked — so a paged greedy decode is
+token-identical to the dense engine's.
+
+Prefill is *chunked* (one sequence, ``chunk`` tokens per call): the chunk
+writes its K/V into the pages first, then attends over the gathered table
+with position masks, which makes intra-chunk causality and attention to
+earlier chunks one code path.  The final (ragged) chunk is right-padded;
+pad writes land at logical slots the sequence will overwrite at exactly
+those positions later, and every read masks by current length, so they
+are unobservable.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import blocks
+from repro.models.api import ModelConfig
+from repro.models.transformer import _ffn, embed_inputs, unembed
+
+Array = jax.Array
+
+
+def _gather_attention(q: Array, kp: Array, vp: Array, table: Array,
+                      q_positions: Array, written: Array,
+                      cfg: ModelConfig) -> Array:
+    """Reference path: densify the pool rows named by ``table`` and run the
+    shared masked attention.  ``written`` [B] = logical slots written so
+    far; slots beyond it hold stale pool data and are masked out."""
+    B = q.shape[0]
+    page = kp.shape[1]
+    C = table.shape[1] * page
+    written = jnp.broadcast_to(jnp.atleast_1d(written), (B,))
+    kd = kp[table].reshape(B, C, *kp.shape[2:])
+    vd = vp[table].reshape(B, C, *vp.shape[2:])
+    slot = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), (B, C))
+    k_pos = jnp.where(slot < written[:, None], slot, -(2 ** 30))
+    return blocks.attention(q, kd, vd, q_positions=q_positions,
+                            k_positions=k_pos, causal=True,
+                            window=cfg.attn_window,
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+
+
+def paged_decode_step(params: Dict, cfg: ModelConfig, k_pages: Array,
+                      v_pages: Array, block_tables: Array, token: Array,
+                      pos: Array) -> Tuple[Array, Array, Array]:
+    """One decode token for every slot: token [S], pos [S] →
+    (logits [S, padded_vocab], k_pages, v_pages).
+
+    Inactive slots ride along with pos=0 and an all-zero table row, so
+    their writes land in the null page and their logits are garbage the
+    engine discards.
+    """
+    S = token.shape[0]
+    page = k_pages.shape[2]
+    h = jnp.take(params["embed"], token[:, None], axis=0)          # [S,1,d]
+    positions = pos[:, None]
+    page_of = block_tables[jnp.arange(S), pos // page]             # [S]
+    off = pos % page
+
+    def body(h, xs):
+        lp, kp, vp = xs                      # kp: [P, page, Hkv, D]
+        x = blocks.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = blocks.qkv_project(x, lp["attn"], cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.hd)
+        q = blocks.apply_rope(q, positions, cfg.rope_theta)
+        k = blocks.apply_rope(k, positions, cfg.rope_theta)
+        kp = kp.at[page_of, off].set(k[:, 0].astype(kp.dtype))
+        vp = vp.at[page_of, off].set(v[:, 0].astype(vp.dtype))
+        if cfg.use_pallas:
+            from repro.kernels.paged_attention.ops import \
+                paged_decode_attention
+            o = paged_decode_attention(q[:, 0], kp, vp, block_tables,
+                                       pos + 1,
+                                       window=cfg.attn_window)[:, None]
+        else:
+            o = _gather_attention(q, kp, vp, block_tables, positions,
+                                  pos + 1, cfg)
+        h = h + blocks.out_project(o, lp["attn"])
+        x = blocks.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+        h = h + _ffn(x, lp, cfg)
+        return h, (kp, vp)
+
+    h, (nk, nv) = lax.scan(body, h, (params["layers"], k_pages, v_pages),
+                           unroll=cfg.scan_unroll)
+    logits = unembed(params, cfg, h[:, 0])
+    return logits, nk, nv
+
+
+def paged_prefill_chunk(params: Dict, cfg: ModelConfig, k_pages: Array,
+                        v_pages: Array, table_row: Array, tokens: Array,
+                        p0: Array) -> Tuple[Array, Array, Array]:
+    """Process ``tokens`` [chunk] of one sequence starting at absolute
+    position ``p0``: (logits [chunk, padded_vocab], k_pages, v_pages).
+
+    Writes the chunk's K/V into the pages, then attends over the whole
+    gathered table — earlier chunks and intra-chunk causality fall out of
+    the position masks.  The caller reads the logits row of the last
+    *valid* token when the chunk completes the prompt.
+    """
+    (C,) = tokens.shape
+    page = k_pages.shape[2]
+    maxp = table_row.shape[0]
+    h = embed_inputs(params, cfg, tokens[None])                     # [1,C,d]
+    positions = (p0 + jnp.arange(C, dtype=jnp.int32))[None]         # [1,C]
+    pidx = positions[0] // page
+    # pad rows can run past the table (p0 + C > maxp·page near max_len);
+    # an unclamped gather would alias them onto the LAST real page and the
+    # scatter would corrupt valid prompt K/V — route them to the null page
+    page_of = jnp.where(pidx < maxp,
+                        table_row[jnp.minimum(pidx, maxp - 1)], 0)  # [C]
+    off = positions[0] % page
+
+    def body(h, xs):
+        lp, kp, vp = xs
+        x = blocks.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = blocks.qkv_project(x, lp["attn"], cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.hd)
+        q = blocks.apply_rope(q, positions, cfg.rope_theta)
+        k = blocks.apply_rope(k, positions, cfg.rope_theta)
+        kp = kp.at[page_of, off].set(k[0].astype(kp.dtype))
+        vp = vp.at[page_of, off].set(v[0].astype(vp.dtype))
+        o = _gather_attention(q, kp, vp, table_row[None], positions,
+                              p0 + C, cfg)
+        h = h + blocks.out_project(o, lp["attn"])
+        x = blocks.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+        h = h + _ffn(x, lp, cfg)
+        return h, (kp, vp)
+
+    h, (nk, nv) = lax.scan(body, h, (params["layers"], k_pages, v_pages),
+                           unroll=cfg.scan_unroll)
+    logits = unembed(params, cfg, h[0])
+    return logits, nk, nv

@@ -63,7 +63,7 @@ from typing import Dict, List, Optional, Sequence, Set
 
 import numpy as np
 
-from repro.core.cost_model import LengthDistribution
+from repro.core.cost_model import GenTimeModel, LengthDistribution
 from repro.core.plan import ScheduledPlan
 from repro.core.pool import JobSpec, PoolPlan
 from .events import (EventQueue, FailureInjection, HandoffRecord, JobFailure,
@@ -82,6 +82,10 @@ class SimConfig:
     failures: Sequence[FailureInjection] = field(default_factory=list)
     replanner: Optional[ElasticReplanner] = None   # attach to go elastic
     check_invariants: bool = False         # assert conservation per event
+    # length-distribution-aware generation time (serve.feedback fit or
+    # GenTimeModel.from_replica_cost); None = the historical fixed
+    # per-token constant — existing runs are bit-identical
+    gen_time: Optional[GenTimeModel] = None
 
 
 @dataclass
@@ -241,7 +245,7 @@ class AsyncRLSimulator:
             generating += 1
             length = float(np.clip(rng.lognormal(
                 *_lognorm(self.P)), 16, self.P.max_len))
-            dur = (length + self.P.prompt_len) / max(rate[i], 1e-9)
+            dur = _gen_duration(cfg.gen_time, length, self.P, rate[i])
             gen_busy_sum += dur
             q.push(now + dur + cfg.reward_cost_s, "rollout_done",
                    (epoch, i, version, length))
@@ -478,6 +482,16 @@ def _lognorm(P: LengthDistribution):
     return P.lognorm_params()
 
 
+def _gen_duration(gtm: Optional[GenTimeModel], length: float,
+                  P: LengthDistribution, rate: float) -> float:
+    """Rollout generation time: length-aware when a GenTimeModel is
+    attached, the historical fixed per-token constant otherwise."""
+    if gtm is None:
+        return (length + P.prompt_len) / max(rate, 1e-9)
+    return gtm.duration(length, prompt_len=P.prompt_len,
+                        tokens_per_sec=max(rate, 1e-9), mean_len=P.mean())
+
+
 # ===================================================================== multi
 class DeviceLedger:
     """Shared device-ownership ledger for N concurrent jobs.
@@ -529,6 +543,7 @@ class MultiSimConfig:
     failures: Sequence[JobFailure] = field(default_factory=list)
     replanner: Optional[PoolReplanner] = None
     check_invariants: bool = False
+    gen_time: Optional[GenTimeModel] = None  # see SimConfig.gen_time
 
 
 @dataclass
@@ -749,7 +764,7 @@ class MultiJobSimulator:
             jr.generating += 1
             length = float(np.clip(rng.lognormal(*_lognorm(jr.P)),
                                    16, jr.P.max_len))
-            dur = (length + jr.P.prompt_len) / max(jr.rate[i], 1e-9)
+            dur = _gen_duration(cfg.gen_time, length, jr.P, jr.rate[i])
             jr.gen_busy_sum += dur
             q.push(now + dur + cfg.reward_cost_s, "rollout_done",
                    (jr.name, jr.epoch, i, jr.version, length))

@@ -216,8 +216,10 @@ def test_tiny_sweep_smoke():
     derived factors differ from the analytic tables."""
     db = run_sweep(tiny=True, log=lambda s: None)
     assert CostDB.from_json(db.to_json()).to_json() == db.to_json()
+    from repro.autotune.costdb import KERNELS
+    assert "paged_attention" in KERNELS        # serving coverage is gated
     for dt in ("TPUv5e", "TPUv5p"):
-        for kernel in ("flash_attention", "decode_attention", "ssm_scan"):
+        for kernel in KERNELS:
             recs = db.records(dt, kernel)
             assert recs, (dt, kernel)
             for r in recs.values():

@@ -114,6 +114,60 @@ def test_decode_attention_sweep(B, H, Hkv, D, C, dtype, window):
                                np.asarray(ref, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("block_c", [8, 16])
+@pytest.mark.parametrize("window", [None, 6])
+def test_decode_attention_ragged_lengths(block_c, window):
+    """Non-uniform cache lengths per row (the serving reality the uniform
+    sweep above never exercises): each row has its own valid prefix, the
+    rest of the cache is empty slots (-2^30) holding garbage values."""
+    B, H, Hkv, D, C = 4, 4, 2, 16, 40
+    lens = np.array([1, 7, 23, 40])
+    ks = jax.random.split(jax.random.PRNGKey(block_c + (window or 0)), 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    k = jax.random.normal(ks[1], (B, C, Hkv, D))
+    v = jax.random.normal(ks[2], (B, C, Hkv, D))
+    # poison the dead slots: masked entries must never leak
+    slot = np.broadcast_to(np.arange(C), (B, C))
+    dead = slot >= lens[:, None]
+    k = jnp.where(jnp.asarray(dead)[:, :, None, None], 1e6, k)
+    v = jnp.where(jnp.asarray(dead)[:, :, None, None], -1e6, v)
+    q_pos = jnp.asarray(lens - 1, jnp.int32)
+    k_pos = jnp.where(jnp.asarray(dead), -(2 ** 30),
+                      jnp.asarray(slot, jnp.int32))
+    out = decode_attention(q, k, v, q_pos, k_pos, window=window,
+                           block_c=block_c, interpret=True)
+    ref = decode_attention_ref(q, k, v, q_pos, k_pos, window=window)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_ring_layout():
+    """SWA ring-buffer layout: a row's valid slots are not a prefix —
+    positions wrap around the ring, empty slots interleave arbitrarily."""
+    B, H, Hkv, D, C = 2, 4, 2, 16, 16
+    W = 10
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    k = jax.random.normal(ks[1], (B, C, Hkv, D))
+    v = jax.random.normal(ks[2], (B, C, Hkv, D))
+    # row 0: decoded 21 tokens through a ring of 16 → slots hold positions
+    # (pos % C); row 1: only 5 tokens, rest empty
+    kp = np.full((B, C), -(2 ** 30), np.int64)
+    for s in range(C):
+        pos = 21 - 1 - ((21 - 1 - s) % C)
+        if 0 <= pos:
+            kp[0, s] = pos
+    kp[1, :5] = np.arange(5)
+    q_pos = jnp.asarray([20, 4], jnp.int32)
+    k_pos = jnp.asarray(kp, jnp.int32)
+    out = decode_attention(q, k, v, q_pos, k_pos, window=W, block_c=8,
+                           interpret=True)
+    ref = decode_attention_ref(q, k, v, q_pos, k_pos, window=W)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
 @pytest.mark.parametrize("B,S,H,D,chunk", [
     (1, 16, 1, 8, 8),
     (2, 50, 4, 16, 16),          # padding path

@@ -1,0 +1,141 @@
+"""Paged decode-attention kernel vs its jnp oracle and the dense kernel.
+
+All kernel runs use interpret=True (the CPU contract); the same entry
+point compiles on TPU.  The properties that matter for a paged cache:
+
+  * ragged per-sequence lengths (the tail page is masked, never read);
+  * arbitrary page *placement* — outputs are invariant to permuting the
+    pool as long as block tables follow;
+  * garbage in unused pool slots (stale pages, the null page) never
+    leaks into any sequence's output;
+  * agreement with the dense decode kernel on the densified cache.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.paged_attention.ops import paged_decode_attention
+from repro.kernels.paged_attention.ref import paged_decode_attention_ref
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+def _pool(B, H, Hkv, D, page, maxp, dtype, seed=0, shuffle=True):
+    """Random pool + shuffled block tables + ragged lengths."""
+    P = B * maxp + 1
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    kp = jax.random.normal(ks[1], (P, page, Hkv, D), dtype)
+    vp = jax.random.normal(ks[2], (P, page, Hkv, D), dtype)
+    rng = np.random.default_rng(seed)
+    ids = rng.permutation(np.arange(1, P)) if shuffle \
+        else np.arange(1, P)
+    bt = jnp.asarray(ids[:B * maxp].reshape(B, maxp), jnp.int32)
+    lens = jnp.asarray(rng.integers(1, maxp * page + 1, B), jnp.int32)
+    return q, kp, vp, bt, lens
+
+
+@pytest.mark.parametrize("B,H,Hkv,D,page,maxp", [
+    (1, 2, 2, 8, 4, 2),
+    (2, 4, 2, 16, 8, 4),
+    (2, 8, 1, 64, 16, 3),        # MQA
+    (3, 6, 3, 20, 8, 5),         # odd head dim → padding path
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [None, 7])
+def test_paged_attention_sweep(B, H, Hkv, D, page, maxp, dtype, window):
+    q, kp, vp, bt, lens = _pool(B, H, Hkv, D, page, maxp, dtype,
+                                seed=B * D + page)
+    out = paged_decode_attention(q, kp, vp, bt, lens, window=window,
+                                 interpret=True)
+    ref = paged_decode_attention_ref(q, kp, vp, bt, lens, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_page_permutation_invariance():
+    """Physical placement is irrelevant: permute the pool, remap the
+    tables, outputs must match."""
+    B, H, Hkv, D, page, maxp = 2, 4, 2, 16, 8, 3
+    q, kp, vp, bt, lens = _pool(B, H, Hkv, D, page, maxp, jnp.float32,
+                                seed=9, shuffle=False)
+    base = paged_decode_attention(q, kp, vp, bt, lens, interpret=True)
+
+    P = kp.shape[0]
+    rng = np.random.default_rng(1)
+    perm = np.concatenate([[0], 1 + rng.permutation(P - 1)])   # keep null
+    inv = np.argsort(perm)              # page p moves to slot perm[p]
+    kp2 = kp[jnp.asarray(inv)]          # so new slot i holds old page inv[i]
+    vp2 = vp[jnp.asarray(inv)]
+    bt2 = jnp.asarray(perm)[bt]         # tables follow the move
+    np.testing.assert_allclose(
+        np.asarray(paged_decode_attention(q, kp2, vp2, bt2, lens,
+                                          interpret=True)),
+        np.asarray(base), atol=1e-6, rtol=1e-6)
+
+
+def test_garbage_pages_never_leak():
+    """Unreferenced pool slots and masked tails hold huge garbage; every
+    output must still match an oracle computed from clean data."""
+    B, H, Hkv, D, page, maxp = 2, 4, 2, 16, 8, 3
+    q, kp, vp, bt, lens = _pool(B, H, Hkv, D, page, maxp, jnp.float32,
+                                seed=4)
+    lens = jnp.asarray([3, page * maxp], jnp.int32)   # tiny + full
+    ref = paged_decode_attention_ref(q, kp, vp, bt, lens)
+
+    # poison the null page and every slot past each sequence's length
+    kp_np, vp_np = np.array(kp), np.array(vp)
+    kp_np[0], vp_np[0] = 1e6, -1e6
+    slot = np.arange(maxp * page).reshape(maxp, page)
+    for b in range(B):
+        dead = slot >= int(lens[b])
+        for ip in range(maxp):
+            kp_np[int(bt[b, ip])][dead[ip]] = 1e6
+            vp_np[int(bt[b, ip])][dead[ip]] = -1e6
+    out = paged_decode_attention(q, jnp.asarray(kp_np), jnp.asarray(vp_np),
+                                 bt, lens, interpret=True)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [None, 5])
+def test_paged_matches_dense_decode_ref(window):
+    """Densify the paged cache → the dense decode oracle must agree (the
+    engine's two attention paths are the same math)."""
+    B, H, Hkv, D, page, maxp = 3, 4, 2, 16, 4, 4
+    q, kp, vp, bt, lens = _pool(B, H, Hkv, D, page, maxp, jnp.float32,
+                                seed=2)
+    C = page * maxp
+    kd = kp[bt].reshape(B, C, Hkv, D)
+    vd = vp[bt].reshape(B, C, Hkv, D)
+    slot = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), (B, C))
+    k_pos = jnp.where(slot < lens[:, None], slot, -(2 ** 30))
+    q_pos = lens - 1
+    dense = decode_attention_ref(q, kd, vd, q_pos, k_pos, window=window)
+    paged = paged_decode_attention(q, kp, vp, bt, lens, window=window,
+                                   interpret=True)
+    np.testing.assert_allclose(np.asarray(paged), np.asarray(dense),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_length_one_and_stale_table_entries():
+    """len=1 sequences attend to exactly one slot; table entries past the
+    sequence's pages may be stale ids — clamped + masked, never read."""
+    B, H, Hkv, D, page, maxp = 2, 2, 2, 8, 4, 3
+    q, kp, vp, bt, lens = _pool(B, H, Hkv, D, page, maxp, jnp.float32,
+                                seed=7)
+    lens = jnp.asarray([1, 2], jnp.int32)
+    bt = np.array(bt)
+    bt[:, 1:] = 10 ** 6                     # absurd ids beyond page 0's need
+    bt = jnp.asarray(bt)
+    out = paged_decode_attention(q, kp, vp, bt, lens, interpret=True)
+    ref = paged_decode_attention_ref(q, kp, vp,
+                                     jnp.clip(bt, 0, kp.shape[0] - 1), lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
