@@ -1,12 +1,22 @@
 """Benchmark aggregator: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig3]
+    PYTHONPATH=src python -m benchmarks.run [--only fig3] [--tiny]
+        [--artifact-dir DIR]
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  ``--tiny`` forwards CI
+mode to every module whose ``run()`` accepts it (the others run at full
+size).  Modules may publish a machine-readable summary by setting a
+module-level ``BENCH_JSON`` dict inside ``run()``; the aggregator writes
+each one to ``<artifact-dir>/BENCH_<name>.json`` (e.g.
+``BENCH_prefix_sharing.json``) so per-PR perf trajectories can be
+diffed without parsing CSV.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
+import os
 import sys
 import traceback
 
@@ -24,14 +34,25 @@ MODULES = [
     "fig7_multi_job",
     "fig8_autotune_gain",
     "fig9_continuous_batching",
+    "fig10_prefix_sharing",
     "table5_scheduler_speed",
     "roofline_report",
 ]
 
 
+def _call_run(mod, tiny: bool):
+    if tiny and "tiny" in inspect.signature(mod.run).parameters:
+        return mod.run(tiny=True)
+    return mod.run()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI mode for modules that support it")
+    ap.add_argument("--artifact-dir", default=".",
+                    help="where BENCH_*.json artifacts are written")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -41,8 +62,15 @@ def main() -> None:
             continue
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
-            for row in mod.run():
+            for row in _call_run(mod, args.tiny):
                 print(row, flush=True)
+            payload = getattr(mod, "BENCH_JSON", None)
+            if payload:
+                path = os.path.join(args.artifact_dir,
+                                    f"BENCH_{payload['name']}.json")
+                with open(path, "w") as f:
+                    json.dump(payload, f, indent=2, sort_keys=True)
+                print(f"# wrote {path}", flush=True)
         except Exception as e:                       # pragma: no cover
             failures.append((mod_name, e))
             traceback.print_exc()

@@ -22,9 +22,13 @@ CFG = SchedulerConfig(tokens_per_step=2 ** 20, stable_iters=3,
 CLUSTERS = {"16gpu": (8, 8), "24gpu": (8, 16), "32gpu": (16, 16)}
 
 
-def run() -> list[str]:
+def run(tiny: bool = False) -> list[str]:
+    """``tiny``: CI smoke — smallest cluster only, so scheduler-side
+    regressions from new cost terms (e.g. prefix-aware prefill pricing)
+    still fail fast without the exhaustive-search wall-clock."""
     rows = []
-    for name, (a, b) in CLUSTERS.items():
+    clusters = ({"16gpu": CLUSTERS["16gpu"]} if tiny else CLUSTERS)
+    for name, (a, b) in clusters.items():
         cluster = paper_heterogeneous(a, b)
         t0 = time.perf_counter()
         schedule(SPEC, cluster, P, CFG)
@@ -50,4 +54,8 @@ def run() -> list[str]:
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: smallest cluster only")
+    print("\n".join(run(tiny=ap.parse_args().tiny)))

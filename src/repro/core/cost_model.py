@@ -118,6 +118,15 @@ class CostProvider:
     def hbm_eff(self, profile: DeviceProfile) -> float:
         raise NotImplementedError
 
+    def prefill_g_eff(self, profile: DeviceProfile) -> float:
+        """Effective prefill amortization from prompt-prefix sharing: a
+        GRPO group of G completions prefills its shared prompt once, so
+        the per-completion prefill cost is C_prefill / G_eff.  Default
+        1.0 (no sharing) — concrete, not abstract, so every existing
+        provider prices plans bit-identically until a serving engine
+        reports a measured value (``serve.feedback.ServingCostModel``)."""
+        return 1.0
+
     def factors(self, profile: DeviceProfile) -> Dict[str, float]:
         return {
             "train_mfu": self.train_mfu(profile),
@@ -125,6 +134,7 @@ class CostProvider:
             "decode_compute_eff": self.decode_compute_eff(profile),
             "decode_engine_eff": self.decode_engine_eff(profile),
             "hbm_eff": self.hbm_eff(profile),
+            "prefill_g_eff": self.prefill_g_eff(profile),
         }
 
 
@@ -423,10 +433,14 @@ def replica_throughput(
 
     active = spec.params(active_only=True)
 
-    # Prefill: compute-bound.
+    # Prefill: compute-bound.  Prefix sharing (GRPO groups prefill their
+    # shared prompt once — serve.engine COW forks) amortizes the cost over
+    # G_eff completions; the default provider reports 1.0, so plans stay
+    # bit-identical until an engine measures real sharing.
     pf_flops = 2.0 * active * batch * p_len \
         + 4.0 * spec.n_layers * spec.n_heads * spec.hd * batch * p_len**2 / 2.0
-    t_prefill = pf_flops / (n * prof.flops * provider.prefill_mfu(prof))
+    t_prefill = pf_flops / (n * prof.flops * provider.prefill_mfu(prof)) \
+        / max(provider.prefill_g_eff(prof), 1.0)
 
     # Decode step: one token for every sequence in the batch.
     avg_ctx = p_len + o_len / 2.0
@@ -486,14 +500,22 @@ class GenTimeModel:
 
     Coefficients come from the cost model (``from_replica_cost``) or are
     fit to a serving engine's per-request samples (serve.feedback).
+
+    ``g_eff`` is the prefix-sharing amortization (serve.engine COW forks:
+    a GRPO group of G completions prefills its prompt once, so each
+    rollout carries t_prefill / G_eff).  Default 1.0 — existing fits and
+    simulator runs are bit-identical.  ``from_replica_cost`` keeps
+    g_eff=1 because ``ReplicaCost.prefill_time`` is already priced
+    through the provider's ``prefill_g_eff``.
     """
 
     a: float                       # seconds/token, context-independent
     b: float                       # seconds/token per context token
     t_prefill: float = 0.0
+    g_eff: float = 1.0             # prefix-sharing prefill amortization
 
     def raw(self, prompt_len: float, length: float) -> float:
-        return (self.t_prefill + self.a * length
+        return (self.t_prefill / max(self.g_eff, 1.0) + self.a * length
                 + self.b * length * (prompt_len + length / 2.0))
 
     def duration(self, length: float, *, prompt_len: float,

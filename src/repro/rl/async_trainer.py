@@ -37,6 +37,10 @@ class TrainerConfig:
     seq_len: int = 160                   # packed train sequence length
     total_steps: int = 20
     publish_every: int = 1               # weight publish cadence (steps)
+    # "static" → right-padded RolloutEngine (every family); "paged" → the
+    # continuous-batching serve.PagedEngine, which prefills each GRPO
+    # group's prompt ONCE and COW-forks the G−1 siblings (dense family)
+    engine: str = "static"
     staleness: StalenessConfig = field(default_factory=lambda:
                                        StalenessConfig(eta=2,
                                                        rollouts_per_step=16))
@@ -88,9 +92,20 @@ class AsyncGRPOTrainer:
         self.buffer.ctl.version = self.store.version
         self.tasks = MathTaskGenerator(seed=tc.seed)
         self.rewarder = RuleBasedReward(self.tasks, shaped=True)
-        self.engine = RolloutEngine(
-            cfg, self.store,
-            GenConfig(max_new_tokens=48, segment=12), rng_seed=tc.seed + 1)
+        gen = GenConfig(max_new_tokens=48, segment=12)
+        if tc.engine == "paged":
+            from repro.serve import PagedEngine, ServeConfig
+            self.engine = PagedEngine(
+                cfg, self.store, gen,
+                ServeConfig(max_slots=tc.group_size * tc.prompts_per_step,
+                            max_len=tc.seq_len + gen.max_new_tokens),
+                rng_seed=tc.seed + 1)
+        elif tc.engine == "static":
+            self.engine = RolloutEngine(cfg, self.store, gen,
+                                        rng_seed=tc.seed + 1)
+        else:
+            raise ValueError(f"unknown engine {tc.engine!r} "
+                             f"(expected 'static' or 'paged')")
         self._group_counter = 0
         self.history: List[Dict] = []
 
@@ -104,16 +119,13 @@ class AsyncGRPOTrainer:
             return {"launched": 0}
         self.buffer.launch(n)
         prompts = self.tasks.batch(n_prompts)
-        expanded, gids = [], []
-        for p in prompts:
-            gid = self._group_counter
-            self._group_counter += 1
-            for _ in range(G):
-                expanded.append(p)
-                gids.append(gid)
-        rollouts, metrics = self.engine.generate(expanded)
-        for r, gid in zip(rollouts, gids):
-            r.group_id = gid
+        gids = list(range(self._group_counter, self._group_counter + n_prompts))
+        self._group_counter += n_prompts
+        # groups, not duplicated prompts: the paged engine prefills each
+        # prompt once and COW-forks the G−1 siblings; the static engine
+        # falls back to prompt replication inside generate_groups
+        rollouts, metrics = self.engine.generate_groups(prompts, G,
+                                                        group_ids=gids)
         self.rewarder.score_batch(rollouts)
         for r in rollouts:
             self.buffer.push(r)

@@ -72,6 +72,21 @@ class RolloutEngine:
         return k
 
     # -------------------------------------------------------------- generate
+    def generate_groups(self, tasks: Sequence[MathTask], group_size: int, *,
+                        group_ids: Optional[Sequence[int]] = None,
+                        ) -> Tuple[List[Rollout], Dict]:
+        """GRPO frontend: ``group_size`` completions per task.  The static
+        engine has no KV sharing, so this just replicates prompts into one
+        right-padded batch — the paged engine's ``generate_groups``
+        prefills each prompt ONCE and COW-forks the siblings.  Rollouts
+        come back task-major with the requested group ids."""
+        expanded = [t for t in tasks for _ in range(group_size)]
+        rollouts, metrics = self.generate(expanded)
+        for j, r in enumerate(rollouts):
+            r.group_id = (j // group_size if group_ids is None
+                          else int(group_ids[j // group_size]))
+        return rollouts, metrics
+
     def generate(self, tasks: Sequence[MathTask], *,
                  group_offset: int = 0) -> Tuple[List[Rollout], Dict]:
         """Generate one completion per task (callers replicate tasks for

@@ -1,4 +1,4 @@
-"""Continuous-batching generation subsystem (PR 4).
+"""Continuous-batching generation subsystem (PR 4 + PR 5 prefix sharing).
 
 The static ``rl.rollout.RolloutEngine`` right-pads a batch and burns
 decode slots on finished rows; the paper prices generation as if a real
@@ -6,19 +6,28 @@ serving engine kept the HBM-bound decode loop full.  This package *is*
 that engine:
 
   * ``kv_cache``  — paged KV pool: fixed-size blocks, per-sequence block
-    tables, alloc/free free-list, occupancy stats.
+    tables, alloc/free free-list, occupancy stats — now *refcounted with
+    copy-on-write*: ``fork_slot`` aliases a child's table onto its
+    parent's prompt pages (fork → shared → diverge → copy; only the
+    partial tail page is ever copied, on first divergent write).
   * ``model``     — paged forward passes (chunked prefill + batched decode
     over the pool) for the dense-transformer family, backed by the
     ``kernels.paged_attention`` Pallas kernel on TPU.
   * ``engine``    — the continuous scheduler: per-step admission from the
-    queue, evict-on-EOS, interleaved prefill-chunk + decode steps under a
-    token budget, segment-boundary weight swap with oldest-version
-    staleness accounting (AReaL semantics, unchanged from the static
-    engine).
+    queue (identical queued prompts dedupe into one prefill — GRPO groups
+    via ``submit_group`` prefill ONCE and COW-fork the G−1 siblings),
+    evict-on-EOS, interleaved prefill-chunk + decode steps under a token
+    budget, a dirty-flag-cached device block table, segment-boundary
+    weight swap with oldest-version staleness accounting (AReaL
+    semantics, unchanged from the static engine; forked siblings inherit
+    the leader's version provenance).
   * ``feedback``  — the loop back to the planner: ``ServingCostModel``
     (a ``CostProvider`` whose decode_engine_eff comes from *observed*
-    serving behavior) and gen-time fitting for the simulator's
-    length-distribution-aware generation-time model.
+    serving behavior, and whose ``prefill_g_eff`` reports the measured
+    prefix-sharing amortization so the scheduler prices replica prefill
+    as C_prefill/G_eff — default 1 → plans bit-identical) and gen-time
+    fitting for the simulator's length-distribution-aware
+    generation-time model.
 """
 from .engine import PagedEngine, ServeConfig
 from .feedback import EngineReport, ServingCostModel, fit_gen_time

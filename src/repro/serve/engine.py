@@ -1,4 +1,4 @@
-"""Continuous-batching generation engine over the paged KV cache.
+"""Continuous-batching generation engine over the paged COW KV cache.
 
 The static ``RolloutEngine`` admits one right-padded batch, decodes every
 row until the *slowest* row finishes, and only then returns — finished
@@ -10,21 +10,48 @@ This engine runs the standard serving loop instead:
              budget  →  evict finished sequences (EOS / per-request cap),
              freeing their pages and slots for the queue.
 
+**Prefix sharing.** Our RL loop generates GRPO groups — ``G`` completions
+of the *same* prompt — so prefilling the prompt G times and storing G
+copies of its KV pages wastes both FLOPs and the pool capacity that
+bounds the decode batch.  ``submit_group(task, G)`` enqueues the group;
+admission coalesces queued requests with identical prompts (hash of the
+token ids — this also dedupes identical prompts submitted separately)
+into one *leader* that prefills plus ``FORK`` siblings that wait.  When
+the leader's prefill completes, each sibling forks the leader's pages
+(``PagedKVCache.fork_slot``: block-table aliasing + refcounts, no data
+movement), samples its own first token from the shared prompt logits, and
+decodes as an ordinary continuous-batching slot.  Writes into a shared
+page hit the copy-on-write barrier (``writable``), so siblings diverge
+page-locally: fork → shared → diverge → copy.  Preempting a forked slot
+just decrements refcounts and requeues it as a solo request (full
+recompute — work lost, correctness kept); preempting a leader drags its
+pending forks back to the queue with it.  Per-sibling greedy decode is
+token-identical to a B=1 static run of the same prompt.
+
 AReaL semantics are preserved exactly: generation proceeds in *segments*
 (``GenConfig.segment`` decode steps); at segment boundaries the engine
 checks the weight store and swaps mid-sequence, every in-flight request
 records the new contributing version, and a finished trajectory is
 accounted against the OLDEST version it touched (the conservative choice
-— ``rl.buffer`` admission keeps holding unchanged).
+— ``rl.buffer`` admission keeps holding unchanged).  A forked sibling
+inherits the leader's version set at fork time: its prompt K/V is the
+leader's, so the leader's provenance is its provenance.
 
 When the page pool runs dry mid-decode the youngest sequence is preempted
 vLLM-style: its pages are freed and the request returns to the head of
 the queue for full recomputation (work is lost, correctness is not).
 
+The device copy of the block table is *cached*: the allocator sets
+``PagedKVCache.dirty`` on any host-table mutation and the decode step
+re-uploads only then (``stats.bt_uploads`` counts uploads); per-step
+slot masking moved into the jitted step (``active`` vector), so steady
+decode never re-streams the ``[max_slots, maxp]`` table to the device.
+
 ``generate(tasks)`` matches the static engine's surface (rollouts +
 metrics) so launchers and trainers can swap engines; the stepwise
 ``submit``/``step`` API is what tests and serving drivers use to
-interleave weight publishes with generation.
+interleave weight publishes with generation; ``generate_groups`` is the
+GRPO frontend (one prefill per group).
 """
 from __future__ import annotations
 
@@ -55,6 +82,7 @@ class ServeConfig:
     num_pages: Optional[int] = None    # None → worst case (paging never blocks)
     prefill_chunk: int = 32            # tokens per prefill call
     token_budget: Optional[int] = None # per step; None → slots + one chunk
+    share_prefix: bool = True          # COW-fork identical queued prompts
 
 
 @dataclass
@@ -62,16 +90,21 @@ class EngineStats:
     max_slots: int = 0
     decode_steps: int = 0              # batched decode invocations
     decode_slot_steps: int = 0         # Σ active slots over decode steps
-    prefill_tokens: int = 0
+    prefill_tokens: int = 0            # prompt tokens actually computed
+    prefill_tokens_shared: int = 0     # prompt tokens served by a fork
     tokens_generated: int = 0          # completion tokens kept
     preempted_slot_steps: int = 0      # decode work discarded by preemption
     weight_swaps: int = 0
     admissions: int = 0
     preemptions: int = 0
     completed: int = 0
+    forks: int = 0                     # sibling sequences forked
+    cow_copies: int = 0                # divergent-write page copies
+    bt_uploads: int = 0                # host→device block-table uploads
     wall_time_s: float = 0.0
     page_occ_sum: float = 0.0
     pool_util_sum: float = 0.0
+    shared_frac_sum: float = 0.0
     occ_samples: int = 0
     gen_samples: List[Tuple[int, float]] = field(default_factory=list)
 
@@ -90,6 +123,28 @@ class EngineStats:
         return (self.page_occ_sum / self.occ_samples
                 if self.occ_samples else 1.0)
 
+    @property
+    def shared_page_fraction(self) -> float:
+        """Mean fraction of logical page references served by shared
+        physical pages — pool capacity prefix sharing saved."""
+        return (self.shared_frac_sum / self.occ_samples
+                if self.occ_samples else 0.0)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of logically-needed prompt tokens served by a fork
+        instead of being prefilled."""
+        logical = self.prefill_tokens + self.prefill_tokens_shared
+        return self.prefill_tokens_shared / logical if logical else 0.0
+
+    @property
+    def g_eff(self) -> float:
+        """Effective prefill amortization: logically-needed prompt tokens
+        per prompt token actually computed (the scheduler divides
+        C_prefill by this; 1.0 = no sharing)."""
+        logical = self.prefill_tokens + self.prefill_tokens_shared
+        return logical / self.prefill_tokens if self.prefill_tokens else 1.0
+
 
 @dataclass
 class _Request:
@@ -98,12 +153,16 @@ class _Request:
     group_id: int
     prompt: List[int]
     max_new: int
-    state: str = "QUEUED"              # QUEUED | PREFILL | DECODE
+    phash: int = 0                     # prompt-token hash (dedupe key)
+    state: str = "QUEUED"              # QUEUED | PREFILL | FORK | DECODE
     slot: int = -1
     prefill_done: int = 0
     tokens: List[int] = field(default_factory=list)
     logps: List[float] = field(default_factory=list)
     versions: Set[int] = field(default_factory=set)
+    parent: Optional["_Request"] = None      # FORK: leader we wait on
+    forks: List["_Request"] = field(default_factory=list)  # leader: waiters
+    forked: bool = False               # prompt K/V came from a live fork
     t_admit: float = 0.0
 
     @property
@@ -142,9 +201,10 @@ class PagedEngine:
         self._queue: List[_Request] = []
         self._active: Dict[int, _Request] = {}       # slot → request
         self._done: List[_Request] = []
+        self._bt_dev: Optional[jax.Array] = None     # cached device table
         self._decode = jax.jit(
-            lambda p, kp, vp, bt, tok, pos:
-            paged_decode_step(p, self.cfg, kp, vp, bt, tok, pos))
+            lambda p, kp, vp, bt, tok, pos, act:
+            paged_decode_step(p, self.cfg, kp, vp, bt, tok, pos, act))
         self._prefill = jax.jit(
             lambda p, kp, vp, row, toks, p0:
             paged_prefill_chunk(p, self.cfg, kp, vp, row, toks, p0))
@@ -176,7 +236,8 @@ class PagedEngine:
 
     # ------------------------------------------------------------ admission
     def submit(self, tasks: Sequence[MathTask], *, group_offset: int = 0,
-               max_new_per_task: Optional[Sequence[int]] = None) -> None:
+               max_new_per_task: Optional[Sequence[int]] = None,
+               group_ids: Optional[Sequence[int]] = None) -> None:
         base = len(self._queue) + len(self._active) + len(self._done)
         for j, t in enumerate(tasks):
             max_new = (self.gen.max_new_tokens if max_new_per_task is None
@@ -187,14 +248,38 @@ class PagedEngine:
                                  f"max_len={self.serve.max_len} slots")
             if self.kv.pages_needed(total) > self.kv.num_pages - 1:
                 raise ValueError("pool smaller than one full sequence")
-            self._queue.append(_Request(idx=base + j, task=t,
-                                        group_id=group_offset + j,
-                                        prompt=list(t.prompt_ids),
-                                        max_new=max_new))
+            gid = (group_offset + j) if group_ids is None else int(group_ids[j])
+            prompt = list(t.prompt_ids)
+            self._queue.append(_Request(idx=base + j, task=t, group_id=gid,
+                                        prompt=prompt, max_new=max_new,
+                                        phash=hash(tuple(prompt))))
+
+    def submit_group(self, task: MathTask, group_size: int, *,
+                     group_id: int = 0,
+                     max_new: Optional[int] = None) -> None:
+        """Enqueue one GRPO group: ``group_size`` completions of ONE
+        prompt.  Admission coalesces them into a single prefill plus
+        ``group_size − 1`` COW forks (when ``serve.share_prefix``)."""
+        mnew = None if max_new is None else [max_new] * group_size
+        self.submit([task] * group_size, group_ids=[group_id] * group_size,
+                    max_new_per_task=mnew)
 
     def _admit(self, now: float) -> None:
         while self._queue and self.kv.free_slots:
             req = self._queue[0]
+            if self.serve.share_prefix:
+                leader = self._prefilling_leader_for(req)
+                if leader is not None:
+                    # a fork (≤1 tail-page COW copy) always beats a
+                    # duplicate prefill: attach when headroom allows,
+                    # otherwise WAIT — admitting a second leader for the
+                    # same prompt would recompute the prompt at HIGHER
+                    # page cost than the fork we just refused
+                    if self.kv.free_pages < len(leader.forks) + 2:
+                        break
+                    self._queue.pop(0)
+                    self._admit_fork(leader, req, now)
+                    continue
             # prompt pages + one decode-headroom page — but never demand
             # more than the request will EVER need, or a short-completion
             # request whose total exactly fits the pool could never admit
@@ -211,6 +296,47 @@ class PagedEngine:
             req.versions = {self._version}
             self._active[slot] = req
             self.stats.admissions += 1
+            if self.serve.share_prefix:
+                self._coalesce(req, now)
+
+    def _prefilling_leader_for(self, req: _Request) -> Optional[_Request]:
+        """An active mid-prefill request with the same prompt, if any
+        (once a leader starts decoding its prompt logits are gone, so
+        late arrivals can no longer fork from it)."""
+        return next((r for r in self._active.values()
+                     if r.state == "PREFILL" and r.phash == req.phash
+                     and r.prompt == req.prompt), None)
+
+    def _admit_fork(self, leader: _Request, sib: _Request,
+                    now: float) -> None:
+        """Admit ``sib`` as a FORK sibling of ``leader``: it holds a slot
+        (reserved now) but no pages, skips prefill entirely, and forks
+        the leader's pages when its prefill completes."""
+        slot = self.kv.alloc_slot()
+        sib.slot, sib.state = slot, "FORK"
+        sib.parent = leader
+        sib.t_admit = now
+        sib.versions = {self._version}
+        leader.forks.append(sib)
+        self._active[slot] = sib
+        self.stats.admissions += 1
+
+    def _coalesce(self, leader: _Request, now: float) -> None:
+        """Scan the queue for requests with the SAME prompt as the just-
+        admitted ``leader`` and attach them as FORK siblings.  Each
+        sibling admitted keeps ~1 page of headroom free for its tail-page
+        COW copy (preemption covers misestimates)."""
+        i = 0
+        while i < len(self._queue):
+            sib = self._queue[i]
+            if sib.phash != leader.phash or sib.prompt != leader.prompt:
+                i += 1
+                continue
+            if (not self.kv.free_slots
+                    or self.kv.free_pages < len(leader.forks) + 2):
+                break
+            self._queue.pop(i)
+            self._admit_fork(leader, sib, now)
 
     # ------------------------------------------------------------- eviction
     def _finish(self, req: _Request, now: float) -> None:
@@ -223,27 +349,46 @@ class PagedEngine:
 
     def _preempt_youngest(self) -> bool:
         """Pool exhausted: kick the most recently admitted sequence back to
-        the queue head for recomputation (vLLM recompute policy).  Both
-        decoding and mid-prefill sequences are candidates — only the oldest
-        decoding sequence is protected, so forward progress is guaranteed."""
+        the queue head for recomputation (vLLM recompute policy).  Decoding,
+        mid-prefill and fork-waiting sequences are all candidates — only the
+        oldest decoding sequence is protected, so forward progress is
+        guaranteed.  A preempted leader drags its pending forks back to the
+        queue with it (they hold no pages, only slots); a preempted fork
+        detaches from its leader and recomputes solo."""
         decoding = [r for r in self._active.values() if r.state == "DECODE"]
-        protected = (min(decoding, key=lambda r: r.t_admit)
+        protected = (min(decoding, key=lambda r: (r.t_admit, r.idx))
                      if decoding else None)
         victims = [r for r in self._active.values() if r is not protected]
         if not victims:
             return False
-        victim = max(victims, key=lambda r: r.t_admit)
-        self.kv.free_slot(victim.slot)
-        del self._active[victim.slot]
-        victim.slot = -1
-        victim.state = "QUEUED"
-        victim.prefill_done = 0
-        # the victim's tokens are discarded and recomputed: un-count them
-        # so kept-token metrics (occupancy, tokens/s) stay honest
-        self.stats.tokens_generated -= len(victim.tokens)
-        self.stats.preempted_slot_steps += max(len(victim.tokens) - 1, 0)
-        victim.tokens, victim.logps = [], []
-        self._queue.insert(0, victim)
+        victim = max(victims, key=lambda r: (r.t_admit, r.idx))
+        group = [victim] + list(victim.forks)
+        # detach the victim from ITS leader (if it is a pending fork)
+        # before touching the group: the group members' own parent is the
+        # victim, whose forks list is about to be cleared wholesale
+        if victim.parent is not None:
+            victim.parent.forks.remove(victim)
+        for req in group:
+            req.parent = None
+            req.forks = []
+            self.kv.free_slot(req.slot)
+            del self._active[req.slot]
+            req.slot = -1
+            req.state = "QUEUED"
+            req.prefill_done = 0
+            # the victim's tokens are discarded and recomputed: un-count
+            # them so kept-token metrics (occupancy, tokens/s) stay honest
+            self.stats.tokens_generated -= len(req.tokens)
+            self.stats.preempted_slot_steps += max(len(req.tokens) - 1, 0)
+            req.tokens, req.logps = [], []
+            if req.forked:
+                # its forked prompt K/V is gone and will be recomputed —
+                # void the shared-prefill credit, or g_eff would overstate
+                # sharing to the scheduler exactly when preemption thrash
+                # makes sharing least effective
+                self.stats.prefill_tokens_shared -= req.plen
+                req.forked = False
+        self._queue[:0] = group
         self.stats.preemptions += 1
         return True
 
@@ -269,12 +414,15 @@ class PagedEngine:
                   or self.serve.max_slots + self.serve.prefill_chunk)
 
         if decode_slots:
-            # grow every sequence's table for the token it is about to
-            # write; preempt youngest-first until the pool covers the rest
+            # every sequence is about to write one token: COW-privatize the
+            # target page and grow the table to cover it; preempt
+            # youngest-first until the pool covers the rest
             while True:
-                lacking = [s for s in decode_slots
-                           if not self.kv.ensure(s, self._active[s].written
-                                                 + 1)]
+                lacking = [
+                    s for s in decode_slots
+                    if not (self.kv.writable(s, self._active[s].written)
+                            and self.kv.ensure(s, self._active[s].written + 1))
+                ]
                 if not lacking:
                     break
                 if not self._preempt_youngest():
@@ -296,6 +444,7 @@ class PagedEngine:
             req = self._active[slot]
             if req.state == "DECODE" and req.finished:
                 self._finish(req, now)
+        self.stats.cow_copies = self.kv.cow_copies
         return True
 
     def _decode_batch(self, slots: List[int], now: float) -> None:
@@ -304,18 +453,23 @@ class PagedEngine:
         S = self.serve.max_slots
         token = np.zeros((S,), np.int32)
         pos = np.zeros((S,), np.int32)
-        # rows not decoding this step (idle OR mid-prefill) get a zeroed
-        # table row: their dummy write lands in the null page instead of a
-        # prefilling sequence's first real page
-        bt = np.zeros_like(self.kv.block_tables)
+        active = np.zeros((S,), np.int32)
         for s in slots:
             r = self._active[s]
             token[s] = r.tokens[-1]
             pos[s] = r.written                       # slot the token lands in
-            bt[s] = self.kv.block_tables[s]
+            active[s] = 1
+        # the device block table is cached: re-upload only when the
+        # allocator mutated the host copy; inactive-slot masking happens
+        # inside the jitted step (null-page routing), not by editing rows
+        if self.kv.dirty or self._bt_dev is None:
+            self._bt_dev = jnp.asarray(self.kv.block_tables)
+            self.kv.dirty = False
+            self.stats.bt_uploads += 1
         logits, nk, nv = self._decode(
             self._params, self.kv.k_pages, self.kv.v_pages,
-            jnp.asarray(bt), jnp.asarray(token), jnp.asarray(pos))
+            self._bt_dev, jnp.asarray(token), jnp.asarray(pos),
+            jnp.asarray(active))
         self.kv.k_pages, self.kv.v_pages = nk, nv
         toks, logps = self._sample(logits, self._split())
         for s in slots:
@@ -331,7 +485,35 @@ class PagedEngine:
         occ = self.kv.occupancy()
         self.stats.page_occ_sum += occ["page_occupancy"]
         self.stats.pool_util_sum += occ["pool_util"]
+        self.stats.shared_frac_sum += occ["shared_frac"]
         self.stats.occ_samples += 1
+
+    def _fork_siblings(self, leader: _Request, last_logits: jax.Array,
+                       now: float) -> None:
+        """Leader's prefill just completed: alias each waiting sibling's
+        block table onto the leader's prompt pages and sample its own
+        first token from the shared prompt logits.  No prefill compute,
+        no K/V movement — divergence is handled page-locally by the COW
+        barrier when siblings start writing."""
+        for sib in list(leader.forks):
+            got = self.kv.fork_slot(leader.slot, leader.plen, child=sib.slot)
+            assert got == sib.slot
+            tok, logp = self._sample(last_logits, self._split())
+            sib.tokens.append(int(tok))
+            sib.logps.append(float(logp))
+            sib.state = "DECODE"
+            sib.parent = None
+            sib.forked = True
+            # the sibling's prompt K/V is the leader's: the leader's
+            # version provenance is its provenance (conservative superset)
+            sib.versions = set(leader.versions)
+            self.kv.seq_lens[sib.slot] = sib.plen
+            self.stats.tokens_generated += 1
+            self.stats.prefill_tokens_shared += sib.plen
+            self.stats.forks += 1
+            if sib.tokens[-1] == self.gen.eos_id:
+                sib.max_new = 1                       # EOS straight away
+        leader.forks = []
 
     def _prefill_one(self, req: _Request) -> int:
         chunk = self.serve.prefill_chunk
@@ -360,6 +542,8 @@ class PagedEngine:
             self.stats.tokens_generated += 1
             if req.tokens[-1] == self.gen.eos_id:
                 req.max_new = 1                       # EOS straight away
+            if req.forks:
+                self._fork_siblings(req, logits[n - 1], time.time())
         return n
 
     # -------------------------------------------------------------- frontend
@@ -392,6 +576,21 @@ class PagedEngine:
         dt = time.time() - t0
         return self._package(n_before, wall_s=dt, base=base)
 
+    def generate_groups(self, tasks: Sequence[MathTask], group_size: int, *,
+                        group_ids: Optional[Sequence[int]] = None,
+                        ) -> Tuple[List[Rollout], Dict]:
+        """GRPO frontend: ``group_size`` completions per task, one prefill
+        per group (prompt pages COW-shared across the siblings).  Rollouts
+        come back grouped (task-major), metrics are per-call deltas."""
+        t0 = time.time()
+        n_before = len(self._done)
+        base = dataclasses.replace(self.stats, gen_samples=[])
+        for j, t in enumerate(tasks):
+            gid = j if group_ids is None else int(group_ids[j])
+            self.submit_group(t, group_size, group_id=gid)
+        self.drain()
+        return self._package(n_before, wall_s=time.time() - t0, base=base)
+
     def _package(self, since: int, *, wall_s: float,
                  base: "EngineStats") -> Tuple[List[Rollout], Dict]:
         new = sorted(self._done[since:], key=lambda r: r.idx)
@@ -416,6 +615,8 @@ class PagedEngine:
                                    - base.preempted_slot_steps)
         occ_n = st.occ_samples - base.occ_samples
         tokens = st.tokens_generated - base.tokens_generated
+        pf = st.prefill_tokens - base.prefill_tokens
+        pf_shared = st.prefill_tokens_shared - base.prefill_tokens_shared
         metrics = {
             "weight_swaps": st.weight_swaps - base.weight_swaps,
             "versions": sorted(versions_used),
@@ -424,11 +625,21 @@ class PagedEngine:
                          if rollouts else 0.0),
             "decode_steps": steps,
             "decode_slot_steps": slot_steps,
-            "prefill_tokens": st.prefill_tokens - base.prefill_tokens,
+            "prefill_tokens": pf,
+            "prefill_tokens_shared": pf_shared,
+            "prefix_hit_rate": pf_shared / (pf + pf_shared)
+                               if pf + pf_shared else 0.0,
+            "g_eff": (pf + pf_shared) / pf if pf else 1.0,
+            "forks": st.forks - base.forks,
+            "cow_copies": st.cow_copies - base.cow_copies,
+            "bt_uploads": st.bt_uploads - base.bt_uploads,
             "slot_occupancy": (kept_steps / (steps * st.max_slots)
                                if steps else 1.0),
             "page_occupancy": ((st.page_occ_sum - base.page_occ_sum) / occ_n
                                if occ_n else 1.0),
+            "shared_page_fraction": ((st.shared_frac_sum
+                                      - base.shared_frac_sum) / occ_n
+                                     if occ_n else 0.0),
             "preemptions": st.preemptions - base.preemptions,
             "tokens_per_sec": tokens / wall_s if wall_s > 0 else 0.0,
         }

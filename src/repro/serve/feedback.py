@@ -13,6 +13,14 @@ serving behavior; with no report for a type it defers to the fallback,
 and with no provider at all plans stay bit-identical to the analytic
 tables.
 
+The same loop closes for **prefix sharing**: the engine measures its
+prefix-hit rate and effective prefill amortization (``g_eff`` = prompt
+tokens logically needed per prompt token actually computed — GRPO groups
+COW-fork the shared prompt instead of prefilling it G times), and
+``ServingCostModel.prefill_g_eff`` feeds it to the scheduler, which
+prices replica prefill as C_prefill / G_eff.  No report (or a report
+from an engine without sharing) → G_eff = 1 → plans bit-identical.
+
 ``fit_gen_time`` turns the engine's per-request (length, seconds) samples
 into a ``core.cost_model.GenTimeModel`` — the length-distribution-aware
 generation-time model the simulator consumes instead of a fixed
@@ -43,6 +51,11 @@ class EngineReport:
     page_occupancy: float          # live tokens / allocated page capacity
     batch_slots: int
     decode_steps: int
+    # prefix sharing (COW forks): measured on the engine, priced by the
+    # scheduler as C_prefill / g_eff.  Defaults = no sharing observed.
+    prefix_hit_rate: float = 0.0   # prompt tokens served by a fork / needed
+    shared_page_fraction: float = 0.0  # logical page refs on shared pages
+    g_eff: float = 1.0             # needed prompt tokens / computed ones
 
     @classmethod
     def from_stats(cls, stats: EngineStats, device_type: str,
@@ -53,7 +66,10 @@ class EngineReport:
                    slot_occupancy=stats.slot_occupancy,
                    page_occupancy=stats.page_occupancy,
                    batch_slots=stats.max_slots,
-                   decode_steps=stats.decode_steps)
+                   decode_steps=stats.decode_steps,
+                   prefix_hit_rate=stats.prefix_hit_rate,
+                   shared_page_fraction=stats.shared_page_fraction,
+                   g_eff=stats.g_eff)
 
 
 class ServingCostModel(CostProvider):
@@ -76,6 +92,15 @@ class ServingCostModel(CostProvider):
             return self.fallback.decode_engine_eff(profile)
         return _clip(rep.slot_occupancy)
 
+    def prefill_g_eff(self, profile: DeviceProfile) -> float:
+        """Measured prefix-sharing amortization: replica prefill is priced
+        as C_prefill / G_eff.  Clamped at ≥1 (sharing can only help); no
+        report for the type → fallback (default 1.0 → bit-identical)."""
+        rep = self.reports.get(profile.name)
+        if rep is None or rep.decode_steps <= 0:
+            return self.fallback.prefill_g_eff(profile)
+        return max(float(rep.g_eff), 1.0)
+
     # every roofline-level factor defers to the fallback provider
     def train_mfu(self, profile: DeviceProfile) -> float:
         return self.fallback.train_mfu(profile)
@@ -91,11 +116,19 @@ class ServingCostModel(CostProvider):
 
 
 def fit_gen_time(samples: Sequence[Tuple[int, float]],
-                 prompt_len: float = 0.0) -> Optional[GenTimeModel]:
+                 prompt_len: float = 0.0,
+                 g_eff: float = 1.0) -> Optional[GenTimeModel]:
     """Least-squares fit of T(L) = t_prefill + a·L + b·L·(prompt + L/2)
     over the engine's per-request (completion length, seconds) samples.
     Needs ≥3 distinct lengths to resolve the quadratic; returns None
-    otherwise (callers keep the analytic model)."""
+    otherwise (callers keep the analytic model).
+
+    ``g_eff`` (e.g. ``EngineStats.g_eff``) marks the prefix-sharing
+    amortization the simulator should charge: the fitted t_prefill is
+    divided by it at evaluation time (``GenTimeModel.raw``).  Pass it
+    when the samples came from an engine WITHOUT sharing but the
+    simulated deployment will share; samples from a sharing engine
+    already absorb the saving, so the default 1.0 is correct there."""
     if len({ln for ln, _ in samples}) < 3:
         return None
     L = np.asarray([ln for ln, _ in samples], np.float64)
@@ -105,4 +138,4 @@ def fit_gen_time(samples: Sequence[Tuple[int, float]],
     tp, a, b = (max(float(c), 0.0) for c in coef)
     if a == 0.0 and b == 0.0:
         return None
-    return GenTimeModel(a=a, b=b, t_prefill=tp)
+    return GenTimeModel(a=a, b=b, t_prefill=tp, g_eff=max(g_eff, 1.0))

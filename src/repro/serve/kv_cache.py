@@ -1,17 +1,45 @@
-"""Paged KV cache: fixed-size blocks, block tables, alloc/free pool.
+"""Paged KV cache: fixed-size blocks, block tables, refcounted COW pool.
 
 Device side, the cache is two pools ``[L, P, page, Hkv, D]`` (keys and
 values for every layer) plus an int32 block table ``[max_slots, maxp]``;
 host side, this class is the allocator: a LIFO free list of page ids, a
-free list of sequence slots, and per-slot length bookkeeping.  Pages are
-allocated lazily as sequences grow (admission only reserves the prompt),
-so pool memory tracks *actual* context, not the right-padded worst case —
-the whole point of paging.
+free list of sequence slots, per-slot length bookkeeping, and a per-page
+reference count.
+
+Pages are allocated lazily as sequences grow (admission only reserves
+the prompt), so pool memory tracks *actual* context, not the
+right-padded worst case — the whole point of paging.
+
+**Prefix sharing (copy-on-write).** A GRPO group decodes ``G``
+completions of the *same* prompt; storing G copies of the prompt's K/V
+wastes both prefill FLOPs and the pool capacity that bounds the decode
+batch.  Instead, ``fork_slot(parent)`` gives a child slot whose block
+table *aliases* the parent's prompt pages (refcount incremented, no data
+moved).  The lifecycle is::
+
+    fork        child table rows point at the parent's pages (ref += 1)
+    shared      both sequences read the pages; reads never copy
+    diverge     before a sequence WRITES into a page with ref > 1,
+                ``writable()`` copies that page (device-side page copy),
+                points the writer's table at the private copy, and
+                decrements the shared page's refcount
+    free        ``free_slot``/evict/preempt decrement refcounts; a page
+                returns to the free list only when its count hits zero
+
+Only the partial tail page of the prompt is ever copied (full prompt
+pages are read-only forever), so a fork costs at most one page of HBM
+traffic and zero prefill compute (the copy is a donated jit, updating
+the pool in place on device backends; backends without donation pay a
+pool copy, like every other functional update there).
 
 Page id 0 is reserved as the null sink: unused block-table entries point
 at it, and the batched decode step routes inactive slots' writes there
 (the gather-based kernel DMAs every table entry, so all entries must name
 a valid page).
+
+``dirty`` flags host-table mutations so the engine can cache the device
+(``jnp``) copy of ``block_tables`` and re-upload only when something
+actually changed (see ``PagedEngine._decode_batch``).
 
 ``page_size=None`` resolves through the per-device-type tuned table
 (``kernels.tuning``; the autotuner's ``paged_attention`` winners), falling
@@ -19,13 +47,28 @@ back to 128.
 """
 from __future__ import annotations
 
+import warnings
+from functools import partial
 from typing import Dict, List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import tuning
 from repro.models.api import ModelConfig
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _copy_page(pages: jax.Array, src: jax.Array, dst: jax.Array) -> jax.Array:
+    """COW page copy ``pages[:, dst] = pages[:, src]``.  The pool is
+    donated so XLA updates it in place — one page of HBM traffic — rather
+    than cloning the whole pool, which an un-jitted ``.at[].set()`` would
+    do.  ``src``/``dst`` are traced scalars, so every page pair shares one
+    compilation.  (Backends without donation, e.g. CPU, silently fall
+    back to a pool copy — same cost as any other functional update
+    there.)"""
+    return pages.at[:, dst].set(pages[:, src])
 
 
 class PagedKVCache:
@@ -54,6 +97,11 @@ class PagedKVCache:
         self._free_pages: List[int] = list(range(self.num_pages - 1, 0, -1))
         self._free_slots: List[int] = list(range(max_slots - 1, -1, -1))
         self._pages_of: Dict[int, List[int]] = {}
+        # per-page reference count; the null page stays at 0 forever
+        self._ref = np.zeros((self.num_pages,), np.int32)
+        self.dirty = True          # host block_tables newer than device copy
+        self.forks = 0             # fork_slot calls (lifetime)
+        self.cow_copies = 0        # divergent-write page copies (lifetime)
 
     # -------------------------------------------------------------- alloc
     def pages_needed(self, n_tokens: int) -> int:
@@ -74,6 +122,7 @@ class PagedKVCache:
         self._pages_of[slot] = []
         self.seq_lens[slot] = 0
         self.block_tables[slot, :] = 0
+        self.dirty = True
         return slot
 
     def ensure(self, slot: int, n_tokens: int) -> bool:
@@ -88,29 +137,111 @@ class PagedKVCache:
         for _ in range(need):
             pid = self._free_pages.pop()
             self.block_tables[slot, len(owned)] = pid
+            self._ref[pid] = 1
             owned.append(pid)
+        self.dirty = True
+        return True
+
+    def fork_slot(self, parent: int, n_tokens: int,
+                  child: Optional[int] = None) -> Optional[int]:
+        """Make ``child`` a slot whose table aliases ``parent``'s pages
+        covering ``n_tokens`` logical slots (refcounts incremented, no K/V
+        moved).  ``child=None`` allocates a fresh slot (None when none is
+        free); passing a pre-allocated empty slot lets callers reserve the
+        slot at admission and fork later.  The caller must route any write
+        into a shared page through ``writable`` first."""
+        owned = self._pages_of[parent]
+        npages = self.pages_needed(n_tokens)
+        assert npages <= len(owned), "parent does not cover the prefix"
+        if child is None:
+            child = self.alloc_slot()
+            if child is None:
+                return None
+        cpages = self._pages_of[child]
+        assert not cpages, "fork target slot must hold no pages"
+        for i in range(npages):
+            pid = owned[i]
+            self.block_tables[child, i] = pid
+            self._ref[pid] += 1
+            cpages.append(pid)
+        self.seq_lens[child] = min(int(self.seq_lens[parent]), n_tokens)
+        self.dirty = True
+        self.forks += 1
+        return child
+
+    def writable(self, slot: int, pos: int) -> bool:
+        """Copy-on-write barrier: make the page holding logical slot
+        ``pos`` privately owned by ``slot`` (copying it if shared) so the
+        caller may write there.  True when the position is writable
+        (including positions past the table — ``ensure`` allocates those
+        as private pages); False when a copy is needed but the pool has
+        no free page (caller preempts and retries)."""
+        idx = pos // self.page
+        owned = self._pages_of[slot]
+        if idx >= len(owned):
+            return True                    # ensure() will allocate fresh
+        pid = owned[idx]
+        if self._ref[pid] <= 1:
+            return True
+        if not self._free_pages:
+            return False
+        new = self._free_pages.pop()
+        # device-side page copy: one page of K and V across all layers
+        # (donated jit → in-place on device; CPU warns donation is unused)
+        src, dst = jnp.int32(pid), jnp.int32(new)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            self.k_pages = _copy_page(self.k_pages, src, dst)
+            self.v_pages = _copy_page(self.v_pages, src, dst)
+        self._ref[pid] -= 1
+        self._ref[new] = 1
+        owned[idx] = new
+        self.block_tables[slot, idx] = new
+        self.dirty = True
+        self.cow_copies += 1
         return True
 
     def free_slot(self, slot: int) -> None:
         for pid in self._pages_of.pop(slot):
-            self._free_pages.append(pid)
+            self._ref[pid] -= 1
+            if self._ref[pid] == 0:
+                self._free_pages.append(pid)
         self.block_tables[slot, :] = 0
         self.seq_lens[slot] = 0
         self._free_slots.append(slot)
+        self.dirty = True
 
     # -------------------------------------------------------------- stats
     @property
     def pages_in_use(self) -> int:
-        return sum(len(p) for p in self._pages_of.values())
+        """Physical pages holding live data (shared pages count once)."""
+        return int((self._ref > 0).sum())
+
+    @property
+    def logical_pages(self) -> int:
+        """Page references across all live block tables (shared pages
+        count once per referencing sequence)."""
+        return int(self._ref.sum())
+
+    @property
+    def shared_pages(self) -> int:
+        return int((self._ref > 1).sum())
 
     @property
     def slots_in_use(self) -> int:
         return self.max_slots - len(self._free_slots)
 
+    def shared_frac(self) -> float:
+        """Fraction of logical page references served by a shared physical
+        page — the pool capacity prefix sharing is saving right now."""
+        logical = self.logical_pages
+        return (logical - self.pages_in_use) / logical if logical else 0.0
+
     def page_occupancy(self) -> float:
-        """Fraction of allocated page capacity holding live tokens — the
-        internal-fragmentation metric the page-size knob trades against."""
-        cap = self.pages_in_use * self.page
+        """Fraction of *logical* page capacity holding live tokens — the
+        internal-fragmentation metric the page-size knob trades against
+        (logical, not physical, so sharing cannot push it past 1)."""
+        cap = self.logical_pages * self.page
         return float(int(self.seq_lens.sum()) / cap) if cap else 1.0
 
     def occupancy(self) -> Dict[str, float]:
@@ -120,5 +251,6 @@ class PagedKVCache:
             "pages_total": float(usable),
             "pool_util": self.pages_in_use / usable if usable else 0.0,
             "page_occupancy": self.page_occupancy(),
+            "shared_frac": self.shared_frac(),
             "slots_in_use": float(self.slots_in_use),
         }

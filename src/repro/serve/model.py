@@ -54,16 +54,20 @@ def _gather_attention(q: Array, kp: Array, vp: Array, table: Array,
 
 def paged_decode_step(params: Dict, cfg: ModelConfig, k_pages: Array,
                       v_pages: Array, block_tables: Array, token: Array,
-                      pos: Array) -> Tuple[Array, Array, Array]:
-    """One decode token for every slot: token [S], pos [S] →
+                      pos: Array, active: Array) -> Tuple[Array, Array, Array]:
+    """One decode token for every slot: token [S], pos [S], active [S] →
     (logits [S, padded_vocab], k_pages, v_pages).
 
-    Inactive slots ride along with pos=0 and an all-zero table row, so
-    their writes land in the null page and their logits are garbage the
-    engine discards.
+    ``block_tables`` is the FULL host table (the engine keeps a cached
+    device copy and re-uploads it only when the allocator dirtied it);
+    ``active`` masks the slots decoding this step.  Inactive slots ride
+    along with pos=0 and their table row zeroed *here* — writes land in
+    the null page and their logits are garbage the engine discards — so
+    the cached table never needs per-step editing on the host.
     """
     S = token.shape[0]
     page = k_pages.shape[2]
+    block_tables = jnp.where(active[:, None] > 0, block_tables, 0)
     h = jnp.take(params["embed"], token[:, None], axis=0)          # [S,1,d]
     positions = pos[:, None]
     page_of = block_tables[jnp.arange(S), pos // page]             # [S]

@@ -4,20 +4,32 @@ The load-bearing properties:
 
   * allocator — alloc/free round-trips, lazy growth, exhaustion is
     refused atomically, occupancy stats track live tokens;
+  * prefix sharing — fork_slot aliases without copying, the COW barrier
+    copies exactly the written page, refcounts conserve the pool under
+    ANY interleaving of alloc/ensure/fork/cow/free (property test), and
+    a forked greedy sibling is token-identical to the oracle;
   * engine vs static oracle — greedy completions token-identical on an
     equal-length batch, per-row identical on ragged batches (each row
     compared against a B=1 static run, where right-padding is a no-op),
     identical across queue pressure and preemption;
   * AReaL staleness across a mid-sequence weight swap — a trajectory
     spanning versions v, v+1 is accounted against v and the η admission
-    rule in rl.buffer keeps holding;
-  * feedback — ServingCostModel moves h_ψ pricing, the no-provider plan
-    stays bit-identical; GenTimeModel redistributes simulated generation
-    time by length without breaking simulator conservation.
+    rule in rl.buffer keeps holding (including forked siblings, which
+    inherit the leader's version provenance);
+  * feedback — ServingCostModel moves h_ψ pricing AND prefill G_eff
+    pricing, the no-provider plan stays bit-identical; GenTimeModel
+    redistributes simulated generation time by length without breaking
+    simulator conservation.
 """
 import jax
 import numpy as np
 import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                                   # pragma: no cover
+    from _prop import given, settings, st
 
 from repro.core.cluster import PROFILES
 from repro.core.cost_model import (GenTimeModel, LengthDistribution,
@@ -76,6 +88,288 @@ def test_kv_cache_exhaustion_is_atomic():
     assert kv.ensure(b, 8)                    # 1 page fits
     kv.free_slot(a)
     assert kv.ensure(b, 32)                   # freed pages reusable
+
+
+# ------------------------------------------------------------ prefix sharing
+def test_fork_slot_aliases_without_copy_and_cow_diverges():
+    kv = PagedKVCache(TINY, max_slots=3, max_len=64, page_size=8)
+    parent = kv.alloc_slot()
+    assert kv.ensure(parent, 20)               # 3 pages, last one partial
+    kv.seq_lens[parent] = 20
+    before = kv.pages_in_use
+    child = kv.fork_slot(parent, 20)
+    assert child is not None and child != parent
+    assert kv.pages_in_use == before           # aliasing moved no pages
+    assert (kv.block_tables[child][:3] == kv.block_tables[parent][:3]).all()
+    assert kv.shared_pages == 3
+    # divergent write into the partial tail page copies exactly that page
+    tail = kv.block_tables[child][2]
+    assert kv.writable(child, 20)
+    assert kv.cow_copies == 1
+    assert kv.block_tables[child][2] != tail          # child got a copy
+    assert kv.block_tables[parent][2] == tail         # parent keeps original
+    assert (kv.block_tables[child][:2] == kv.block_tables[parent][:2]).all()
+    assert kv.pages_in_use == before + 1
+    # ref==1 writes are free: no further copy
+    assert kv.writable(child, 20) and kv.cow_copies == 1
+    # frees decrement; pool conserved throughout
+    kv.free_slot(parent)
+    assert kv.pages_in_use == 3                # child holds 2 shared + 1 own
+    kv.free_slot(child)
+    assert kv.pages_in_use == 0
+    assert kv.free_pages == kv.num_pages - 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 1 << 20), min_size=1, max_size=40))
+def test_refcount_conservation_property(ops):
+    """Any interleaving of alloc/ensure/fork/cow-write/free keeps the pool
+    conserved: physical pages_in_use + free_pages == num_pages − 1, every
+    live block-table entry names a page with refcount > 0, and no page
+    sits on the free list while still referenced."""
+    kv = PagedKVCache(TINY, max_slots=4, max_len=64, page_size=8,
+                      num_pages=11)
+    live = []
+    for x in ops:
+        op = x % 5
+        if op == 0:
+            s = kv.alloc_slot()
+            if s is not None:
+                live.append(s)
+        elif op == 1 and live:
+            kv.free_slot(live.pop((x // 5) % len(live)))
+        elif op == 2 and live:
+            s = live[(x // 5) % len(live)]
+            kv.ensure(s, (x // 25) % 70)       # may exceed max_len: refused
+        elif op == 3 and live:
+            parent = live[(x // 5) % len(live)]
+            covered = len(kv._pages_of[parent]) * kv.page
+            if covered:
+                child = kv.fork_slot(parent, 1 + (x // 25) % covered)
+                if child is not None:
+                    live.append(child)
+        elif op == 4 and live:
+            s = live[(x // 5) % len(live)]
+            covered = len(kv._pages_of[s]) * kv.page
+            if covered:
+                kv.writable(s, (x // 25) % covered)
+        # --- invariants after every operation
+        assert kv.pages_in_use + kv.free_pages == kv.num_pages - 1
+        assert kv._ref[0] == 0                 # null page never owned
+        free = set(kv._free_pages)
+        assert all(kv._ref[p] == 0 for p in free)
+        for s in live:
+            owned = kv._pages_of[s]
+            for i, pid in enumerate(owned):
+                assert kv._ref[pid] > 0, "live table references a dead page"
+                assert kv.block_tables[s, i] == pid
+                assert pid not in free
+            assert (kv.block_tables[s, len(owned):] == 0).all()
+
+
+def test_submit_group_siblings_token_identical_and_share_prefill():
+    store = _store()
+    task = MathTaskGenerator(seed=19).sample()
+    gen = GenConfig(max_new_tokens=12, greedy=True, eos_id=-1)
+    oracle, _ = RolloutEngine(TINY, store, gen).generate([task])
+    eng = PagedEngine(TINY, store, gen,
+                      ServeConfig(max_slots=4, max_len=128, page_size=8,
+                                  prefill_chunk=8))
+    eng.submit_group(task, 4, group_id=9)
+    eng.drain()
+    rollouts, m = eng.collect()
+    assert len(rollouts) == 4
+    for r in rollouts:
+        assert r.completion_ids == oracle[0].completion_ids
+        assert r.group_id == 9
+    plen = len(task.prompt_ids)
+    assert m["prefill_tokens"] == plen              # prompt computed ONCE
+    assert m["prefill_tokens_shared"] == 3 * plen
+    assert m["forks"] == 3
+    assert m["g_eff"] == pytest.approx(4.0)
+    assert m["prefix_hit_rate"] == pytest.approx(0.75)
+
+
+def test_admission_dedupes_identical_prompts_outside_groups():
+    """Two separate submits of the SAME prompt must coalesce into one
+    prefill (hash-based admission dedupe), not two."""
+    store = _store()
+    task = MathTaskGenerator(seed=23).sample()
+    gen = GenConfig(max_new_tokens=10, greedy=True, eos_id=-1)
+    eng = PagedEngine(TINY, store, gen,
+                      ServeConfig(max_slots=2, max_len=64, page_size=8,
+                                  prefill_chunk=8))
+    eng.submit([task])
+    eng.submit([task])                 # separate call, identical prompt
+    eng.drain()
+    rollouts, m = eng.collect()
+    assert len(rollouts) == 2
+    assert rollouts[0].completion_ids == rollouts[1].completion_ids
+    assert m["forks"] == 1
+    assert m["prefill_tokens"] == len(task.prompt_ids)
+
+
+def test_share_prefix_disabled_prefills_every_request():
+    store = _store()
+    task = MathTaskGenerator(seed=23).sample()
+    gen = GenConfig(max_new_tokens=8, greedy=True, eos_id=-1)
+    eng = PagedEngine(TINY, store, gen,
+                      ServeConfig(max_slots=4, max_len=64, page_size=8,
+                                  prefill_chunk=8, share_prefix=False))
+    eng.submit_group(task, 4)
+    eng.drain()
+    _, m = eng.collect()
+    assert m["forks"] == 0 and m["cow_copies"] == 0
+    assert m["g_eff"] == 1.0
+    assert m["prefill_tokens"] == 4 * len(task.prompt_ids)
+
+
+def test_group_preemption_recomputes_correctly():
+    """A pool too small for the whole group mid-decode forces COW misses
+    and preemptions; every sibling must still match the oracle."""
+    store = _store()
+    task = MathTaskGenerator(seed=27).sample()
+    gen = GenConfig(max_new_tokens=24, greedy=True, eos_id=-1)
+    oracle, _ = RolloutEngine(TINY, store, gen).generate([task])
+    plen = len(task.prompt_ids)
+    # room for the prompt + roughly two divergent siblings
+    num_pages = 1 + (plen + 7) // 8 + 2 * ((plen + 24 + 7) // 8)
+    eng = PagedEngine(TINY, store, gen,
+                      ServeConfig(max_slots=4, max_len=plen + 24,
+                                  page_size=8, prefill_chunk=8,
+                                  num_pages=num_pages))
+    eng.submit_group(task, 4)
+    eng.drain()
+    rollouts, m = eng.collect()
+    assert len(rollouts) == 4
+    for r in rollouts:
+        assert r.completion_ids == oracle[0].completion_ids
+    assert m["preemptions"] >= 1
+    assert 0.0 < m["slot_occupancy"] <= 1.0
+
+
+def test_preempted_fork_rolls_back_shared_prefill_credit():
+    """A forked sibling that gets preempted recomputes its prompt solo,
+    so its shared-prefill credit is void — g_eff must not overstate
+    sharing to the scheduler in the preemption-thrash regime."""
+    store = _store()
+    task = MathTaskGenerator(seed=37).sample()
+    gen = GenConfig(max_new_tokens=6, greedy=True, eos_id=-1)
+    oracle, _ = RolloutEngine(TINY, store, gen).generate([task])
+    eng = PagedEngine(TINY, store, gen,
+                      ServeConfig(max_slots=2, max_len=64, page_size=8,
+                                  prefill_chunk=32))
+    eng.submit_group(task, 2)
+    while eng.stats.forks < 1:
+        assert eng.step()
+    plen = len(task.prompt_ids)
+    assert eng.stats.prefill_tokens_shared == plen
+    # the fork is the youngest non-protected sequence → preempted
+    assert eng._preempt_youngest()
+    assert eng.stats.prefill_tokens_shared == 0
+    eng.drain()
+    rollouts, m = eng.collect()
+    assert m["prefill_tokens"] == 2 * plen     # sibling recomputed solo
+    assert m["g_eff"] == 1.0 and m["prefix_hit_rate"] == 0.0
+    for r in rollouts:
+        assert r.completion_ids == oracle[0].completion_ids
+
+
+def test_headroom_short_waits_instead_of_duplicate_leader():
+    """When fork headroom is short, the next identical-prompt request
+    must WAIT for the active leader rather than admit as a second leader
+    that duplicates the prompt prefill at higher page cost."""
+    store = _store()
+    task = _task_with_prompt_len(20, seed=35)
+    gen = GenConfig(max_new_tokens=4, greedy=True, eos_id=-1)
+    oracle, _ = RolloutEngine(TINY, store, gen).generate([task])
+    # pool: prompt pages + 2 → one fork coalesces, the second must wait
+    eng = PagedEngine(TINY, store, gen,
+                      ServeConfig(max_slots=3, max_len=24, page_size=8,
+                                  prefill_chunk=8, num_pages=6))
+    eng.submit_group(task, 3)
+    while eng.step():
+        prefilling = [r for r in eng._active.values()
+                      if r.state == "PREFILL"]
+        assert len(prefilling) <= 1    # never two leaders of one prompt
+    rollouts, m = eng.collect()
+    assert len(rollouts) == 3
+    for r in rollouts:
+        assert r.completion_ids == oracle[0].completion_ids
+    assert m["forks"] >= 1 and m["preemptions"] == 0
+    # the prompt was computed once per LEADER (2 leaders: the original
+    # and the waiter re-admitted after the group drained), never thrice
+    assert m["prefill_tokens"] == 2 * len(task.prompt_ids)
+
+
+def test_preempted_leader_drags_pending_forks():
+    """A mid-prefill leader chosen as preemption victim must take its
+    pending FORK siblings back to the queue with it (they have no pages
+    to fork from once the leader is gone) — and the whole group must
+    still recompute correctly afterwards."""
+    store = _store()
+    task = MathTaskGenerator(seed=33).sample()
+    gen = GenConfig(max_new_tokens=8, greedy=True, eos_id=-1)
+    oracle, _ = RolloutEngine(TINY, store, gen).generate([task])
+    eng = PagedEngine(TINY, store, gen,
+                      ServeConfig(max_slots=3, max_len=64, page_size=8,
+                                  prefill_chunk=8))
+    eng.submit_group(task, 3)
+    assert eng.step()                  # admit leader + 2 FORK siblings
+    leaders = [r for r in eng._active.values() if r.state == "PREFILL"]
+    assert len(leaders) == 1 and len(leaders[0].forks) == 2
+    # make the mid-prefill leader the preemption victim (a requeue corner
+    # reachable when an older preempted request coalesces under a newer
+    # leader's group)
+    leaders[0].idx = 99
+    assert eng._preempt_youngest()
+    assert not eng._active and len(eng._queue) == 3
+    assert all(r.state == "QUEUED" and r.slot == -1 and not r.forks
+               and r.parent is None for r in eng._queue)
+    eng.drain()
+    rollouts, _ = eng.collect()
+    assert len(rollouts) == 3
+    for r in rollouts:
+        assert r.completion_ids == oracle[0].completion_ids
+
+
+def test_forked_siblings_inherit_leader_version_provenance():
+    """Weight swap lands between the leader's admission and a sibling's
+    completion: every group member is accounted against the OLDEST
+    version its K/V touched (the leader's), so η admission keeps
+    holding for forks."""
+    store = _store()
+    params, _ = store.fetch(dtype=TINY.jdtype)
+    task = MathTaskGenerator(seed=29).sample()
+    eng = PagedEngine(TINY, store,
+                      GenConfig(max_new_tokens=16, segment=2, greedy=True,
+                                eos_id=-1),
+                      ServeConfig(max_slots=3, max_len=96, page_size=8,
+                                  prefill_chunk=8))
+    eng.submit_group(task, 3)
+    while eng.stats.decode_steps < 3:
+        assert eng.step()
+    store.publish(params)                       # v2 mid-group
+    eng.drain()
+    rollouts, metrics = eng.collect()
+    assert metrics["weight_swaps"] >= 1 and metrics["versions"] == [1, 2]
+    assert len(rollouts) == 3
+    for r in rollouts:
+        assert r.version == 1                   # oldest, for every sibling
+
+
+def test_block_table_upload_cache():
+    """Steady decode must not re-upload the block table every step: the
+    device copy is cached and refreshed only when the allocator dirtied
+    the host table."""
+    store = _store()
+    eng = PagedEngine(TINY, store,
+                      GenConfig(max_new_tokens=40, greedy=True, eos_id=-1),
+                      ServeConfig(max_slots=2, max_len=128, page_size=8,
+                                  prefill_chunk=8))
+    _, m = eng.generate(MathTaskGenerator(seed=31).equal_length_batch(2))
+    assert m["decode_steps"] >= 30
+    assert 1 <= m["bt_uploads"] < m["decode_steps"] // 2
 
 
 # ----------------------------------------------------------- engine identity
@@ -292,6 +586,59 @@ def test_serving_cost_model_moves_replica_pricing():
         cost_provider=ServingCostModel([rep])).tokens_per_sec == \
         pytest.approx(replica_throughput(spec_model, other,
                                          P).tokens_per_sec, rel=1e-9)
+
+
+def test_prefill_g_eff_prices_replica_prefill():
+    spec_model = __import__("repro.core.model_spec",
+                            fromlist=["PAPER_MODELS"]).PAPER_MODELS["1.5B"]
+    # prompt-heavy profile: prefill matters, so G_eff visibly moves h_ψ
+    P = LengthDistribution(mean_len=512, prompt_len=4096, max_len=8192)
+    cfg = ReplicaConfig("TPUv5e", (4,))
+    base = replica_throughput(spec_model, cfg, P)
+    rep = EngineReport(device_type="TPUv5e", engine="paged",
+                       tokens_per_sec=0.0, slot_occupancy=0.4,
+                       page_occupancy=0.9, batch_slots=8, decode_steps=100,
+                       prefix_hit_rate=0.875, g_eff=8.0)
+    served = replica_throughput(spec_model, cfg, P,
+                                cost_provider=ServingCostModel([rep]))
+    # prefill time divided by G_eff exactly; decode roofline untouched
+    import dataclasses as dc
+    served_g1 = replica_throughput(
+        spec_model, cfg, P,
+        cost_provider=ServingCostModel([dc.replace(rep, g_eff=1.0)]))
+    assert served.prefill_time == pytest.approx(served_g1.prefill_time / 8.0)
+    assert served.decode_step_time == served_g1.decode_step_time
+    assert served.tokens_per_sec > served_g1.tokens_per_sec
+    # default provider reports 1.0 → bit-identical to no provider
+    from repro.core.cost_model import ANALYTIC, AnalyticCostModel
+    assert AnalyticCostModel().prefill_g_eff(PROFILES["TPUv5e"]) == 1.0
+    assert "prefill_g_eff" in ANALYTIC.factors(PROFILES["TPUv5e"])
+    assert replica_throughput(
+        spec_model, cfg, P,
+        cost_provider=AnalyticCostModel()).tokens_per_sec \
+        == base.tokens_per_sec
+    # a type without a report falls back to 1.0
+    other = ReplicaConfig("TPUv5p", (4,))
+    assert replica_throughput(
+        spec_model, other, P,
+        cost_provider=ServingCostModel([rep])).tokens_per_sec == \
+        replica_throughput(spec_model, other, P).tokens_per_sec
+    # g_eff < 1 from a degenerate report is clamped: sharing cannot hurt
+    bad = dc.replace(rep, g_eff=0.25)
+    assert ServingCostModel([bad]).prefill_g_eff(PROFILES["TPUv5e"]) == 1.0
+
+
+def test_gen_time_model_g_eff_amortizes_prefill():
+    gtm1 = GenTimeModel(a=1e-3, b=0.0, t_prefill=0.8)
+    gtm8 = GenTimeModel(a=1e-3, b=0.0, t_prefill=0.8, g_eff=8.0)
+    assert gtm8.raw(100.0, 50) == pytest.approx(
+        gtm1.raw(100.0, 50) - 0.8 + 0.1)
+    # fit carries the knob through; default stays bit-identical
+    true = GenTimeModel(a=2e-3, b=1e-5, t_prefill=0.05)
+    samples = [(L, true.raw(100.0, L)) for L in (50, 100, 200, 400)]
+    fit = fit_gen_time(samples, prompt_len=100.0, g_eff=4.0)
+    assert fit.g_eff == 4.0
+    assert fit.raw(100.0, 200) < true.raw(100.0, 200)
 
 
 def test_engine_report_from_stats_and_fit():
