@@ -35,6 +35,7 @@ MODULES = [
     "fig8_autotune_gain",
     "fig9_continuous_batching",
     "fig10_prefix_sharing",
+    "fig11_online_jobs",
     "table5_scheduler_speed",
     "roofline_report",
 ]

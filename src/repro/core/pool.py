@@ -56,6 +56,12 @@ class JobSpec:
     P: LengthDistribution = field(default_factory=LengthDistribution)
     sched_cfg: "SchedulerConfig" = None        # type: ignore[assignment]
     weight: float = 1.0                        # w_j: priority in Eq. (1')
+    tier: int = 0                              # priority tier (0 = highest);
+    #                                            breaks drop/preempt order in
+    #                                            admission (core/jobs.py)
+    min_tput: float = 0.0                      # throughput floor, tokens/s
+    #                                            (0 = best-effort): the priced
+    #                                            admission feasibility bar
 
     def __post_init__(self):
         if self.sched_cfg is None:
@@ -85,6 +91,51 @@ class PoolConfig:
     rel_tol: float = 1e-3              # min relative Σ w log tput gain
 
 
+@dataclass(frozen=True)
+class JobInfeasibility:
+    """Typed per-job placement failure — the admission controller's input.
+
+    ``reason`` is machine-readable:
+      * ``"starved"``     — arbitration could not repair a feasible slice
+        for the job (every donor is at its minimum);
+      * ``"min_domains"`` — the pool has fewer ICI domains than
+        ``min_domains_per_job`` × jobs, so this job was shed;
+      * ``"infeasible"``  — the per-slice scheduler found no plan even on
+        the full pool (Algorithm 1's own diagnostic in ``detail``).
+    """
+
+    job: str
+    reason: str
+    detail: str = ""
+
+
+class PoolInfeasibleError(RuntimeError):
+    """The pool cannot place one or more jobs.
+
+    This is the *typed* boundary the control plane consumes: per-job
+    ``JobInfeasibility`` records instead of a raw
+    ``InfeasibleScheduleError`` escaping mid-arbitration (which used to
+    crash the whole pool when every seed left a job starved).  Callers
+    that can degrade — the admission controller, ``replan_pool`` via
+    ``allow_partial`` — turn this into a queueing/rejection decision.
+    """
+
+    def __init__(self, infeasible: Dict[str, JobInfeasibility]):
+        self.infeasible = dict(infeasible)
+        msg = "; ".join(f"{k}: {v.reason}" + (f" ({v.detail})" if v.detail
+                                              else "")
+                        for k, v in sorted(infeasible.items()))
+        super().__init__(f"no feasible slice for job(s): {msg}")
+
+
+def _drop_order(jobs: Sequence[JobSpec]) -> List[int]:
+    """Indices least-important-first: highest tier number sheds first, then
+    lowest weight, then latest arrival (list order) — the deterministic
+    shed/preempt priority shared with the admission controller."""
+    return sorted(range(len(jobs)),
+                  key=lambda k: (-jobs[k].tier, jobs[k].weight, -k))
+
+
 @dataclass
 class PoolPlan:
     """The pool-level answer: per-job plans + the device-ownership table."""
@@ -97,6 +148,10 @@ class PoolPlan:
     wall_time_s: float = 0.0
     pool_epoch: int = 0                # bumped by every replan_pool
     provenance: str = "initial"
+    # jobs the pool could NOT place (allow_partial mode): they own no
+    # devices and have no plan; the admission controller queues/rejects
+    # them instead of the arbitration crashing (ISSUE 6 satellite).
+    infeasible: Dict[str, JobInfeasibility] = field(default_factory=dict)
 
     # ------------------------------------------------------------- queries
     def job_devices(self, name: str) -> List[int]:
@@ -171,6 +226,11 @@ class _SliceScheduler:
         from .scheduler import InfeasibleScheduleError
         key = (job.name, frozenset(d.index for d in devices))
         if key not in self.cache:
+            if not devices:
+                # an arriving job starts with an empty slice: trivially
+                # infeasible, the repair loop seeds it from donors
+                self.cache[key] = None
+                return None
             try:
                 self.cache[key] = self.solver(
                     job, subcluster(self.cluster, devices))
@@ -252,7 +312,8 @@ def _arbitrate(jobs: Sequence[JobSpec],
                alloc: List[int],
                sched: _SliceScheduler,
                cfg: PoolConfig) -> Tuple[List[int],
-                                         Dict[str, ScheduledPlan], int]:
+                                         Dict[str, Optional[ScheduledPlan]],
+                                         int]:
     """The water-filling hill climb: single-domain transfers (richest job
     donates to the poorest first), then — when transfers stall — pairwise
     cross-type domain *exchanges* (the KL-style move that rebalances which
@@ -260,8 +321,12 @@ def _arbitrate(jobs: Sequence[JobSpec],
     First improvement in canonical order, until a sweep admits no move.
 
     Infeasible slices score as (fewer feasible jobs, …) and sort poorest,
-    so repair transfers flow to them first; if any job is still infeasible
-    when the climb converges, the pool has no valid plan and we raise.
+    so repair transfers flow to them first.  If a job is still infeasible
+    when the climb converges and no donor has slack, the job's entry in
+    the returned ``plans`` stays ``None`` — the *caller* decides whether
+    that means shed-and-retry (partial placement), queue (admission), or
+    raise (strict mode).  Raising from here used to let infeasibility
+    escape as an untyped crash.
     """
 
     def slice_devs(k: int, a: List[int]) -> List[Device]:
@@ -291,8 +356,7 @@ def _arbitrate(jobs: Sequence[JobSpec],
                   and sum(1 for a in alloc if a == dk)
                   > cfg.min_domains_per_job]
         if not donors or force_budget <= 0:
-            raise RuntimeError(f"no feasible slice for jobs {starved} "
-                               "after arbitration")
+            return alloc, plans, transfers     # starved jobs stay None
         force_budget -= 1
         dk = max(donors, key=lambda d: (
             plans[jobs[d].name].throughput_tokens_per_sec(
@@ -393,7 +457,9 @@ def _climb_rounds(jobs, domains, alloc, plans, best, transfers, sched, cfg,
 
 def _finish(jobs: Sequence[JobSpec], domains: Sequence[List[Device]],
             alloc: List[int], plans: Dict[str, ScheduledPlan],
-            transfers: int, t0: float) -> PoolPlan:
+            transfers: int, t0: float,
+            infeasible: Optional[Dict[str, JobInfeasibility]] = None
+            ) -> PoolPlan:
     owner: Dict[int, str] = {}
     for i, dom in enumerate(domains):
         for d in dom:
@@ -401,19 +467,126 @@ def _finish(jobs: Sequence[JobSpec], domains: Sequence[List[Device]],
     return PoolPlan(jobs=tuple(jobs), plans=plans, owner=owner,
                     objective=_pool_objective(jobs, plans),
                     transfers=transfers,
-                    wall_time_s=time.perf_counter() - t0)
+                    wall_time_s=time.perf_counter() - t0,
+                    infeasible=dict(infeasible or {}))
+
+
+def _shed_victim(jobs: Sequence[JobSpec],
+                 candidates: Sequence[str]) -> JobSpec:
+    """The least-important job among ``candidates`` (shed first)."""
+    cand = set(candidates)
+    for k in _drop_order(jobs):
+        if jobs[k].name in cand:
+            return jobs[k]
+    raise AssertionError(candidates)
+
+
+def _place_jobs(jobs: Sequence[JobSpec],
+                domains: Sequence[List[Device]],
+                sched: _SliceScheduler,
+                cfg: PoolConfig) -> Tuple[List[JobSpec], List[int],
+                                          Dict[str, ScheduledPlan], int,
+                                          Dict[str, JobInfeasibility]]:
+    """Seed + arbitrate, shedding unplaceable jobs one at a time.
+
+    Returns (placed jobs, alloc, plans, transfers, infeasible).  Shedding
+    order is ``_drop_order`` restricted to the currently-starved jobs, so
+    a high-priority job is never shed to save a low-priority one.  The
+    loop terminates: every retry removes one job.
+    """
+    from .scheduler import InfeasibleScheduleError
+    infeasible: Dict[str, JobInfeasibility] = {}
+    active = list(jobs)
+    while active:
+        if len(active) == 1:
+            # degenerate pool: the job owns everything, no arbitration
+            # possible; call the solver directly so infeasibility keeps
+            # the scheduler's own diagnostic
+            job = active[0]
+            try:
+                plan = sched.solver(job, subcluster(sched.cluster,
+                                                    sched.cluster.devices))
+            except InfeasibleScheduleError as e:
+                infeasible[job.name] = JobInfeasibility(
+                    job.name, "infeasible", str(e))
+                return [], [], {}, 0, infeasible
+            return ([job], [0] * len(domains), {job.name: plan}, 0,
+                    infeasible)
+
+        if len(domains) < cfg.min_domains_per_job * len(active):
+            victim = _shed_victim(active, [j.name for j in active])
+            infeasible[victim.name] = JobInfeasibility(
+                victim.name, "min_domains",
+                f"{len(domains)} ICI domains cannot give {len(active)} "
+                f"jobs {cfg.min_domains_per_job} each")
+            active = [j for j in active if j.name != victim.name]
+            continue
+
+        # pick the best-scoring candidate seed (a partially-infeasible
+        # seed is allowed — the climb's repair transfers can fix it)
+        seeds = [_even_allocation(active, domains)]
+        try:
+            seeds.insert(0, _seed_allocation(active, domains,
+                                             cfg.min_domains_per_job))
+        except RuntimeError:
+            pass                       # demand seed unrepairable: even only
+        best_seed, best_score = None, (-1, -math.inf)
+        for seed in seeds:
+            counts = [sum(1 for a in seed if a == k)
+                      for k in range(len(active))]
+            if min(counts) < cfg.min_domains_per_job:
+                continue
+            plans = {j.name: sched.plan(j, [d for i, dom
+                                            in enumerate(domains)
+                                            if seed[i] == k for d in dom])
+                     for k, j in enumerate(active)}
+            score = _score(active, plans)
+            if score > best_score:
+                best_seed, best_score = seed, score
+        if best_seed is None:
+            # no seed gives every job its minimum: shed the least
+            # important and retry (the domain count above admits it, but
+            # per-type round-robin may not — e.g. lopsided type mixes)
+            victim = _shed_victim(active, [j.name for j in active])
+            infeasible[victim.name] = JobInfeasibility(
+                victim.name, "min_domains",
+                "no seed allocation satisfies min_domains_per_job")
+            active = [j for j in active if j.name != victim.name]
+            continue
+
+        alloc, plans, transfers = _arbitrate(active, domains, best_seed,
+                                             sched, cfg)
+        starved = sorted(n for n, p in plans.items() if p is None)
+        if not starved:
+            return active, alloc, plans, transfers, infeasible
+        victim = _shed_victim(active, starved)
+        infeasible[victim.name] = JobInfeasibility(
+            victim.name, "starved",
+            "arbitration could not repair a feasible slice")
+        active = [j for j in active if j.name != victim.name]
+    return [], [], {}, 0, infeasible
 
 
 # ------------------------------------------------------------- entry points
 def schedule_pool(jobs: Sequence[JobSpec], cluster: Cluster,
                   cfg: Optional[PoolConfig] = None, *,
-                  cost_provider: Optional[CostProvider] = None) -> PoolPlan:
+                  cost_provider: Optional[CostProvider] = None,
+                  allow_partial: bool = False) -> PoolPlan:
     """Offline pool arbitration: Eq. (1') over a fresh cluster.
 
     ``cost_provider`` (when given) overrides the efficiency-factor source in
     every job's SchedulerConfig — the provider then travels with the jobs
     into ``replan_pool`` via ``PoolPlan.jobs``.  Default (None) keeps each
     job's own configuration, i.e. the analytic constant tables.
+
+    ``allow_partial=False`` (strict, the historical contract): raises
+    ``PoolInfeasibleError`` when any job cannot be placed — a *typed*
+    error carrying per-job ``JobInfeasibility``; no code path lets the
+    scheduler's ``InfeasibleScheduleError`` escape.  ``allow_partial=True``
+    (the admission controller's mode): unplaceable jobs are shed in
+    ``_drop_order`` and reported in ``PoolPlan.infeasible``; the returned
+    plan covers the placed subset and still partitions the whole cluster.
+    Raises even in partial mode when *no* job can be placed.
     """
     from .scheduler import schedule_slice
     if not jobs:
@@ -432,43 +605,50 @@ def schedule_pool(jobs: Sequence[JobSpec], cluster: Cluster,
     sched = _SliceScheduler(
         cluster, lambda j, c: schedule_slice(j.model, c, j.P, j.sched_cfg,
                                              job=j.name))
-    if len(jobs) == 1:
-        # degenerate pool: the job owns everything, no arbitration possible;
-        # bypass the memoizing wrapper so infeasibility keeps the
-        # scheduler's own diagnostic (the single-job `schedule` contract)
-        plan = sched.solver(jobs[0], subcluster(cluster, cluster.devices))
-        return _finish(jobs, domains, [0] * len(domains),
-                       {names[0]: plan}, 0, t0)
+    placed, alloc, plans, transfers, infeasible = _place_jobs(
+        jobs, domains, sched, cfg)
+    if not placed or (infeasible and not allow_partial):
+        raise PoolInfeasibleError(infeasible)
+    return _finish(placed, domains, alloc, plans, transfers, t0,
+                   infeasible=infeasible)
 
-    # pick the best-scoring candidate seed (a partially-infeasible seed is
-    # allowed — the climb's repair transfers can fix it), then hill-climb
-    seeds = [_even_allocation(jobs, domains)]
-    try:
-        seeds.insert(0, _seed_allocation(jobs, domains,
-                                         cfg.min_domains_per_job))
-    except RuntimeError:
-        pass                           # demand seed unrepairable: even only
-    best_seed, best_score = None, (-1, -math.inf)
-    for seed in seeds:
-        counts = [sum(1 for a in seed if a == k) for k in range(len(jobs))]
-        if min(counts) < cfg.min_domains_per_job:
-            continue
-        plans = {j.name: sched.plan(j, [d for i, dom in enumerate(domains)
-                                        if seed[i] == k for d in dom])
-                 for k, j in enumerate(jobs)}
-        score = _score(jobs, plans)
-        if score > best_score:
-            best_seed, best_score = seed, score
-    if best_seed is None:
-        raise RuntimeError("no seed allocation satisfies min_domains_per_job")
-    alloc, plans, transfers = _arbitrate(jobs, domains, best_seed, sched, cfg)
-    return _finish(jobs, domains, alloc, plans, transfers, t0)
+
+def _greedy_backfill(jobs: Sequence[JobSpec],
+                     domains: Sequence[List[Device]],
+                     owner_of: List[Optional[str]]) -> List[int]:
+    """Alloc from per-domain owner names; orphaned domains (owner ``None``
+    or not in ``jobs``) go — largest first — to the job with the least
+    satisfied weighted FLOP demand, counting current holdings.  Arrivals
+    hold nothing yet, so a departed job's surplus flows to them first."""
+    def flops(dom: List[Device]) -> float:
+        return sum(d.profile.flops for d in dom)
+
+    name_to_k = {j.name: k for k, j in enumerate(jobs)}
+    demand = [max(j.flop_demand(), 1e-9) for j in jobs]
+    got = [0.0] * len(jobs)
+    alloc = [-1] * len(domains)
+    orphans: List[int] = []
+    for i, nm in enumerate(owner_of):
+        k = name_to_k.get(nm)
+        if k is None:
+            orphans.append(i)
+        else:
+            alloc[i] = k
+            got[k] += flops(domains[i])
+    for i in sorted(orphans, key=lambda i: (-flops(domains[i]), i)):
+        k = min(range(len(jobs)), key=lambda k: (got[k] / demand[k], k))
+        alloc[i] = k
+        got[k] += flops(domains[i])
+    return alloc
 
 
 def replan_pool(prev: PoolPlan, cluster: Cluster,
                 cfg: Optional[PoolConfig] = None, *,
                 reason: str = "failure",
-                frozen: Sequence[str] = ()) -> PoolPlan:
+                frozen: Sequence[str] = (),
+                departed: Sequence[str] = (),
+                arrivals: Sequence[JobSpec] = (),
+                allow_partial: bool = False) -> PoolPlan:
     """Elastic pool re-arbitration over the *surviving* ``cluster``.
 
     Ownership is warm-started from ``prev`` (dead devices dropped); each
@@ -478,17 +658,36 @@ def replan_pool(prev: PoolPlan, cluster: Cluster,
     staleness contract survives the swap independently — including for
     jobs that only *gained* devices through a cross-job handoff.
 
-    ``frozen`` jobs (e.g. already finished in the runtime) keep their plan
-    and slice verbatim and are excluded from the objective and the
-    transfer loop — arbitration must not hand devices to a job that can
-    no longer consume them.  (Reclaiming a finished job's slice is the
-    ROADMAP's job-departure item.)
+    ``frozen`` jobs (e.g. finished in the runtime but not yet reclaimed)
+    keep their plan and slice verbatim and are excluded from the objective
+    and the transfer loop — arbitration must not hand devices to a job
+    that can no longer consume them.
+
+    ``departed`` jobs leave the pool: they are removed from the job set
+    and their domains are backfilled to the remaining jobs (largest-domain
+    first, least-satisfied weighted demand — so new arrivals are seeded
+    from the departed surplus before the hill climb rebalances).
+
+    ``arrivals`` are new ``JobSpec``s submitted mid-run.  Each starts with
+    an empty slice — trivially starved — and is fed by the arbitration's
+    existing starved-slice repair transfers from donors' surplus.  An
+    arrival the donors cannot afford is shed and reported in
+    ``PoolPlan.infeasible`` when ``allow_partial`` (the admission
+    controller keeps it queued); carried-over jobs are never shed — if one
+    ends up starved the whole replan raises ``PoolInfeasibleError`` and
+    the runtime keeps executing the previous plan.
     """
-    from .scheduler import reschedule
+    from .scheduler import reschedule, schedule_slice
     cfg = cfg or PoolConfig()
     t0 = time.perf_counter()
-    frozen = set(frozen)
-    active = [j for j in prev.jobs if j.name not in frozen]
+    departed = set(departed)
+    frozen = set(frozen) - departed            # departure beats freezing
+    carried = [j for j in prev.jobs if j.name not in departed]
+    prev_names = {j.name for j in prev.jobs}
+    for a in arrivals:
+        if a.name in prev_names:
+            raise ValueError(f"arrival {a.name!r} collides with a pool job")
+    active = [j for j in carried if j.name not in frozen] + list(arrivals)
     if not active:
         raise ValueError("replan_pool: every job is frozen")
     domains = ici_domains(cluster)
@@ -501,41 +700,72 @@ def replan_pool(prev: PoolPlan, cluster: Cluster,
         assert len(owners) == 1, owners
         return owners.pop()
 
-    name_to_k = {j.name: k for k, j in enumerate(active)}
+    # frozen jobs' domains stay out of arbitration; domains owned by
+    # departed jobs join it as orphans (backfilled below)
     arb_idx = [i for i, dom in enumerate(domains)
                if domain_owner(dom) not in frozen]
     arb_domains = [domains[i] for i in arb_idx]
-    alloc = [name_to_k[domain_owner(domains[i])] for i in arb_idx]
 
     def solver(job: JobSpec, sl: Cluster) -> Optional[ScheduledPlan]:
-        prev_devs = set(prev.plans[job.name].train_devices) \
-            | set(prev.plans[job.name].infer_devices)
+        prev_plan = prev.plans.get(job.name)
+        if prev_plan is None:                  # an arrival: no warm start
+            return schedule_slice(job.model, sl, job.P, job.sched_cfg,
+                                  job=job.name)
+        prev_devs = set(prev_plan.train_devices) | set(prev_plan.infer_devices)
         slice_devs = {d.index for d in sl.devices}
         if slice_devs == prev_devs:
-            return prev.plans[job.name]        # slice untouched: keep plan
-        return reschedule(job.model, sl, prev.plans[job.name], job.P,
+            return prev_plan                   # slice untouched: keep plan
+        return reschedule(job.model, sl, prev_plan, job.P,
                           job.sched_cfg, reason=reason)
 
     sched = _SliceScheduler(cluster, solver)
-    alloc, plans, transfers = _arbitrate(active, arb_domains, alloc,
-                                         sched, cfg)
+    arrival_names = {a.name for a in arrivals}
+    infeasible: Dict[str, JobInfeasibility] = {}
+    jobs_now = list(active)
+    transfers = 0
+    while True:
+        owner_of = [domain_owner(arb_domains[p])
+                    for p in range(len(arb_domains))]
+        alloc = _greedy_backfill(jobs_now, arb_domains, owner_of)
+        alloc, plans, transfers = _arbitrate(jobs_now, arb_domains, alloc,
+                                             sched, cfg)
+        starved = sorted(n for n, p in plans.items() if p is None)
+        if not starved:
+            break
+        shed_cands = [n for n in starved if n in arrival_names]
+        if not shed_cands or not allow_partial:
+            # a carried job (or strict mode): the pool has no valid
+            # successor plan — typed failure, the runtime keeps the old one
+            raise PoolInfeasibleError({
+                n: JobInfeasibility(n, "starved",
+                                    "replan could not repair a slice")
+                for n in starved})
+        victim = _shed_victim(jobs_now, shed_cands)
+        infeasible[victim.name] = JobInfeasibility(
+            victim.name, "starved",
+            "donors cannot afford the arrival's minimum slice")
+        jobs_now = [j for j in jobs_now if j.name != victim.name]
 
     arb_pos = {i: pos for pos, i in enumerate(arb_idx)}
     owner: Dict[int, str] = {}
     for i, dom in enumerate(domains):
-        name = (active[alloc[arb_pos[i]]].name if i in arb_pos
+        name = (jobs_now[alloc[arb_pos[i]]].name if i in arb_pos
                 else domain_owner(dom))
         for d in dom:
             owner[d.index] = name
     # objective covers active jobs only — frozen jobs are excluded from
     # arbitration, so their (unconsumable) throughput must not score
-    objective = _score(active, plans)[1]
+    objective = _score(jobs_now, plans)[1]
     for name in frozen:
         plans[name] = prev.plans[name]         # carried over verbatim
-    pool = PoolPlan(jobs=prev.jobs, plans=plans, owner=owner,
+    placed = set(plans)
+    result_jobs = tuple([j for j in carried if j.name in placed]
+                        + [a for a in arrivals if a.name in placed])
+    pool = PoolPlan(jobs=result_jobs, plans=plans, owner=owner,
                     objective=objective,
                     transfers=transfers,
                     wall_time_s=time.perf_counter() - t0,
                     pool_epoch=prev.pool_epoch + 1,
-                    provenance=f"replan:{reason}")
+                    provenance=f"replan:{reason}",
+                    infeasible=infeasible)
     return pool

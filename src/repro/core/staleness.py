@@ -137,6 +137,19 @@ class PoolStalenessRegistry:
     def controller(self, name: str) -> StalenessController:
         return self.controllers[name]
 
+    def remove_job(self, name: str) -> StalenessController:
+        """Reclaim a departed job's version stream (completion/rejection).
+
+        The stream is dropped from the registry — later ``assert_bounds``
+        and handoff calls no longer see it — and the final controller is
+        returned so the caller can archive its staleness stats.  The
+        handoff *history* keeps any entries naming the job: the audit
+        trail outlives the job, the live stream does not.
+        """
+        if name not in self.controllers:
+            raise KeyError(f"job {name!r} not registered")
+        return self.controllers.pop(name)
+
     def record_handoff(self, from_job: str, to_job: str) -> tuple:
         """Devices moved from ``from_job`` to ``to_job``: both jobs' plans
         changed, so both plan epochs bump; versions are untouched."""

@@ -142,6 +142,30 @@ class JobBuffers:
     def jobs(self) -> List[str]:
         return sorted(self._bufs)
 
+    def remove_job(self, name: str, *, force: bool = False) -> Dict[str, float]:
+        """Reclaim a departed job's buffer (completion/rejection).
+
+        A clean departure has nothing in flight — the job drained before
+        its slice was reclaimed.  ``force=True`` (preemption/abort) drops
+        whatever is still generating or buffered; the dropped count lands
+        in the returned final stats so no rollout silently vanishes from
+        the ledger.  Returns the buffer's final ``stats()`` snapshot.
+        """
+        if name not in self._bufs:
+            raise KeyError(f"job {name!r} has no buffer")
+        buf = self._bufs[name]
+        if buf.ctl.in_flight and not force:
+            raise RuntimeError(
+                f"job {name!r} still has {buf.ctl.in_flight} rollouts in "
+                f"flight; drain first or remove_job(force=True)")
+        if buf.ctl.in_flight:
+            buf.dropped += buf.ctl.in_flight   # buffered + still generating
+            buf.ctl.drop(buf.ctl.in_flight)
+            buf._items = []
+        final = buf.stats()
+        del self._bufs[name]
+        return final
+
     def on_device_handoff(self, from_job: str, to_job: str) -> Dict[str, int]:
         """Devices moved between jobs: both plans swapped, both buffers
         bump their plan epoch; returns {job: new_epoch}."""

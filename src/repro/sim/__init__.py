@@ -1,5 +1,6 @@
-from .events import (FailureInjection, HandoffRecord, JobFailure,
-                     PlanSwapRecord, ReplanTrigger, StragglerInjection)
+from .events import (FailureInjection, HandoffRecord, JobArrival, JobFailure,
+                     JobStraggler, PlanSwapRecord, ReplanTrigger,
+                     StragglerInjection)
 from .replan import (ElasticConfig, ElasticReplanner, PoolReplanner,
                      replica_device_map)
 from .simulator import (AsyncRLSimulator, DeviceLedger, MultiJobSimResult,
@@ -12,6 +13,7 @@ __all__ = [
     "FailureInjection", "StragglerInjection",
     "ReplanTrigger", "PlanSwapRecord",
     "MultiJobSimulator", "MultiSimConfig", "MultiJobSimResult",
-    "PoolReplanner", "DeviceLedger", "JobFailure", "HandoffRecord",
+    "PoolReplanner", "DeviceLedger", "JobFailure", "JobStraggler",
+    "JobArrival", "HandoffRecord",
     "replica_device_map",
 ]

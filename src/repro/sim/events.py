@@ -11,13 +11,22 @@ Event kinds used by ``AsyncRLSimulator``:
     drain: new launches stop, ``replan_ready`` is scheduled;
   * ``replan_ready``  — the elastic replanner finished recomputing the plan
     (``replan_latency_s`` after the drain started; commits the hot swap).
+
+``MultiJobSimulator`` adds pool-level kinds: ``fail`` / ``job_recover``
+(per-job failures, transient when the injection has a downtime),
+``job_straggle``, ``job_submit`` (online arrival through the admission
+controller), plus ``pool_drain`` / ``pool_ready`` for the pool-wide plan
+swap.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import TYPE_CHECKING, Any, Callable, Dict, List, Optional
+
+if TYPE_CHECKING:                          # pragma: no cover
+    from repro.core.pool import JobSpec
 
 
 @dataclass(order=True)
@@ -66,10 +75,33 @@ class FailureInjection:
 @dataclass
 class JobFailure:
     """Multi-job fault injection: replica ``replica_idx`` of ``job``'s live
-    plan dies permanently at ``t_fail`` (MultiJobSimulator)."""
+    plan dies at ``t_fail`` (MultiJobSimulator); recovers after ``downtime``
+    when set (transient), else permanently."""
     job: str
     replica_idx: int
     t_fail: float
+    downtime: Optional[float] = None      # None = permanent
+
+
+@dataclass
+class JobStraggler:
+    """Multi-job straggler injection: replica ``replica_idx`` of ``job``'s
+    live plan runs at ``factor``× throughput from ``t_start``."""
+    job: str
+    replica_idx: int
+    factor: float = 0.3
+    t_start: float = 0.0
+
+
+@dataclass
+class JobArrival:
+    """Online job submission: ``spec`` arrives at ``t_submit`` and asks the
+    admission controller (core/jobs.py) to place it mid-run.  ``n_steps``
+    overrides the pool-wide step budget for this job (short jobs are how a
+    trace exercises departure + slice reclaim)."""
+    spec: "JobSpec"                       # type: ignore[name-defined]
+    t_submit: float
+    n_steps: Optional[int] = None
 
 
 @dataclass

@@ -29,7 +29,7 @@ from repro.core.cluster import Cluster, Device
 from repro.core.cost_model import LengthDistribution
 from repro.core.model_spec import ModelSpec
 from repro.core.plan import ScheduledPlan
-from repro.core.pool import PoolConfig, PoolPlan, replan_pool
+from repro.core.pool import JobSpec, PoolConfig, PoolPlan, replan_pool
 from repro.core.scheduler import SchedulerConfig, reschedule
 
 
@@ -162,16 +162,23 @@ class PoolReplanner:
                        cross_type_bw=self.cluster.cross_type_bw)
 
     def replan(self, prev: PoolPlan, reason: str = "failure",
-               frozen: Sequence[str] = ()) -> Optional[PoolPlan]:
+               frozen: Sequence[str] = (),
+               departed: Sequence[str] = (),
+               arrivals: Sequence["JobSpec"] = ()) -> Optional[PoolPlan]:
         """Re-arbitrate over the survivors; None when no feasible pool plan
         exists (every job keeps its old plan minus the dead replicas).
         ``frozen`` jobs (finished in the runtime) keep their slices and
-        never receive handed-off devices."""
+        never receive handed-off devices; ``departed`` jobs leave the pool
+        and their slices are reclaimed; ``arrivals`` are seeded from the
+        donors' surplus (an unaffordable arrival is shed into
+        ``PoolPlan.infeasible`` — partial mode — and stays queued)."""
         cluster = self.surviving_cluster()
         if len(cluster) < 2:
             return None
         try:
             return replan_pool(prev, cluster, self.pool_cfg, reason=reason,
-                               frozen=frozen)
+                               frozen=frozen, departed=departed,
+                               arrivals=arrivals,
+                               allow_partial=bool(arrivals))
         except (RuntimeError, ValueError):
             return None

@@ -64,10 +64,14 @@ from typing import Dict, List, Optional, Sequence, Set
 import numpy as np
 
 from repro.core.cost_model import GenTimeModel, LengthDistribution
+from repro.core.jobs import (AdmissionConfig, ControlPlane,
+                             EwmaThroughputTrend, JobRecord, JobState,
+                             TrendConfig)
 from repro.core.plan import ScheduledPlan
 from repro.core.pool import JobSpec, PoolPlan
-from .events import (EventQueue, FailureInjection, HandoffRecord, JobFailure,
-                     PlanSwapRecord, ReplanTrigger, StragglerInjection)
+from .events import (EventQueue, FailureInjection, HandoffRecord, JobArrival,
+                     JobFailure, JobStraggler, PlanSwapRecord, ReplanTrigger,
+                     StragglerInjection)
 from .replan import ElasticReplanner, PoolReplanner, replica_device_map
 
 
@@ -541,9 +545,17 @@ class MultiSimConfig:
     reward_cost_s: float = 0.1
     seed: int = 0
     failures: Sequence[JobFailure] = field(default_factory=list)
+    stragglers: Sequence[JobStraggler] = field(default_factory=list)
+    arrivals: Sequence[JobArrival] = field(default_factory=list)
     replanner: Optional[PoolReplanner] = None
     check_invariants: bool = False
     gen_time: Optional[GenTimeModel] = None  # see SimConfig.gen_time
+    # --- control plane (ISSUE 6): online arrivals + departure
+    admission: Optional[AdmissionConfig] = None   # defaulted when arrivals
+    depart_on_completion: bool = False     # finished jobs leave the pool and
+    #                                        their slices are reclaimed (vs
+    #                                        frozen-in-place, the old default)
+    trend: Optional[TrendConfig] = None    # EWMA predictive-replan detector
 
 
 @dataclass
@@ -554,10 +566,17 @@ class MultiJobSimResult:
     wall_time_s: float
     owner_final: Dict[int, str]
     excluded: Set[int]
+    # control-plane outputs (empty when the run had no arrivals/departures)
+    records: Dict[str, JobRecord] = field(default_factory=dict)
+    replan_triggers: List[ReplanTrigger] = field(default_factory=list)
 
     def weighted_throughput(self, weights: Dict[str, float]) -> float:
         return sum(weights.get(n, 1.0) * r.throughput_tps
                    for n, r in self.per_job.items())
+
+    def admission_latencies(self) -> Dict[str, float]:
+        return {n: r.admission_latency_s for n, r in self.records.items()
+                if r.admission_latency_s is not None}
 
     def summary(self) -> str:
         rows = [f"{n}: {r.summary()}" for n, r in sorted(self.per_job.items())]
@@ -573,18 +592,21 @@ class _JobRun:
     drain/commit swaps) scoped to the job's slice and version stream."""
 
     def __init__(self, job: JobSpec, plan: ScheduledPlan,
-                 cfg: MultiSimConfig):
+                 cfg: MultiSimConfig, n_steps: Optional[int] = None,
+                 t0: float = 0.0):
         self.job = job
         self.name = job.name
         self.plan = plan
         self.P = job.P
         self.eta = job.eta
         self.B = cfg.rollouts_per_step
-        self.n_steps = cfg.n_steps
+        self.n_steps = n_steps if n_steps is not None else cfg.n_steps
+        self.t0 = t0                           # admitted mid-run: plan-live t
         self.capacity = (self.eta + 1) * self.B
         self.rate: List[float] = _flatten_replicas(plan)
         self.n_rep = len(self.rate)
         self.alive = [True] * self.n_rep
+        self.cum_factor = [1.0] * self.n_rep   # cumulative straggler slowdown
         self.epoch = plan.plan_epoch
         self.t_train = plan.cost_train / max(plan.delta, 1)
         self.t_sync = plan.cost_update / max(plan.delta, 1)
@@ -612,7 +634,12 @@ class _JobRun:
         self.swap_hist_idx: List[int] = []
         self.epoch_stats: List[PlanEpochStat] = []
         self.epoch_open = dict(epoch=self.epoch, provenance=plan.provenance,
-                               t_start=0.0, steps0=0, tokens0=0.0)
+                               t_start=t0, steps0=0, tokens0=0.0)
+        # predictive replanning: per-step throughput trend (cfg.trend)
+        self.trend = (EwmaThroughputTrend(cfg.trend)
+                      if cfg.trend is not None else None)
+        self.last_step_t = t0                  # previous train_done time
+        self.last_step_tokens = 0.0
 
     # ------------------------------------------------------------ bookkeeping
     def check(self, now: float) -> None:
@@ -649,8 +676,13 @@ class _JobRun:
         self.rate = _flatten_replicas(new_plan)
         self.n_rep = len(self.rate)
         self.alive = [True] * self.n_rep
+        self.cum_factor = [1.0] * self.n_rep
         self.t_train = new_plan.cost_train / max(new_plan.delta, 1)
         self.t_sync = new_plan.cost_update / max(new_plan.delta, 1)
+        if self.trend is not None:             # new plan = new baseline
+            self.trend.reset()
+            self.last_step_t = now
+            self.last_step_tokens = self.tokens
         h = self.stale_hist
         self.swaps.append(PlanSwapRecord(
             epoch=self.epoch, t_request=t_request, t_commit=now,
@@ -664,13 +696,14 @@ class _JobRun:
 
     def result(self, wall: float) -> SimResult:
         job_wall = self.done_t if self.done_t is not None else wall
-        job_wall = max(job_wall, 1e-9)
-        # utilization is measured over the job's own lifetime (a finished
-        # job's fleet idles until the pool's last event — that idle time is
-        # not the job's to waste), matching the single-job simulator
+        # utilization is measured over the job's own lifetime, t0 → done (a
+        # finished job's fleet idles until the pool's last event, and a
+        # mid-run arrival was not running before its admission — neither
+        # span is the job's to waste), matching the single-job simulator
+        job_wall = max(job_wall - self.t0, 1e-9)
         self.rep_seconds += self.n_rep * max(
-            job_wall - self.epoch_open["t_start"], 0.0)
-        self.close_epoch(job_wall)
+            job_wall + self.t0 - self.epoch_open["t_start"], 0.0)
+        self.close_epoch(job_wall + self.t0)
         for rec, cut in zip(self.swaps, self.swap_hist_idx):
             h = self.stale_hist[cut:]
             rec.mean_staleness_after = float(np.mean(h)) if h else 0.0
@@ -718,14 +751,40 @@ class MultiJobSimulator:
     each η_j bound is preserved independently (asserted in
     tests/test_multi_job.py).
 
-    Relative to ``AsyncRLSimulator`` the multi-job machine supports
-    permanent failures only (no transient downtime or stragglers yet —
-    ROADMAP open item).
+    The machine honors every injection the single-job simulator does:
+    permanent failures, *transient* failures (a ``JobFailure.downtime``
+    recovers the replica; per-device outages survive plan swaps), and
+    ``JobStraggler`` slowdowns (a sustained straggler — cumulative factor
+    under ``ElasticConfig.straggler_threshold`` — triggers a pool replan).
+
+    On top of that sits the multi-tenant control plane (core/jobs.py):
+
+      * ``cfg.arrivals`` submits jobs mid-run through the admission
+        controller — priced-infeasible jobs are REJECTED, queued jobs are
+        handed to the next ``replan_pool`` as arrivals and seeded from
+        donors' surplus via the same drain/commit swap;
+      * ``cfg.depart_on_completion`` lets finished jobs leave: the next
+        pool commit reclaims their slices for the survivors (instead of
+        freezing the fleet in place, the historical default);
+      * ``cfg.trend`` arms per-job EWMA throughput-trend detection, so a
+        *creeping* degradation replans predictively instead of waiting
+        for a failure event.
     """
 
     def __init__(self, pool: PoolPlan, cfg: MultiSimConfig = None):
         self.pool = pool
         self.cfg = cfg or MultiSimConfig()
+        if self.cfg.replanner is None:
+            need = [k for k, v in
+                    (("arrivals", self.cfg.arrivals),
+                     ("depart_on_completion",
+                      self.cfg.depart_on_completion),
+                     ("trend", self.cfg.trend)) if v]
+            if need:
+                raise ValueError(
+                    f"MultiSimConfig.{'/'.join(need)} require a replanner: "
+                    f"admission, departure and predictive replanning all "
+                    f"commit through pool replans")
         self.jobs: Dict[str, _JobRun] = {
             j.name: _JobRun(j, pool.plans[j.name], self.cfg)
             for j in pool.jobs}
@@ -740,6 +799,14 @@ class MultiJobSimulator:
         ledger = DeviceLedger(self.pool.owner)
         cur_pool = self.pool
         jobs = self.jobs
+        retired: Dict[str, SimResult] = {}     # departed jobs' final results
+
+        control: Optional[ControlPlane] = None
+        if (cfg.arrivals or cfg.admission is not None
+                or cfg.depart_on_completion):
+            control = ControlPlane(replanner.cluster, replanner.pool_cfg,
+                                   cfg.admission)
+            control.register_initial(cur_pool.jobs)
 
         state = "RUNNING"                      # pool-level: RUNNING | DRAINING
         drain_scheduled = False
@@ -747,6 +814,9 @@ class MultiJobSimulator:
         drain_t0 = 0.0
         last_commit = -np.inf
         pool_swaps = 0
+        pending_submits = 0                    # job_submit events still queued
+        down_until: Dict[int, float] = {}      # device → transient-recovery t
+        triggers: List[ReplanTrigger] = []
         t = 0.0
 
         def launch(jr: _JobRun, i: int, now: float) -> None:
@@ -800,19 +870,42 @@ class MultiJobSimulator:
             if cfg.check_invariants:
                 jr.check(now)
 
-        def trigger_replan(now: float, jr: _JobRun, replica_idx: int) -> None:
+        def request_replan(now: float, reason: str) -> None:
+            """Ask for a pool-level drain/commit swap (debounced, deferred —
+            never dropped).  Failure, straggler, trend, arrival and
+            departure triggers all funnel through here."""
             nonlocal drain_scheduled, drain_reason, drain_t0
-            if replanner is None:
-                return
-            jr.pending_dead.add(replica_idx)
-            if state == "DRAINING" or drain_scheduled:
+            if replanner is None or state == "DRAINING" or drain_scheduled:
                 return                         # accumulate into pending swap
             ready = max(now + elastic.replan_latency_s,
                         last_commit + elastic.min_interval_s)
             drain_scheduled = True
-            drain_reason = f"failure:{jr.name}"
+            drain_reason = reason
             drain_t0 = now
             q.push(ready - elastic.replan_latency_s, "pool_drain", None)
+
+        def trigger_replan(now: float, jr: _JobRun, replica_idx: int,
+                           kind: str = "failure") -> None:
+            if replanner is None:
+                return
+            jr.pending_dead.add(replica_idx)
+            triggers.append(ReplanTrigger(now, kind, replica_idx))
+            request_replan(now, f"{kind}:{jr.name}")
+
+        def replace_down(jr: _JobRun, now: float) -> None:
+            """Re-placed work on a still-down device starts dead and
+            recovers when the original outage ends (mirrors the
+            single-job swap semantics)."""
+            still = {d: until for d, until in down_until.items()
+                     if until > now}
+            if not still:
+                return
+            for i, devs in enumerate(replanner.replica_devices(jr.plan)):
+                t_up = max((still.get(d.index, 0.0) for d in devs),
+                           default=0.0)
+                if t_up > now and i < jr.n_rep:
+                    jr.alive[i] = False
+                    q.push(t_up, "job_recover", (jr.name, jr.epoch, i))
 
         def commit_pool(now: float) -> None:
             nonlocal state, drain_scheduled, cur_pool, last_commit, pool_swaps
@@ -824,17 +917,24 @@ class MultiJobSimulator:
                     if i < jr.n_rep:
                         jr.alive[i] = False
                 jr.pending_dead.clear()
-            # finished jobs are frozen: they keep their slice and plans but
-            # never receive devices a running job could still use
-            finished = tuple(sorted(n for n, jr in jobs.items()
-                                    if jr.steps >= jr.n_steps))
+            finished = sorted(n for n, jr in jobs.items()
+                              if jr.steps >= jr.n_steps)
+            # finished jobs either depart (slices reclaimed for the
+            # survivors) or are frozen in place (keep slice and plan but
+            # never receive devices a running job could still use)
+            departing = finished if cfg.depart_on_completion else []
+            frozen = tuple(n for n in finished if n not in departing)
+            arrival_specs = ([r.spec for r in control.queued()]
+                             if control is not None else [])
             new_pool = replanner.replan(cur_pool, drain_reason,
-                                        frozen=finished)
+                                        frozen=frozen, departed=departing,
+                                        arrivals=arrival_specs)
             state = "RUNNING"
             drain_scheduled = False
             last_commit = now
             if new_pool is None:
                 # no feasible pool: every job keeps its plan minus the dead
+                # (queued arrivals stay PENDING for the next trigger)
                 for jr in jobs.values():
                     for i in sorted(jr.idle):
                         launch(jr, i, now)
@@ -842,6 +942,14 @@ class MultiJobSimulator:
                 return
             pool_swaps += 1
             ledger.apply(new_pool.owner, now)
+            # departures: the plan dropped them — retire their runs and
+            # reclaim the lifecycle state (slice ownership already moved)
+            for name in departing:
+                if name not in new_pool.plans:
+                    jr = jobs.pop(name)
+                    retired[name] = jr.result(now)
+                    if control is not None:
+                        control.complete(name, now)
             for jr in jobs.values():
                 new_plan = new_pool.plans[jr.name]
                 if new_plan is jr.plan:        # slice untouched: just resume
@@ -850,6 +958,18 @@ class MultiJobSimulator:
                     jr.idle.clear()
                 else:
                     jr.commit(new_plan, now, drain_reason, drain_t0)
+                    replace_down(jr, now)
+                    for i in range(jr.n_rep):
+                        launch(jr, i, now)
+            # placed arrivals go live on their fresh slices (seeded from
+            # donors' surplus by the arbitration's repair transfers)
+            if control is not None:
+                for name in control.on_pool_commit(new_pool, now):
+                    rec = control.records[name]
+                    jr = _JobRun(rec.spec, new_pool.plans[name], cfg,
+                                 n_steps=rec.n_steps, t0=now)
+                    jobs[name] = jr
+                    replace_down(jr, now)
                     for i in range(jr.n_rep):
                         launch(jr, i, now)
             cur_pool = new_pool
@@ -858,11 +978,26 @@ class MultiJobSimulator:
 
         for f in cfg.failures:
             q.push(f.t_fail, "fail", f)
+        for s in cfg.stragglers:
+            jr = jobs.get(s.job)
+            if s.t_start <= 0 and jr is not None and s.replica_idx < jr.n_rep:
+                jr.rate[s.replica_idx] *= s.factor
+                jr.cum_factor[s.replica_idx] *= s.factor
+                if (elastic is not None and jr.cum_factor[s.replica_idx]
+                        <= elastic.straggler_threshold):
+                    trigger_replan(0.0, jr, s.replica_idx, "straggler")
+            else:
+                q.push(s.t_start, "job_straggle", s)
+        for a in cfg.arrivals:
+            pending_submits += 1
+            q.push(a.t_submit, "job_submit", a)
         for jr in jobs.values():
             for i in range(jr.n_rep):
                 launch(jr, i, 0.0)
 
         def all_done() -> bool:
+            if pending_submits or (control is not None and control.queued()):
+                return False
             return all(jr.steps >= jr.n_steps for jr in jobs.values())
 
         while len(q) and not all_done():
@@ -870,31 +1005,88 @@ class MultiJobSimulator:
             t = ev.time
             if ev.kind == "rollout_done":
                 name, ev_epoch, i, vtag, length = ev.payload
-                jr = jobs[name]
-                jr.generating -= 1
-                if jr.version - vtag > jr.eta:
-                    jr.dropped += 1
-                    jr.in_flight -= 1
-                else:
-                    jr.buffer.append((vtag, length))
-                if ev_epoch == jr.epoch:       # old-epoch replicas stay down
-                    launch(jr, i, t)
-                maybe_train(jr, t)
+                jr = jobs.get(name)             # None: job already departed
+                if jr is not None:
+                    jr.generating -= 1
+                    if jr.version - vtag > jr.eta:
+                        jr.dropped += 1
+                        jr.in_flight -= 1
+                    else:
+                        jr.buffer.append((vtag, length))
+                    if ev_epoch == jr.epoch:   # old-epoch replicas stay down
+                        launch(jr, i, t)
+                    maybe_train(jr, t)
             elif ev.kind == "train_done":
                 (name,) = ev.payload
                 jr = jobs[name]
                 jr.steps += 1
                 jr.version += 1
-                if jr.steps >= jr.n_steps and jr.done_t is None:
-                    jr.done_t = t
+                if jr.steps >= jr.n_steps:
+                    if jr.done_t is None:
+                        jr.done_t = t
+                        if control is not None:
+                            control.drain(jr.name, t, "finished")
+                        if cfg.depart_on_completion:
+                            request_replan(t, f"departure:{jr.name}")
+                elif jr.trend is not None:
+                    # predictive replanning: per-step throughput sample
+                    dt = t - jr.last_step_t
+                    step_tokens = jr.tokens - jr.last_step_tokens
+                    jr.last_step_t = t
+                    jr.last_step_tokens = jr.tokens
+                    if dt > 0 and jr.trend.observe(step_tokens / dt):
+                        worst = min(range(jr.n_rep),
+                                    key=lambda k: jr.cum_factor[k])
+                        if jr.cum_factor[worst] < 1.0:
+                            # evict the most-degraded replica so the replan
+                            # actually removes the sick hardware
+                            trigger_replan(t, jr, worst, "trend")
+                        else:
+                            request_replan(t, f"trend:{jr.name}")
+                        jr.trend.reset()
                 maybe_train(jr, t)
             elif ev.kind == "fail":
                 f = ev.payload
                 jr = jobs.get(f.job)
                 if jr is not None and f.replica_idx < jr.n_rep:
                     jr.alive[f.replica_idx] = False
-                    if elastic is not None and elastic.replan_on_failure:
+                    if f.downtime is not None:
+                        # transient: recovers in place; remember the outage
+                        # per device so a swap can't cancel the downtime
+                        q.push(t + f.downtime, "job_recover",
+                               (f.job, jr.epoch, f.replica_idx))
+                        if replanner is not None:
+                            rmap = replanner.replica_devices(jr.plan)
+                            if f.replica_idx < len(rmap):
+                                for d in rmap[f.replica_idx]:
+                                    down_until[d.index] = max(
+                                        down_until.get(d.index, 0.0),
+                                        t + f.downtime)
+                    elif elastic is not None and elastic.replan_on_failure:
                         trigger_replan(t, jr, f.replica_idx)
+            elif ev.kind == "job_recover":
+                name, ev_epoch, i = ev.payload
+                jr = jobs.get(name)
+                if (jr is not None and ev_epoch == jr.epoch
+                        and i < jr.n_rep):     # plan still live
+                    jr.alive[i] = True
+                    launch(jr, i, t)
+            elif ev.kind == "job_straggle":
+                s = ev.payload
+                jr = jobs.get(s.job)
+                if jr is not None and s.replica_idx < jr.n_rep:
+                    jr.rate[s.replica_idx] *= s.factor
+                    jr.cum_factor[s.replica_idx] *= s.factor
+                    if (elastic is not None and jr.cum_factor[s.replica_idx]
+                            <= elastic.straggler_threshold):
+                        trigger_replan(t, jr, s.replica_idx, "straggler")
+            elif ev.kind == "job_submit":
+                a = ev.payload
+                pending_submits -= 1
+                dec = control.submit(a.spec, t, n_steps=a.n_steps,
+                                     cluster=replanner.surviving_cluster())
+                if dec.action == "queue":
+                    request_replan(t, f"arrival:{a.spec.name}")
             elif ev.kind == "pool_drain":
                 state = "DRAINING"
                 q.push(t + elastic.replan_latency_s, "pool_ready", None)
@@ -907,11 +1099,15 @@ class MultiJobSimulator:
                     jr.check(t)
 
         wall = t if t > 0 else 1e-9
+        per_job = {n: jr.result(wall) for n, jr in jobs.items()}
+        per_job.update(retired)
         return MultiJobSimResult(
-            per_job={n: jr.result(wall) for n, jr in jobs.items()},
+            per_job=per_job,
             handoffs=ledger.handoffs,
             pool_swaps=pool_swaps,
             wall_time_s=wall,
             owner_final=dict(ledger.owner),
             excluded=set(ledger.excluded),
+            records=dict(control.records) if control is not None else {},
+            replan_triggers=triggers,
         )

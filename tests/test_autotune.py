@@ -210,6 +210,9 @@ def test_profile_coverage():
 
 
 # ------------------------------------------------------------ sweep + tuning
+# ~7s: full interpreter-mode sweep; CI runs the same sweep directly
+# via `python -m repro.autotune sweep --tiny` in its own step.
+@pytest.mark.slow
 def test_tiny_sweep_smoke():
     """Interpreter-mode sweep of one shape per kernel: every requested
     (device × kernel) gets a record, the schema round-trips, and the

@@ -1,0 +1,297 @@
+"""Multi-tenant control plane: lifecycle state machine, priced admission,
+typed pool infeasibility (no ``InfeasibleScheduleError`` ever escapes
+``schedule_pool``/``replan_pool``), online arrival/departure through the
+simulator, straggler/transient-downtime injection in the multi-job
+machine, and full state reclaim on departure (ISSUE 6)."""
+import pytest
+
+from repro.core.cluster import paper_heterogeneous
+from repro.core.cost_model import LengthDistribution
+from repro.core.jobs import (AdmissionConfig, ControlPlane,
+                             EwmaThroughputTrend, InvalidTransitionError,
+                             JobRecord, JobState, TrendConfig)
+from repro.core.model_spec import PAPER_MODELS
+from repro.core.pool import (JobSpec, PoolConfig, PoolInfeasibleError,
+                             replan_pool, schedule_pool)
+from repro.core.scheduler import InfeasibleScheduleError, SchedulerConfig
+from repro.core.staleness import (PoolStalenessRegistry, StalenessConfig)
+from repro.rl.buffer import JobBuffers, Rollout
+from repro.sim import (ElasticConfig, JobArrival, JobFailure, JobStraggler,
+                       MultiJobSimulator, MultiSimConfig, PoolReplanner)
+
+P = LengthDistribution(mean_len=1024, prompt_len=128)
+
+
+def _cfg(eta: int = 4) -> SchedulerConfig:
+    return SchedulerConfig(tokens_per_step=2 ** 18, stable_iters=3,
+                           max_iters=12, adapt_delta=False,
+                           staleness=StalenessConfig(eta=eta))
+
+
+def _jobs():
+    return [JobSpec("j1.5b", PAPER_MODELS["1.5B"], P, _cfg(eta=4),
+                    weight=1.0),
+            JobSpec("j7b", PAPER_MODELS["7B"], P, _cfg(eta=2), weight=4.0)]
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    return paper_heterogeneous(8, 56)
+
+
+@pytest.fixture(scope="module")
+def pool(cluster):
+    return schedule_pool(_jobs(), cluster)
+
+
+# ------------------------------------------------------------- lifecycle
+def test_lifecycle_legal_path():
+    rec = JobRecord(JobSpec("a", PAPER_MODELS["1.5B"], P, _cfg()),
+                    t_submit=1.0)
+    assert rec.state is JobState.PENDING
+    rec.to(JobState.ADMITTED, 2.0).to(JobState.RUNNING, 3.0)
+    assert rec.admission_latency_s == 2.0
+    rec.to(JobState.DRAINING, 9.0).to(JobState.COMPLETED, 10.0)
+    assert rec.state.terminal and rec.t_end == 10.0
+    assert [s.value for s, _, _ in rec.history] == [
+        "PENDING", "ADMITTED", "RUNNING", "DRAINING", "COMPLETED"]
+
+
+def test_lifecycle_illegal_transitions_raise():
+    rec = JobRecord(JobSpec("a", PAPER_MODELS["1.5B"], P, _cfg()),
+                    t_submit=0.0)
+    with pytest.raises(InvalidTransitionError):
+        rec.to(JobState.RUNNING, 1.0)          # must be admitted first
+    rec.to(JobState.REJECTED, 1.0, "floor")
+    with pytest.raises(InvalidTransitionError):
+        rec.to(JobState.ADMITTED, 2.0)         # terminal states are final
+    assert rec.admission_latency_s is None     # never started
+
+
+# ------------------------------------------------------------- admission
+def test_admission_rejects_infeasible_with_typed_diagnostic():
+    cp = ControlPlane(paper_heterogeneous(0, 8))   # 1 node: unbipartitionable
+    dec = cp.submit(JobSpec("big", PAPER_MODELS["14B"], P, _cfg()), t=5.0)
+    assert dec.action == "reject" and "infeasible" in dec.reason
+    assert cp.records["big"].state is JobState.REJECTED
+
+
+def test_admission_rejects_on_priced_throughput_floor():
+    cp = ControlPlane(paper_heterogeneous(0, 16))
+    spec = JobSpec("floor", PAPER_MODELS["14B"], P, _cfg(), min_tput=1e9)
+    dec = cp.submit(spec, t=0.0)
+    assert dec.action == "reject" and "floor" in dec.reason
+    assert 0 < dec.solo_tput < 1e9             # priced, then found wanting
+    ok = cp.submit(JobSpec("fine", PAPER_MODELS["1.5B"], P, _cfg(),
+                           min_tput=100.0), t=1.0)
+    assert ok.action == "queue" and ok.solo_tput > 100.0
+
+
+def test_admission_queue_bound():
+    cp = ControlPlane(paper_heterogeneous(0, 16),
+                      cfg=AdmissionConfig(max_queue=1))
+    assert cp.submit(JobSpec("q1", PAPER_MODELS["1.5B"], P, _cfg()),
+                     t=0.0).action == "queue"
+    dec = cp.submit(JobSpec("q2", PAPER_MODELS["1.5B"], P, _cfg()), t=1.0)
+    assert dec.action == "reject" and dec.reason == "queue_full"
+    assert [r.name for r in cp.queued()] == ["q1"]
+    with pytest.raises(ValueError):
+        cp.submit(JobSpec("q1", PAPER_MODELS["1.5B"], P, _cfg()), t=2.0)
+
+
+# ----------------------------------------------------- typed infeasibility
+def test_schedule_pool_single_job_infeasibility_is_typed():
+    """The degenerate single-job path used to let InfeasibleScheduleError
+    escape the pool entry point (satellite bugfix)."""
+    with pytest.raises(RuntimeError) as ei:
+        schedule_pool([JobSpec("big", PAPER_MODELS["14B"], P, _cfg())],
+                      paper_heterogeneous(0, 8))
+    assert isinstance(ei.value, PoolInfeasibleError)
+    assert not isinstance(ei.value, InfeasibleScheduleError)
+    assert ei.value.infeasible["big"].reason == "infeasible"
+
+
+def test_schedule_pool_partial_mode_sheds_by_priority():
+    cl = paper_heterogeneous(8, 8)             # 2 domains < 2 jobs × 2 min
+    plan = schedule_pool(_jobs(), cl, PoolConfig(min_domains_per_job=2),
+                         allow_partial=True)
+    plan.assert_partition(cl)
+    # the lighter job sheds first (drop order: tier, then weight)
+    assert [j.name for j in plan.jobs] == ["j7b"]
+    assert plan.infeasible["j1.5b"].reason == "min_domains"
+    with pytest.raises(PoolInfeasibleError):   # strict mode still raises
+        schedule_pool(_jobs(), cl, PoolConfig(min_domains_per_job=2))
+
+
+def test_tier_beats_weight_in_shed_order():
+    heavy_low = JobSpec("heavy", PAPER_MODELS["7B"], P, _cfg(eta=2),
+                        weight=4.0, tier=1)    # lower priority tier
+    light_high = JobSpec("light", PAPER_MODELS["1.5B"], P, _cfg(),
+                         weight=1.0, tier=0)
+    plan = schedule_pool([heavy_low, light_high], paper_heterogeneous(8, 8),
+                         PoolConfig(min_domains_per_job=2),
+                         allow_partial=True)
+    assert [j.name for j in plan.jobs] == ["light"]
+    assert "heavy" in plan.infeasible
+
+
+# ------------------------------------------------------ departure/arrival
+def test_replan_departure_reclaims_slice(pool, cluster):
+    new = replan_pool(pool, cluster, reason="departure", departed=["j7b"])
+    new.assert_partition(cluster)
+    assert [j.name for j in new.jobs] == ["j1.5b"]
+    assert set(new.owner.values()) == {"j1.5b"}
+    assert "j7b" not in new.plans
+
+
+def test_replan_arrival_seeded_from_surplus(pool, cluster):
+    arr = JobSpec("newbie", PAPER_MODELS["1.5B"], P, _cfg(), weight=1.0)
+    new = replan_pool(pool, cluster, reason="arrival", arrivals=[arr],
+                      allow_partial=True)
+    new.assert_partition(cluster)
+    assert new.job_devices("newbie")           # fed by donors' surplus
+    assert not new.infeasible
+    for j in pool.jobs:                        # carried jobs keep δ pinned
+        assert new.plans[j.name].delta == pool.plans[j.name].delta
+    with pytest.raises(ValueError):            # name collision is an error
+        replan_pool(pool, cluster, arrivals=[_jobs()[0]])
+
+
+# ------------------------------------------------------------------ trend
+def test_ewma_trend_detector():
+    tr = EwmaThroughputTrend(TrendConfig(alpha=0.5, min_samples=3,
+                                         threshold=0.6))
+    assert not any(tr.observe(100.0) for _ in range(5))   # steady: no trigger
+    assert not tr.observe(80.0)                # dip, EWMA still above bar
+    assert tr.observe(10.0)                    # sustained collapse trips it
+    tr.reset()
+    assert tr.ewma is None and not tr.observe(10.0)   # new baseline
+
+
+# ------------------------------------------------- multi-sim fault paths
+def test_multi_sim_honors_stragglers(pool, cluster):
+    """Satellite bugfix: JobStraggler used to be silently ignored."""
+    rp = PoolReplanner(cluster, elastic=ElasticConfig(replan_latency_s=4.0))
+    res = MultiJobSimulator(pool, MultiSimConfig(
+        n_steps=6,
+        stragglers=[JobStraggler("j7b", 0, factor=0.3, t_start=10.0),
+                    JobStraggler("j7b", 0, factor=0.3, t_start=20.0)],
+        replanner=rp, check_invariants=True)).run()
+    assert any(r.reason == "straggler" for r in res.replan_triggers)
+    assert res.pool_swaps >= 1
+    for r in res.per_job.values():
+        assert r.steps == 6
+
+
+def test_multi_sim_transient_downtime_recovers(pool, cluster):
+    """A JobFailure with a downtime is transient: no devices are excluded
+    and the run completes on the full fleet."""
+    res = MultiJobSimulator(pool, MultiSimConfig(
+        n_steps=6,
+        failures=[JobFailure("j1.5b", 0, t_fail=10.0, downtime=20.0)],
+        replanner=PoolReplanner(cluster),
+        check_invariants=True)).run()
+    assert not res.excluded                    # transient ≠ permanent
+    for r in res.per_job.values():
+        assert r.steps == 6
+
+
+def test_multi_sim_trend_triggers_predictive_replan(pool, cluster):
+    """Sustained degradation (every replica slowed, no single failure)
+    trips the EWMA detector and replans without a failure event."""
+    rp = PoolReplanner(cluster, elastic=ElasticConfig(
+        replan_latency_s=4.0, straggler_threshold=0.0))  # no direct trigger
+    res = MultiJobSimulator(pool, MultiSimConfig(
+        n_steps=16,
+        stragglers=[JobStraggler("j1.5b", i, factor=0.005, t_start=20.0)
+                    for i in range(64)],
+        replanner=rp, trend=TrendConfig(alpha=0.5, min_samples=3,
+                                        threshold=0.6),
+        check_invariants=True)).run()
+    assert any(r.reason == "trend" for r in res.replan_triggers)
+    assert res.pool_swaps >= 1
+    for r in res.per_job.values():
+        assert r.steps == 16
+
+
+def test_multisim_validates_control_plane_needs_replanner(pool):
+    with pytest.raises(ValueError):
+        MultiJobSimulator(pool, MultiSimConfig(depart_on_completion=True))
+    with pytest.raises(ValueError):
+        MultiJobSimulator(pool, MultiSimConfig(
+            arrivals=[JobArrival(JobSpec("x", PAPER_MODELS["1.5B"], P,
+                                         _cfg()), t_submit=1.0)]))
+
+
+# ----------------------------------------- online arrival/departure, e2e
+def test_multi_sim_online_arrival_and_departure(pool, cluster):
+    rp = PoolReplanner(cluster, elastic=ElasticConfig(replan_latency_s=4.0))
+    arr = JobSpec("newbie", PAPER_MODELS["1.5B"], P, _cfg(), weight=1.0)
+    res = MultiJobSimulator(pool, MultiSimConfig(
+        n_steps=8, arrivals=[JobArrival(arr, t_submit=40.0, n_steps=3)],
+        depart_on_completion=True, replanner=rp,
+        check_invariants=True)).run()
+    # admitted mid-run, ran its (overridden) budget, then departed
+    assert res.per_job["newbie"].steps == 3
+    assert res.records["newbie"].state is JobState.COMPLETED
+    lat = res.admission_latencies()["newbie"]
+    assert 0 < lat <= 2 * rp.elastic.replan_latency_s    # bounded admission
+    # slice reclaim: the departed job owns nothing at the end, and the
+    # device ledger conservation holds across the reclaim handoffs
+    assert "newbie" not in set(res.owner_final.values())
+    assert set(res.owner_final) | res.excluded == \
+        {d.index for d in cluster.devices}
+    assert any(h.from_job == "newbie" for h in res.handoffs)
+    # every launched rollout is still accounted for after retirement
+    r = res.per_job["newbie"]
+    assert r.rollouts_launched == (r.rollouts_trained + r.dropped +
+                                   r.rollouts_in_buffer +
+                                   r.rollouts_generating)
+
+
+# --------------------------------------------------- state reclaim (sat 4)
+def test_pool_staleness_registry_remove_job():
+    reg = PoolStalenessRegistry()
+    ca = reg.add_job("a", StalenessConfig(eta=3, rollouts_per_step=4))
+    cb = reg.add_job("b", StalenessConfig(eta=1, rollouts_per_step=4))
+    ca.launch(4)
+    ca.bump_version()
+    reg.record_handoff("a", "b")
+    gone = reg.remove_job("a")
+    assert gone is ca and "a" not in reg.controllers
+    reg.assert_bounds()                        # no dangling stream checked
+    assert reg.max_staleness() == {"b": 0}
+    assert reg.handoff_history()               # audit trail outlives the job
+    with pytest.raises(KeyError):
+        reg.remove_job("a")
+    reg.add_job("a")                           # name is reusable after reclaim
+    assert cb.plan_epoch == 1
+
+
+def test_job_buffers_remove_job_requires_drain():
+    bufs = JobBuffers()
+    a = bufs.add_job("a", StalenessConfig(eta=2, rollouts_per_step=2))
+    bufs.add_job("b", StalenessConfig(eta=1, rollouts_per_step=2))
+    a.launch(2)
+    for g in range(2):
+        a.push(Rollout([1], [2], None, version=0, group_id=g))
+    with pytest.raises(RuntimeError):          # in flight: refuse silent loss
+        bufs.remove_job("a")
+    a.pop_batch(2)                             # drain cleanly
+    final = bufs.remove_job("a")
+    assert final["in_flight"] == 0 and final["dropped"] == 0
+    assert "a" not in bufs and bufs.jobs() == ["b"]
+    with pytest.raises(KeyError):
+        bufs.remove_job("a")
+
+
+def test_job_buffers_force_remove_accounts_drops():
+    bufs = JobBuffers()
+    a = bufs.add_job("a", StalenessConfig(eta=2, rollouts_per_step=2))
+    a.launch(3)                                # 2 will buffer, 1 stays out
+    for g in range(2):
+        a.push(Rollout([1], [2], None, version=0, group_id=g))
+    final = bufs.remove_job("a", force=True)   # preemption path
+    assert final["dropped"] == 3               # nothing vanishes silently
+    assert final["in_flight"] == 0 and final["size"] == 0
+    assert "a" not in bufs
