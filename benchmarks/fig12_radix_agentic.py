@@ -1,0 +1,215 @@
+"""Figure 12 (ours): radix prefix cache + agentic multi-turn episodes.
+
+Multi-turn agentic RL re-enters the engine after every tool call with a
+prompt that is the previous turn's full history plus a small observation
+delta.  Without a cross-request cache each re-entry re-prefills the
+whole history; with the radix tree (``serve.radix``) the engine serves
+the history from cached pages and prefills only the delta, and the
+env/tool pool's latency is priced by the scheduler as a third pipeline
+stage (``core.cost_model.EnvCostModel``).  Legs:
+
+  * ``identity`` — a cold-cache (radix off) and warm-cache (radix on)
+    engine replay the same multi-turn episodes; every turn's prompt and
+    completion must be token-identical (asserted) — the cache changes
+    *work*, never *tokens*;
+  * ``prefill``  — on the simulated tool-use trace the warm engine must
+    compute ≥2× fewer prompt tokens than the cold one (asserted), with
+    the radix hit rate and tree shape reported;
+  * ``sched``    — the measured episode shape (turns per episode, mean
+    inter-turn gap) flows through ``EngineReport``/``fit_env_model``
+    into ``SchedulerConfig.env``: the plan gains a C_I env term and γ
+    must move (asserted);
+  * ``noop``     — with no env model (or a single-turn one) plans stay
+    bit-identical, and ``fit_env_model`` on a single-turn report
+    returns None (asserted) — nothing changes until the workload does.
+
+``run()`` fills the module-level ``BENCH_JSON`` that ``benchmarks.run``
+writes to ``BENCH_radix_cache.json``.
+
+    PYTHONPATH=src python -m benchmarks.fig12_radix_agentic [--tiny]
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.cost_model import EnvCostModel, LengthDistribution
+from repro.core.model_spec import PAPER_MODELS
+from repro.core.cluster import tpu_heterogeneous
+from repro.core.scheduler import SchedulerConfig, schedule
+from repro.data.tasks import MathTaskGenerator, Tokenizer
+from repro.models.api import ModelConfig, get_model
+from repro.rl.agentic import EnvConfig, MultiTurnDriver, SimToolEnv
+from repro.rl.rollout import GenConfig
+from repro.rl.weight_sync import WeightStore
+from repro.serve import EngineReport, PagedEngine, ServeConfig
+from repro.serve.feedback import fit_env_model
+from .common import csv_row, timed
+
+MIN_PREFILL_REDUCTION = 2.0
+
+TOK = Tokenizer()
+
+# filled by run(); benchmarks.run writes it to BENCH_radix_cache.json
+BENCH_JSON: Optional[dict] = None
+
+
+def _model(tiny: bool) -> ModelConfig:
+    return ModelConfig(
+        name="radix-bench", family="dense",
+        n_layers=2 if tiny else 4, d_model=32 if tiny else 64,
+        n_heads=4, n_kv_heads=2, d_ff=64 if tiny else 128,
+        vocab=TOK.vocab_size, dtype="float32", remat=False)
+
+
+def _store(cfg: ModelConfig, seed: int = 0) -> WeightStore:
+    import jax
+    model = get_model(cfg)
+    store = WeightStore()
+    store.publish(model.init(jax.random.PRNGKey(seed), cfg))
+    return store
+
+
+def run(tiny: bool = False) -> list:
+    global BENCH_JSON
+    rows = []
+    cfg = _model(tiny)
+    store = _store(cfg)
+    n_eps = 3 if tiny else 4
+    turns = 3 if tiny else 4
+    per_turn = 10 if tiny else 16
+    # page_size must be small relative to turn length: the tree only
+    # caches *complete* pages, so a page bigger than a turn never fills
+    page = 8 if tiny else 16
+    gen = GenConfig(max_new_tokens=per_turn, segment=8, greedy=True,
+                    eos_id=-1)
+    # a heavy tool pool (code execution-class latency, few workers) —
+    # the regime where the env stage is worth a scheduling decision
+    env_cfg = EnvConfig(turns=turns, tool_tokens=8,
+                        max_new_per_turn=per_turn,
+                        mean_s=2.0, workers=2, seed=5)
+    tasks = MathTaskGenerator(seed=11).batch(n_eps)
+    plen = max(len(t.prompt_ids) for t in tasks)
+    max_len = plen + turns * (per_turn + env_cfg.tool_tokens) + page
+
+    def episode_run(radix: bool):
+        eng = PagedEngine(cfg, store, gen,
+                          ServeConfig(max_slots=n_eps, max_len=max_len,
+                                      page_size=page, prefill_chunk=8,
+                                      radix=radix),
+                          rng_seed=1)
+        drv = MultiTurnDriver(eng, SimToolEnv(env_cfg))
+        (eps, m), us = timed(drv.run, tasks, greedy=True)
+        return eng, eps, m, us
+
+    # ---- per-turn token identity, cold vs warm cache
+    _, cold_eps, cold_m, us_c = episode_run(radix=False)
+    warm_eng, warm_eps, warm_m, us_w = episode_run(radix=True)
+    identical = all(
+        rc.prompt_ids == rw.prompt_ids
+        and rc.completion_ids == rw.completion_ids
+        for c, w in zip(cold_eps, warm_eps)
+        for rc, rw in zip(c.turns, w.turns))
+    assert identical, "a warm-cache turn diverged from the cold replay"
+    assert cold_m["radix_hit_tokens"] == 0
+    rows.append(csv_row(
+        "fig12/identity", us_w,
+        f"token_identical={identical} episodes={n_eps} turns={turns} "
+        f"env_calls={warm_m['env_calls']}"))
+
+    # ---- prefill-token reduction on the tool-use trace
+    reduction = cold_m["prefill_tokens"] / max(warm_m["prefill_tokens"], 1)
+    assert reduction >= MIN_PREFILL_REDUCTION, \
+        f"prefill reduction {reduction:.2f}x < {MIN_PREFILL_REDUCTION}x"
+    tree = warm_eng.radix
+    rows.append(csv_row(
+        "fig12/prefill", 0,
+        f"cold={cold_m['prefill_tokens']} warm={warm_m['prefill_tokens']} "
+        f"reduction={reduction:.2f}x hit_rate={warm_m['radix_hit_rate']:.2f} "
+        f"g_eff={warm_m['g_eff']:.2f} tree_nodes={tree.n_nodes} "
+        f"tree_pages={tree.cached_pages}"))
+
+    # ---- scheduler leg: measured episode shape → env stage → γ moves
+    spec = PAPER_MODELS["1.5B"]
+    # compute-rich cluster (16 v5p vs 8 v5e): rollout replicas are fast
+    # enough that env stalls dominate — the regime where pricing the
+    # third stage flips the bipartition
+    cluster = tpu_heterogeneous(16, 8)
+    P = LengthDistribution(mean_len=4096, prompt_len=512)
+    scfg = SchedulerConfig(tokens_per_step=2 ** 18, stable_iters=3,
+                           max_iters=8, adapt_delta=False)
+    rep = EngineReport.from_stats(
+        warm_eng.stats, "TPUv5e", engine="paged",
+        turns_per_episode=float(warm_m["turns"]),
+        turn_gap_s=float(warm_m["turn_gap_s"]))
+    env = fit_env_model(rep, workers=env_cfg.workers, cv=env_cfg.cv)
+    assert env is not None and env.turns == turns
+    p_base, us_b = timed(schedule, spec, cluster, P, scfg)
+    p_env, us_e = timed(schedule, spec, cluster, P,
+                        dataclasses.replace(scfg, env=env))
+    moved = p_env.signature() != p_base.signature()
+    assert p_env.cost_env > 0.0
+    assert p_env.gamma != p_base.gamma or moved, \
+        "env-pool latency must move the plan"
+    rows.append(csv_row(
+        "fig12/sched", us_e,
+        f"turn_gap={env.mean_s:.3f}s turns={env.turns:.0f} "
+        f"cost_env={p_env.cost_env:.2f}s gamma "
+        f"base={p_base.gamma:.3f} env={p_env.gamma:.3f} moved={moved}"))
+
+    # ---- no-provider default: bit-identical plans, fit returns None
+    p_none, _ = timed(schedule, spec, cluster, P,
+                      dataclasses.replace(scfg, env=None))
+    p_1turn, _ = timed(schedule, spec, cluster, P,
+                       dataclasses.replace(
+                           scfg, env=EnvCostModel(mean_s=5.0, turns=1.0)))
+    noop_ok = (p_none.signature() == p_base.signature()
+               == p_1turn.signature())
+    assert noop_ok, "no/single-turn env model must price bit-identically"
+    assert fit_env_model(
+        dataclasses.replace(rep, turns_per_episode=1.0)) is None
+    rows.append(csv_row(
+        "fig12/noop", us_b,
+        f"bit_identical={noop_ok} single_turn_fit=None"))
+
+    BENCH_JSON = {
+        "name": "radix_cache",
+        "tiny": tiny,
+        "episodes": n_eps,
+        "turns": turns,
+        "token_identical": bool(identical),
+        "prefill_tokens_cold": int(cold_m["prefill_tokens"]),
+        "prefill_tokens_warm": int(warm_m["prefill_tokens"]),
+        "prefill_reduction": float(reduction),
+        "radix_hit_rate": float(warm_m["radix_hit_rate"]),
+        "g_eff": float(warm_m["g_eff"]),
+        "tree_nodes": int(tree.n_nodes),
+        "tree_pages": int(tree.cached_pages),
+        "env_calls": int(warm_m["env_calls"]),
+        "turn_gap_s": float(warm_m["turn_gap_s"]),
+        "gamma_base": float(p_base.gamma),
+        "gamma_env": float(p_env.gamma),
+        "cost_env": float(p_env.cost_env),
+        "sched_moved": bool(moved),
+        "noop_bit_identical": bool(noop_ok),
+    }
+    return rows
+
+
+def main() -> None:
+    import argparse
+    import json
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI mode: 2-layer model, short targets")
+    ap.add_argument("--json-out", default="",
+                    help="also write the BENCH_radix_cache.json artifact")
+    args = ap.parse_args()
+    print("\n".join(run(tiny=args.tiny)))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(BENCH_JSON, f, indent=2, sort_keys=True)
+
+
+if __name__ == "__main__":
+    main()

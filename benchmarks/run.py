@@ -36,6 +36,7 @@ MODULES = [
     "fig9_continuous_batching",
     "fig10_prefix_sharing",
     "fig11_online_jobs",
+    "fig12_radix_agentic",
     "table5_scheduler_speed",
     "roofline_report",
 ]

@@ -513,6 +513,16 @@ class GenTimeModel:
     b: float                       # seconds/token per context token
     t_prefill: float = 0.0
     g_eff: float = 1.0             # prefix-sharing prefill amortization
+    # multi-turn agentic episodes: (turns − 1) inter-turn gaps of
+    # ``turn_gap_s`` wall seconds each (measured tool/env latency minus
+    # whatever async overlap hides) are added ON TOP of generation time —
+    # env time is not generation, so it must not be normalized away
+    # against the replica's token throughput.  Defaults (1 turn / 0 gap)
+    # keep every existing fit and simulator run bit-identical.  When a
+    # SimConfig also carries an EnvCostModel, leave these at defaults —
+    # the simulator samples the same gaps stochastically there.
+    turns: float = 1.0
+    turn_gap_s: float = 0.0
 
     def raw(self, prompt_len: float, length: float) -> float:
         return (self.t_prefill / max(self.g_eff, 1.0) + self.a * length
@@ -524,10 +534,11 @@ class GenTimeModel:
         steady-state rate is ``tokens_per_sec`` under mean length
         ``mean_len``."""
         base = (mean_len + prompt_len) / max(tokens_per_sec, 1e-9)
+        gap = max(self.turns - 1.0, 0.0) * self.turn_gap_s
         ref = self.raw(prompt_len, mean_len)
         if ref <= 0.0:
-            return (length + prompt_len) / max(tokens_per_sec, 1e-9)
-        return base * self.raw(prompt_len, length) / ref
+            return (length + prompt_len) / max(tokens_per_sec, 1e-9) + gap
+        return base * self.raw(prompt_len, length) / ref + gap
 
     @classmethod
     def from_replica_cost(cls, rc: "ReplicaCost",
@@ -540,6 +551,87 @@ class GenTimeModel:
         b = rc.kv_frac * per_tok / max(avg_ctx, 1.0)
         a = (1.0 - rc.kv_frac) * per_tok
         return cls(a=a, b=b, t_prefill=rc.prefill_time / max(rc.batch, 1))
+
+
+# ------------------------------------------------------------- environment
+@dataclass
+class EnvCostModel:
+    """Reward/environment computation priced as the paper's THIRD stage.
+
+    AReaL-Hex names three coupled stages — rollout generation, reward/env
+    computation, policy updates — and the repo historically modeled the
+    middle one as a flat ``reward_cost_s`` constant.  Agentic multi-turn
+    workloads (RollArt in PAPERS.md) break that: an episode leaves the
+    GPU for a tool/env call between turns, so env latency both (a) adds a
+    pool-level stage time the γ split must account for and (b) *stalls
+    rollout replicas* between turns, deflating their effective generated
+    tokens/s in a device-dependent way — a fast replica finishes its turn
+    sooner and therefore idles a LARGER fraction of wall time on the same
+    env call (HetRL's heterogeneity-aware costing argument).
+
+    The env pool is its own "device type": ``workers`` concurrent CPU-ish
+    workers with a lognormal per-call latency (``mean_s``, ``cv``).  An
+    episode of ``turns`` turns makes ``turns − 1`` env calls; ``overlap``
+    is the fraction of each call hidden by async continuation (other
+    slots keep decoding — the engine's continuous batching provides the
+    mechanism, the scheduler prices what's left).
+
+    Defaults are inert: ``turns=1`` means no env calls, every method
+    returns its no-op value, and plans stay bit-identical — the contract
+    every scheduler knob in this repo keeps.
+    """
+
+    mean_s: float = 0.1            # mean env/tool latency per call
+    cv: float = 0.5                # latency coefficient of variation
+    turns: float = 1.0             # turns per episode (1 → no env stage)
+    workers: int = 64              # concurrent env workers in the pool
+    overlap: float = 0.0           # fraction of latency hidden by overlap
+    device_type: str = "ENVPOOL"   # label in plans/reports (not a PROFILE)
+
+    @property
+    def calls_per_episode(self) -> float:
+        return max(self.turns - 1.0, 0.0)
+
+    def episode_gap_s(self) -> float:
+        """Mean un-overlapped env wall time one episode waits across all
+        its inter-turn gaps (what ``GenTimeModel.turn_gap_s`` carries when
+        fit from a serving trace)."""
+        return self.mean_s * (1.0 - self.overlap)
+
+    def stage_time(self, episodes: float) -> float:
+        """C_Env: wall time for the pool's ``workers`` to process the env
+        calls of ``episodes`` episodes (the third-stage term added to the
+        per-step inference cost in ``scheduler._evaluate_allocation``)."""
+        calls = self.calls_per_episode * episodes
+        return calls * self.mean_s / max(self.workers, 1)
+
+    def replica_util(self, rc: ReplicaCost, P: LengthDistribution) -> float:
+        """Busy fraction of a rollout replica whose slots stall on env
+        calls between turns: turns·t_turn / (turns·t_turn + gaps).  Used
+        to deflate h_ψ in the MILP — slower replicas take longer per turn
+        and so hide the same env latency better (util → 1), which shifts
+        the optimal Ψ mix across heterogeneous device types."""
+        if self.calls_per_episode <= 0.0 or self.mean_s <= 0.0:
+            return 1.0
+        per_slot = rc.tokens_per_sec / max(rc.batch, 1)
+        t_turn = (P.mean() / max(self.turns, 1.0)) / max(per_slot, 1e-9)
+        busy = self.turns * t_turn
+        stalled = self.calls_per_episode * self.episode_gap_s()
+        return busy / max(busy + stalled, 1e-9)
+
+    def lognorm_params(self) -> Tuple[float, float]:
+        sigma2 = math.log(1.0 + self.cv**2)
+        mu = math.log(max(self.mean_s, 1e-9)) - sigma2 / 2.0
+        return mu, math.sqrt(sigma2)
+
+    def sample_gaps(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        """Un-overlapped per-call env latencies for ``n`` episodes' worth
+        of calls (simulators add these to each rollout's completion
+        time)."""
+        if n <= 0:
+            return np.zeros(0)
+        mu, s = self.lognorm_params()
+        return rng.lognormal(mu, s, size=n) * (1.0 - self.overlap)
 
 
 # --------------------------------------------------------------- weight sync

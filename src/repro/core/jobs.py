@@ -137,6 +137,8 @@ class JobRecord:
     t_admit: Optional[float] = None
     t_start: Optional[float] = None        # RUNNING (plan went live)
     t_end: Optional[float] = None          # terminal transition
+    t_last_price: Optional[float] = None   # last admission (re-)pricing
+    retries: int = 0                       # periodic-retry re-pricings
     history: List[Tuple[JobState, float, str]] = field(default_factory=list)
 
     def __post_init__(self):
@@ -179,6 +181,11 @@ class AdmissionConfig:
     price_on_submit: bool = True       # run the solo feasibility/floor check
     #                                    (False: queue everything, let the
     #                                    arbitration shed — cheaper, blinder)
+    retry_interval_s: Optional[float] = None
+    #                                    periodic re-pricing of PENDING jobs
+    #                                    (``ControlPlane.tick``); None = no
+    #                                    retry tick — queued jobs wait for
+    #                                    the next departure-driven replan
 
 
 @dataclass(frozen=True)
@@ -186,7 +193,7 @@ class AdmissionDecision:
     """What the controller decided for one submission."""
 
     job: str
-    action: str                        # "queue" | "reject"
+    action: str                        # "queue" | "reject" | "retry"
     reason: str = ""
     solo_tput: float = 0.0             # priced optimistic bound (0 unpriced)
 
@@ -235,24 +242,35 @@ class ControlPlane:
         self.records[spec.name] = rec
         solo_tput = 0.0
         if self.cfg.price_on_submit:
-            try:
-                solo = schedule_pool([spec], cluster or self.cluster,
-                                     self.pool_cfg)
-                solo_tput = solo.throughput(spec.name)
-            except PoolInfeasibleError as e:
-                return self._reject(rec, t, f"infeasible: {e}", solo_tput)
-            if (spec.min_tput > 0
-                    and solo_tput * self.cfg.floor_margin < spec.min_tput):
-                return self._reject(
-                    rec, t,
-                    f"floor: solo bound {solo_tput:.0f} tok/s < "
-                    f"min_tput {spec.min_tput:.0f}", solo_tput)
+            rec.t_last_price = t
+            solo_tput, why = self._price(spec, cluster)
+            if why is not None:
+                return self._reject(rec, t, why, solo_tput)
         if len(self.queued()) > self.cfg.max_queue:   # rec already counted
             return self._reject(rec, t, "queue_full", solo_tput)
         dec = AdmissionDecision(spec.name, "queue", "priced feasible",
                                 solo_tput)
         self.decisions.append(dec)
         return dec
+
+    def _price(self, spec: JobSpec,
+               cluster: Optional[Cluster] = None
+               ) -> Tuple[float, Optional[str]]:
+        """Solo feasibility/floor pricing (policy steps 1–2).  Returns the
+        optimistic solo throughput bound and a rejection reason, or None
+        if the job prices as admissible on the given cluster."""
+        try:
+            solo = schedule_pool([spec], cluster or self.cluster,
+                                 self.pool_cfg)
+            solo_tput = solo.throughput(spec.name)
+        except PoolInfeasibleError as e:
+            return 0.0, f"infeasible: {e}"
+        if (spec.min_tput > 0
+                and solo_tput * self.cfg.floor_margin < spec.min_tput):
+            return solo_tput, (
+                f"floor: solo bound {solo_tput:.0f} tok/s < "
+                f"min_tput {spec.min_tput:.0f}")
+        return solo_tput, None
 
     def _reject(self, rec: JobRecord, t: float, reason: str,
                 solo_tput: float) -> AdmissionDecision:
@@ -281,6 +299,35 @@ class ControlPlane:
                 rec.to(JobState.RUNNING, t, "pool commit")
                 started.append(rec.name)
         return started
+
+    def tick(self, t: float,
+             cluster: Optional[Cluster] = None) -> List[str]:
+        """Periodic admission retry (``retry_interval_s``): re-price every
+        PENDING job that has waited at least one interval since its last
+        pricing against the *current* cluster.  Jobs whose solo bound has
+        sunk below their floor (capacity shrank while they queued) are
+        rejected now instead of starving in the queue; the rest are due
+        for another placement attempt — their names are returned so the
+        caller can drive a ``replan_pool`` with them as arrivals."""
+        if self.cfg.retry_interval_s is None:
+            return []
+        due: List[str] = []
+        for rec in self.queued():
+            last = rec.t_last_price if rec.t_last_price is not None \
+                else rec.t_submit
+            if t - last < self.cfg.retry_interval_s:
+                continue
+            rec.t_last_price = t
+            rec.retries += 1
+            if self.cfg.price_on_submit:
+                solo_tput, why = self._price(rec.spec, cluster)
+                if why is not None:
+                    self._reject(rec, t, f"retry: {why}", solo_tput)
+                    continue
+            due.append(rec.name)
+            self.decisions.append(AdmissionDecision(
+                rec.name, "retry", f"re-priced after {rec.retries} tick(s)"))
+        return due
 
     def drain(self, name: str, t: float, reason: str = "finished") -> None:
         self.records[name].to(JobState.DRAINING, t, reason)

@@ -22,6 +22,7 @@ profiled constant; output lengths come from the profiled distribution P.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -29,8 +30,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .cluster import Cluster, Device, PROFILES
-from .cost_model import (CostProvider, LengthDistribution, ReplicaConfig,
-                         ReplicaCost, replica_throughput)
+from .cost_model import (CostProvider, EnvCostModel, LengthDistribution,
+                         ReplicaConfig, ReplicaCost, replica_throughput)
 from .model_spec import ModelSpec
 from .plan import RolloutAssignment, RolloutPlan
 
@@ -68,12 +69,19 @@ def enumerate_replica_configs(
     max_pp: int = 2,
     node_widths: Optional[Dict[str, int]] = None,
     cost_provider: Optional[CostProvider] = None,
+    env: Optional[EnvCostModel] = None,
 ) -> List[Tuple[ReplicaConfig, ReplicaCost]]:
     """Build Ψ: feasible replica configs with their profiled throughput h_ψ.
 
     ``node_widths`` restricts TP degrees to what a single machine of the
     slice can host (see ``slice_node_widths``); without it the nominal
     ``devices_per_node`` is used (full-machine slices).
+
+    ``env`` (multi-turn agentic workloads) deflates each h_ψ by the
+    replica's env-stall utilization — a *per-config* factor, since faster
+    replicas idle a larger fraction of wall time on the same env call, so
+    env latency reshuffles which device types the MILP prefers.  None →
+    h_ψ untouched (bit-identical Ψ).
     """
     out: List[Tuple[ReplicaConfig, ReplicaCost]] = []
     for tname, count in sorted(type_counts.items()):
@@ -89,6 +97,10 @@ def enumerate_replica_configs(
                     continue
                 rc = replica_throughput(spec, cfg, P,
                                         cost_provider=cost_provider)
+                if env is not None and rc.feasible:
+                    rc = dataclasses.replace(
+                        rc, tokens_per_sec=rc.tokens_per_sec
+                        * env.replica_util(rc, P))
                 if rc.feasible and rc.tokens_per_sec > 0:
                     out.append((cfg, rc))
     return out
@@ -157,6 +169,7 @@ def solve_rollout_milp(
     total_rollouts: float,
     max_pp: int = 2,
     cost_provider: Optional[CostProvider] = None,
+    env: Optional[EnvCostModel] = None,
 ) -> MILPResult:
     """Fast path: exact reduction of Eq. 2 (see module docstring)."""
     type_counts: Dict[str, int] = {}
@@ -165,7 +178,7 @@ def solve_rollout_milp(
     configs = enumerate_replica_configs(
         spec, type_counts, P, max_pp=max_pp,
         node_widths=slice_node_widths(d_infer),
-        cost_provider=cost_provider)
+        cost_provider=cost_provider, env=env)
     counts, solver, optimal = _max_throughput_counts(configs, type_counts)
 
     assignments: List[RolloutAssignment] = []
@@ -195,6 +208,7 @@ def solve_rollout_milp_bisection(
     tol: float = 1e-3,
     max_iters: int = 40,
     cost_provider: Optional[CostProvider] = None,
+    env: Optional[EnvCostModel] = None,
 ) -> MILPResult:
     """Paper-literal Eq. 2 via Θ-bisection: each iterate solves the linear
     feasibility MILP  ∃y,x: Σx=B, x_ψ·len ≤ Θ·y_ψ·h_ψ, Σ v·y ≤ i."""
@@ -204,7 +218,7 @@ def solve_rollout_milp_bisection(
     configs = enumerate_replica_configs(
         spec, type_counts, P, max_pp=max_pp,
         node_widths=slice_node_widths(d_infer),
-        cost_provider=cost_provider)
+        cost_provider=cost_provider, env=env)
     if not configs:
         empty = RolloutPlan(assignments=(), makespan=math.inf,
                             total_rollouts=total_rollouts)

@@ -64,6 +64,10 @@ class ScheduledPlan:
     cost_reward: float
     delta: int                          # δ(η) window used
     gamma: float                        # compute fraction given to training
+    # env/tool-pool component of C_I (the paper's third stage; 0.0 unless
+    # the SchedulerConfig carries an EnvCostModel — defaults keep every
+    # existing construction site and signature untouched)
+    cost_env: float = 0.0
     iterations: int = 0                 # scheduler iterations to converge
     wall_time_s: float = 0.0            # scheduler runtime
     # --- provenance: who produced this plan and where it sits in the elastic
@@ -112,6 +116,7 @@ class ScheduledPlan:
             f"γ={self.gamma:.3f}\n  σ: {self.train_plan.describe()}\n"
             f"  τ: {self.rollout_plan.describe()}\n"
             f"  C_T={self.cost_train:.2f}s  C_I={self.cost_infer:.2f}s "
-            f"(update={self.cost_update:.2f}s reward={self.cost_reward:.2f}s)  "
-            f"δ={self.delta}"
+            f"(update={self.cost_update:.2f}s reward={self.cost_reward:.2f}s"
+            + (f" env={self.cost_env:.2f}s" if self.cost_env else "")
+            + f")  δ={self.delta}"
         )

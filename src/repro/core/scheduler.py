@@ -22,8 +22,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .cluster import Cluster, Device
 from .constrained_search import constrained_search, exhaustive_search
-from .cost_model import (CostProvider, LengthDistribution, TrainCost,
-                         weight_sync_cost)
+from .cost_model import (CostProvider, EnvCostModel, LengthDistribution,
+                         TrainCost, weight_sync_cost)
 from .graph_partition import (PartitionResult, compute_fraction, partition,
                               partition_exhaustive)
 from .milp import solve_rollout_milp, solve_rollout_milp_bisection
@@ -46,6 +46,11 @@ class SchedulerConfig:
     # None → the analytic constant tables (bit-identical to the pre-provider
     # scheduler); a MeasuredCostModel overlays autotuned kernel measurements.
     cost_provider: Optional[CostProvider] = None
+    # the paper's THIRD stage: reward/environment computation for multi-turn
+    # agentic rollouts.  None (or turns=1) keeps plans bit-identical; set,
+    # it deflates every h_ψ by the replica's env-stall utilization and adds
+    # the env pool's stage time to C_I, so env latency moves γ.
+    env: Optional[EnvCostModel] = None
 
     def __post_init__(self):
         if self.staleness is None:
@@ -86,21 +91,27 @@ def _evaluate_allocation(
               else solve_rollout_milp)
     milp_res = solver(spec, part.infer_devices, P,
                       total_rollouts=delta * rollouts_per_step,
-                      cost_provider=cfg.cost_provider)
+                      cost_provider=cfg.cost_provider, env=cfg.env)
     tau = milp_res.plan
     if not tau.assignments or not math.isfinite(tau.makespan):
         return None
 
     c_update = weight_sync_cost(spec, cluster, part.train_devices,
                                 part.infer_devices)
+    # third stage: env-pool wall time for the window's episodes (the flat
+    # reward_cost_s constant stays — env calls are IN ADDITION to terminal
+    # reward computation, and 0.0 without an EnvCostModel)
+    c_env = (cfg.env.stage_time(delta * rollouts_per_step)
+             if cfg.env is not None else 0.0)
     c_t = delta * tcost.total
-    c_i = tau.makespan + cfg.reward_cost_s * delta + c_update * delta
+    c_i = tau.makespan + cfg.reward_cost_s * delta + c_update * delta + c_env
     return ScheduledPlan(
         train_devices=[d.index for d in part.train_devices],
         infer_devices=[d.index for d in part.infer_devices],
         train_plan=sigma, rollout_plan=tau,
         cost_train=c_t, cost_infer=c_i,
         cost_update=c_update * delta, cost_reward=cfg.reward_cost_s * delta,
+        cost_env=c_env,
         delta=delta, gamma=part.gamma_actual,
     )
 
@@ -337,19 +348,22 @@ def schedule_without_search(
         rollouts = delta * cfg.tokens_per_step / max(P.mean(), 1.0)
         milp_res = solve_rollout_milp_bisection(
             spec, part.infer_devices, P, total_rollouts=rollouts,
-            cost_provider=cfg.cost_provider)
+            cost_provider=cfg.cost_provider, env=cfg.env)
         tau = milp_res.plan
         if not tau.assignments:
             return None
         c_update = weight_sync_cost(spec, cluster, part.train_devices,
                                     part.infer_devices)
+        c_env = cfg.env.stage_time(rollouts) if cfg.env is not None else 0.0
         return ScheduledPlan(
             train_devices=[d.index for d in part.train_devices],
             infer_devices=[d.index for d in part.infer_devices],
             train_plan=sigma, rollout_plan=tau,
             cost_train=delta * tcost.total,
-            cost_infer=tau.makespan + cfg.reward_cost_s * delta + c_update * delta,
+            cost_infer=(tau.makespan + cfg.reward_cost_s * delta
+                        + c_update * delta + c_env),
             cost_update=c_update * delta, cost_reward=cfg.reward_cost_s * delta,
+            cost_env=c_env,
             delta=delta, gamma=part.gamma_actual)
 
     best, _ = _gamma_bisection(cluster, cfg, evaluate)

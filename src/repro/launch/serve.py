@@ -14,7 +14,11 @@
     paged KV cache, per-step admission/eviction, interleaved chunked
     prefill + decode under a token budget.  Dense-transformer families
     only; prints slot/page occupancy and the ``EngineReport`` that feeds
-    ``ServingCostModel`` back into the scheduler.
+    ``ServingCostModel`` back into the scheduler.  ``--radix`` turns on
+    the cross-request radix prefix cache; ``--turns N`` (N > 1, implies
+    ``--radix``) drives multi-turn agentic episodes through
+    ``rl.agentic.MultiTurnDriver`` with a simulated tool env and prints
+    the radix hit rate + env-gap accounting.
 
 Both paths print throughput and a sample completion.  On an equal-length
 prompt batch, greedy runs produce token-identical completions across
@@ -43,6 +47,13 @@ def main() -> None:
                     help="paged: concurrent sequences (0 → batch size)")
     ap.add_argument("--page-size", type=int, default=0,
                     help="paged: tokens per KV page (0 → tuned default)")
+    ap.add_argument("--radix", action="store_true",
+                    help="paged: cross-request radix prefix cache")
+    ap.add_argument("--turns", type=int, default=1,
+                    help="paged: multi-turn episodes via a simulated "
+                         "tool env (turns > 1 implies --radix)")
+    ap.add_argument("--tool-tokens", type=int, default=12,
+                    help="paged: observation tokens injected per turn")
     ap.add_argument("--greedy", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -64,21 +75,40 @@ def main() -> None:
     gen = MathTaskGenerator(seed=args.seed)
     tasks = gen.batch(args.batch)
 
+    multi_turn = args.engine == "paged" and args.turns > 1
     if args.engine == "paged":
         from repro.serve import EngineReport, PagedEngine, ServeConfig
         slots = args.slots or args.batch
         plen = max(len(t.prompt_ids) for t in tasks)
+        extra = (args.turns - 1) * (args.max_new + args.tool_tokens)
         engine = PagedEngine(
             cfg, store, gen_cfg,
             ServeConfig(max_slots=slots,
-                        max_len=plen + args.max_new,
-                        page_size=args.page_size or None),
+                        max_len=plen + args.max_new + extra,
+                        page_size=args.page_size or None,
+                        radix=args.radix or multi_turn),
             rng_seed=args.seed)
     else:
         engine = RolloutEngine(cfg, store, gen_cfg, rng_seed=args.seed)
 
     t0 = time.time()
-    rollouts, metrics = engine.generate(tasks)
+    if multi_turn:
+        from repro.rl.agentic import EnvConfig, MultiTurnDriver, SimToolEnv
+        drv = MultiTurnDriver(engine, SimToolEnv(EnvConfig(
+            turns=args.turns, tool_tokens=args.tool_tokens,
+            seed=args.seed)))
+        episodes, metrics = drv.run(tasks, greedy=args.greedy)
+        rollouts = [e.final for e in episodes]
+        metrics["mean_len"] = float(np.mean(
+            [len(r.completion_ids) for r in rollouts]))
+        metrics["slot_occupancy"] = engine.stats.slot_occupancy
+        metrics["page_occupancy"] = engine.stats.page_occupancy
+        print(f"multi-turn: turns={metrics['turns']} "
+              f"env_calls={metrics['env_calls']} "
+              f"env_wait_s={metrics['env_wait_s']:.3f}  "
+              f"radix_hit_rate={metrics['radix_hit_rate']:.2f}")
+    else:
+        rollouts, metrics = engine.generate(tasks)
     dt = time.time() - t0
     n_tok = sum(len(r.completion_ids) for r in rollouts)
     print(f"[{args.engine}] generated {n_tok} tokens for {args.batch} "
@@ -96,8 +126,11 @@ def main() -> None:
         dev = (tuning.current_device_type()
                or jax.devices()[0].device_kind)
         print("engine report:",
-              EngineReport.from_stats(engine.stats, dev, engine="paged",
-                                      tokens_per_sec=n_tok / dt))
+              EngineReport.from_stats(
+                  engine.stats, dev, engine="paged",
+                  tokens_per_sec=n_tok / dt,
+                  turns_per_episode=float(metrics.get("turns", 1)),
+                  turn_gap_s=float(metrics.get("turn_gap_s", 0.0))))
     r = rollouts[0]
     print("sample prompt:    ", repr(tok.decode(r.prompt_ids)))
     print("sample completion:", repr(tok.decode(r.completion_ids)))

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.staleness import StalenessConfig
+from .agentic import EnvConfig, MultiTurnDriver, SimToolEnv
 from repro.data.tasks import MathTaskGenerator, Tokenizer
 from repro.models.api import ModelConfig, get_model
 from repro.optim.adamw import AdamWConfig, adamw_init
@@ -46,6 +47,11 @@ class TrainerConfig:
                                                        rollouts_per_step=16))
     opt: AdamWConfig = field(default_factory=lambda: AdamWConfig(lr=3e-5))
     seed: int = 0
+    # multi-turn agentic episodes (requires engine="paged"): rollouts go
+    # through the simulated env/tool pool between turns, the engine's radix
+    # cache serves each turn's history, and training consumes the FINAL
+    # turn of each episode.  None = single-turn (the historical behavior).
+    agentic: Optional["EnvConfig"] = None
 
 
 def _batch_from_rollouts(rollouts: List[Rollout], seq_len: int,
@@ -93,13 +99,28 @@ class AsyncGRPOTrainer:
         self.tasks = MathTaskGenerator(seed=tc.seed)
         self.rewarder = RuleBasedReward(self.tasks, shaped=True)
         gen = GenConfig(max_new_tokens=48, segment=12)
+        self.driver: Optional[MultiTurnDriver] = None
+        if tc.agentic is not None and tc.engine != "paged":
+            raise ValueError("TrainerConfig.agentic requires engine='paged' "
+                             "(multi-turn resume needs the radix cache)")
         if tc.engine == "paged":
             from repro.serve import PagedEngine, ServeConfig
+            # agentic episodes grow: history accumulates max_new + the tool
+            # observation per extra turn on top of the single-turn budget
+            extra = 0
+            if tc.agentic is not None:
+                per_turn = (tc.agentic.max_new_per_turn
+                            or gen.max_new_tokens) + tc.agentic.tool_tokens
+                extra = (tc.agentic.turns - 1) * per_turn
             self.engine = PagedEngine(
                 cfg, self.store, gen,
                 ServeConfig(max_slots=tc.group_size * tc.prompts_per_step,
-                            max_len=tc.seq_len + gen.max_new_tokens),
+                            max_len=tc.seq_len + gen.max_new_tokens + extra,
+                            radix=tc.agentic is not None),
                 rng_seed=tc.seed + 1)
+            if tc.agentic is not None:
+                self.driver = MultiTurnDriver(self.engine,
+                                              SimToolEnv(tc.agentic))
         elif tc.engine == "static":
             self.engine = RolloutEngine(cfg, self.store, gen,
                                         rng_seed=tc.seed + 1)
@@ -121,11 +142,19 @@ class AsyncGRPOTrainer:
         prompts = self.tasks.batch(n_prompts)
         gids = list(range(self._group_counter, self._group_counter + n_prompts))
         self._group_counter += n_prompts
-        # groups, not duplicated prompts: the paged engine prefills each
-        # prompt once and COW-forks the G−1 siblings; the static engine
-        # falls back to prompt replication inside generate_groups
-        rollouts, metrics = self.engine.generate_groups(prompts, G,
-                                                        group_ids=gids)
+        if self.driver is not None:
+            # multi-turn episodes: G episodes per prompt, the env injects
+            # an observation between turns, training sees the final turn
+            episodes, metrics = self.driver.run(
+                [p for p in prompts for _ in range(G)],
+                group_ids=[g for g in gids for _ in range(G)])
+            rollouts = [e.final for e in episodes]
+        else:
+            # groups, not duplicated prompts: the paged engine prefills each
+            # prompt once and COW-forks the G−1 siblings; the static engine
+            # falls back to prompt replication inside generate_groups
+            rollouts, metrics = self.engine.generate_groups(prompts, G,
+                                                            group_ids=gids)
         self.rewarder.score_batch(rollouts)
         for r in rollouts:
             self.buffer.push(r)

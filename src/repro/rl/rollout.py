@@ -33,6 +33,7 @@ class GenConfig:
     max_new_tokens: int = 64
     segment: int = 16              # tokens between weight-update checks
     temperature: float = 1.0
+    top_p: float = 1.0             # nucleus cutoff (paged engine; 1 = off)
     greedy: bool = False
     eos_id: int = Tokenizer.EOS
 

@@ -1,37 +1,62 @@
-"""Continuous-batching generation subsystem (PR 4 + PR 5 prefix sharing).
+"""Continuous-batching generation subsystem (PR 4–7).
 
 The static ``rl.rollout.RolloutEngine`` right-pads a batch and burns
 decode slots on finished rows; the paper prices generation as if a real
 serving engine kept the HBM-bound decode loop full.  This package *is*
-that engine:
+that engine, and its cache is organized around one page lifecycle —
+**match → alias → COW → insert → evict**:
+
+  * **match** — on admission the engine walks the ``radix`` tree
+    (token-keyed, SGLang-style) for the longest cached prefix of the
+    prompt, page-aligned and capped one token short so the final-token
+    logits are always computed fresh;
+  * **alias** — matched pages are refcount-retained and aliased into
+    the new slot's block table (``kv_cache.adopt_pages``); GRPO groups
+    take the same shortcut intra-batch via ``fork_slot`` (one prefill,
+    G−1 forks), and identical queued (prompt, sampling-params) requests
+    dedupe into a single prefill;
+  * **COW** — shared pages are immutable; the first divergent write to
+    a partial tail page copies just that page (``kv_cache`` refcounted
+    copy-on-write), so siblings and resumed turns diverge cheaply;
+  * **insert** — when a request completes, its full token sequence is
+    inserted back into the tree, which retains only the novel aligned
+    pages; a multi-turn episode re-entering after a tool call
+    (``PagedEngine.resume``) therefore prefills only the observation
+    delta;
+  * **evict** — the tree holds pages beyond any live request, so when
+    the allocator runs dry it reclaims LRU *leaves* first
+    (``RadixCache.evict``), never a page a live slot still references;
+    a weight swap invalidates all cached K/V and resets the tree.
+
+Modules:
 
   * ``kv_cache``  — paged KV pool: fixed-size blocks, per-sequence block
-    tables, alloc/free free-list, occupancy stats — now *refcounted with
-    copy-on-write*: ``fork_slot`` aliases a child's table onto its
-    parent's prompt pages (fork → shared → diverge → copy; only the
-    partial tail page is ever copied, on first divergent write).
-  * ``model``     — paged forward passes (chunked prefill + batched decode
-    over the pool) for the dense-transformer family, backed by the
-    ``kernels.paged_attention`` Pallas kernel on TPU.
-  * ``engine``    — the continuous scheduler: per-step admission from the
-    queue (identical queued prompts dedupe into one prefill — GRPO groups
-    via ``submit_group`` prefill ONCE and COW-fork the G−1 siblings),
-    evict-on-EOS, interleaved prefill-chunk + decode steps under a token
-    budget, a dirty-flag-cached device block table, segment-boundary
-    weight swap with oldest-version staleness accounting (AReaL
-    semantics, unchanged from the static engine; forked siblings inherit
-    the leader's version provenance).
+    tables, free-list alloc/free, refcounts + copy-on-write, occupancy
+    stats.
+  * ``radix``     — the cross-request radix/trie prefix cache over the
+    pool's pages (match / insert / split / LRU-leaf evict).
+  * ``model``     — paged forward passes (chunked prefill + batched
+    decode over the pool) for the dense-transformer family, backed by
+    the ``kernels.paged_attention`` Pallas kernel on TPU.
+  * ``engine``    — the continuous scheduler: per-step admission from
+    the queue (radix match + group fork + dedupe), evict-on-EOS,
+    interleaved prefill-chunk + decode steps under a token budget, a
+    dirty-flag-cached device block table, segment-boundary weight swap
+    with oldest-version staleness accounting (AReaL semantics; swaps
+    reset the radix tree), and ``resume()`` for multi-turn re-entry.
   * ``feedback``  — the loop back to the planner: ``ServingCostModel``
-    (a ``CostProvider`` whose decode_engine_eff comes from *observed*
-    serving behavior, and whose ``prefill_g_eff`` reports the measured
-    prefix-sharing amortization so the scheduler prices replica prefill
-    as C_prefill/G_eff — default 1 → plans bit-identical) and gen-time
-    fitting for the simulator's length-distribution-aware
-    generation-time model.
+    (observed decode_engine_eff; measured prefix/radix amortization
+    priced as C_prefill/G_eff — default 1 → plans bit-identical),
+    ``fit_env_model`` (measured episode shape → the scheduler's
+    third-stage env pool), and gen-time fitting for the simulator's
+    length-distribution-aware generation-time model.
 """
 from .engine import PagedEngine, ServeConfig
-from .feedback import EngineReport, ServingCostModel, fit_gen_time
+from .feedback import (EngineReport, ServingCostModel, fit_env_model,
+                       fit_gen_time)
 from .kv_cache import PagedKVCache
+from .radix import RadixCache
 
-__all__ = ["PagedEngine", "ServeConfig", "PagedKVCache",
-           "EngineReport", "ServingCostModel", "fit_gen_time"]
+__all__ = ["PagedEngine", "ServeConfig", "PagedKVCache", "RadixCache",
+           "EngineReport", "ServingCostModel", "fit_env_model",
+           "fit_gen_time"]

@@ -28,6 +28,22 @@ recompute — work lost, correctness kept); preempting a leader drags its
 pending forks back to the queue with it.  Per-sibling greedy decode is
 token-identical to a B=1 static run of the same prompt.
 
+**Cross-request radix cache (``serve.radix``).** Fork sharing needs the
+leader to still be mid-prefill; the radix tree (``serve.radix.RadixCache``)
+has no such window.  Finished sequences insert their page runs into a
+token-keyed tree at ``_finish``; admission matches every solo prompt
+against it and *adopts* the longest cached page-aligned prefix
+(``PagedKVCache.adopt_pages`` — refcount aliasing, same COW barrier),
+prefilling only the remainder (always ≥1 token, so first-token sampling
+still sees real final logits).  Tree leaves are reclaimed LRU-first, and
+only when the allocator actually wants pages — before refusing an
+admission and before preempting a live sequence.  ``resume(prev,
+new_turn)`` makes multi-turn agentic episodes ride this: re-entry after a
+tool call is an ordinary submission whose history prefix hits the tree.
+Radix-served tokens count into ``prefill_tokens_shared`` (and thus
+``g_eff``), so the scheduler prices them through the existing
+``prefill_g_eff`` hook; ``radix_hit_tokens`` tracks the radix share.
+
 AReaL semantics are preserved exactly: generation proceeds in *segments*
 (``GenConfig.segment`` decode steps); at segment boundaries the engine
 checks the weight store and swaps mid-sequence, every in-flight request
@@ -72,6 +88,7 @@ from repro.rl.weight_sync import WeightStore
 
 from .kv_cache import PagedKVCache
 from .model import paged_decode_step, paged_prefill_chunk
+from .radix import RadixCache
 
 
 @dataclass
@@ -83,6 +100,7 @@ class ServeConfig:
     prefill_chunk: int = 32            # tokens per prefill call
     token_budget: Optional[int] = None # per step; None → slots + one chunk
     share_prefix: bool = True          # COW-fork identical queued prompts
+    radix: bool = False                # cross-request radix prefix cache
 
 
 @dataclass
@@ -91,7 +109,8 @@ class EngineStats:
     decode_steps: int = 0              # batched decode invocations
     decode_slot_steps: int = 0         # Σ active slots over decode steps
     prefill_tokens: int = 0            # prompt tokens actually computed
-    prefill_tokens_shared: int = 0     # prompt tokens served by a fork
+    prefill_tokens_shared: int = 0     # prompt tokens served without compute
+    radix_hit_tokens: int = 0          # ... of which came from the radix tree
     tokens_generated: int = 0          # completion tokens kept
     preempted_slot_steps: int = 0      # decode work discarded by preemption
     weight_swaps: int = 0
@@ -145,6 +164,14 @@ class EngineStats:
         logical = self.prefill_tokens + self.prefill_tokens_shared
         return logical / self.prefill_tokens if self.prefill_tokens else 1.0
 
+    @property
+    def radix_hit_rate(self) -> float:
+        """Fraction of logically-needed prompt tokens served from the
+        cross-request radix cache (a subset of ``prefix_hit_rate``, which
+        also counts in-group COW forks)."""
+        logical = self.prefill_tokens + self.prefill_tokens_shared
+        return self.radix_hit_tokens / logical if logical else 0.0
+
 
 @dataclass
 class _Request:
@@ -153,7 +180,10 @@ class _Request:
     group_id: int
     prompt: List[int]
     max_new: int
-    phash: int = 0                     # prompt-token hash (dedupe key)
+    phash: int = 0                     # prompt-token hash (dedupe prefilter)
+    temperature: float = 1.0           # per-request sampling params —
+    top_p: float = 1.0                 # part of the dedupe key: identical
+    greedy: bool = False               # prompts, different params ≠ one group
     state: str = "QUEUED"              # QUEUED | PREFILL | FORK | DECODE
     slot: int = -1
     prefill_done: int = 0
@@ -163,7 +193,17 @@ class _Request:
     parent: Optional["_Request"] = None      # FORK: leader we wait on
     forks: List["_Request"] = field(default_factory=list)  # leader: waiters
     forked: bool = False               # prompt K/V came from a live fork
+    radix_tokens: int = 0              # prompt tokens adopted from the tree
     t_admit: float = 0.0
+
+    @property
+    def skey(self) -> Tuple:
+        """Coalescing key: prompt hash + every knob that changes what the
+        engine produces for it.  Two requests alias into one fork group
+        only when the whole tuple matches (prompt equality is re-checked
+        against hash collisions at the comparison sites)."""
+        return (self.phash, round(self.temperature, 9), round(self.top_p, 9),
+                self.greedy, self.max_new)
 
     @property
     def plen(self) -> int:
@@ -177,6 +217,19 @@ class _Request:
     @property
     def finished(self) -> bool:
         return bool(self.tokens) and len(self.tokens) >= self.max_new
+
+
+def _nucleus_filter(logits: jax.Array, top_p: float) -> jax.Array:
+    """Mask logits outside the smallest token set whose cumulative
+    probability reaches ``top_p`` (nucleus sampling).  The top-1 token is
+    always kept, so the result is never fully masked."""
+    sort = jnp.sort(logits, axis=-1)[..., ::-1]            # descending
+    probs = jax.nn.softmax(sort, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # a token is kept while the mass strictly before it is < top_p
+    keep = cum - probs < top_p
+    cutoff = jnp.min(jnp.where(keep, sort, jnp.inf), axis=-1, keepdims=True)
+    return jnp.where(logits >= cutoff, logits, -jnp.inf)
 
 
 class PagedEngine:
@@ -198,6 +251,8 @@ class PagedEngine:
                                num_pages=self.serve.num_pages,
                                page_size=self.serve.page_size)
         self.stats = EngineStats(max_slots=self.serve.max_slots)
+        self.radix: Optional[RadixCache] = (RadixCache(self.kv)
+                                            if self.serve.radix else None)
         self._queue: List[_Request] = []
         self._active: Dict[int, _Request] = {}       # slot → request
         self._done: List[_Request] = []
@@ -215,7 +270,9 @@ class PagedEngine:
         return k
 
     def _sample(self, logits: jax.Array, key) -> Tuple[np.ndarray, np.ndarray]:
-        """logits [..., padded_vocab] → (token ids, chosen logps)."""
+        """logits [..., padded_vocab] → (token ids, chosen logps), using the
+        engine-wide defaults — the batched fast path when no request in the
+        batch overrides its sampling params."""
         logits = logits[..., :self.cfg.vocab].astype(jnp.float32)
         if self.gen.greedy:
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -226,6 +283,30 @@ class PagedEngine:
                                    tok[..., None], axis=-1)[..., 0]
         return np.asarray(tok), np.asarray(logp)
 
+    def _sample_req(self, logits: jax.Array, key,
+                    req: "_Request") -> Tuple[int, float]:
+        """Single-row sample honoring ``req``'s own temperature / top_p /
+        greedy.  With engine-default params this computes exactly what
+        ``_sample`` would for the same key, so default requests stay
+        token-identical through either path."""
+        logits = logits[..., :self.cfg.vocab].astype(jnp.float32)
+        if req.greedy:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            scaled = logits / req.temperature
+            if req.top_p < 1.0:
+                scaled = _nucleus_filter(scaled, req.top_p)
+            tok = jax.random.categorical(key, scaled,
+                                         axis=-1).astype(jnp.int32)
+        logp = jnp.take_along_axis(jax.nn.log_softmax(logits, axis=-1),
+                                   tok[..., None], axis=-1)[..., 0]
+        return int(np.asarray(tok)), float(np.asarray(logp))
+
+    def _default_params(self, req: "_Request") -> bool:
+        return (req.temperature == self.gen.temperature
+                and req.top_p == getattr(self.gen, "top_p", 1.0)
+                and req.greedy == self.gen.greedy)
+
     def _maybe_swap_weights(self) -> None:
         if self.store.version > self._version:
             self._params, self._version = self.store.fetch(
@@ -233,12 +314,31 @@ class PagedEngine:
             self.stats.weight_swaps += 1
             for r in self._active.values():
                 r.versions.add(self._version)
+            if self.radix is not None:
+                # cached K/V was computed under the old weights; a NEW
+                # request adopting it would silently inherit stale
+                # provenance its version set doesn't record.  In-flight
+                # sequences keep decoding over their own pages (AReaL
+                # mid-sequence-swap semantics, unchanged) — only the
+                # cross-request tree is dropped.
+                self.radix.reset()
 
     # ------------------------------------------------------------ admission
     def submit(self, tasks: Sequence[MathTask], *, group_offset: int = 0,
                max_new_per_task: Optional[Sequence[int]] = None,
-               group_ids: Optional[Sequence[int]] = None) -> None:
+               group_ids: Optional[Sequence[int]] = None,
+               temperature: Optional[float] = None,
+               top_p: Optional[float] = None,
+               greedy: Optional[bool] = None) -> None:
+        """Enqueue one request per task.  ``temperature``/``top_p``/
+        ``greedy`` override the engine defaults for THESE requests only;
+        admission dedupe keys on (prompt, sampling params, max_new), so an
+        identical prompt submitted with different params gets its own
+        prefill group instead of aliasing to the first one's leader."""
         base = len(self._queue) + len(self._active) + len(self._done)
+        temp = self.gen.temperature if temperature is None else temperature
+        tp = (getattr(self.gen, "top_p", 1.0) if top_p is None else top_p)
+        gr = self.gen.greedy if greedy is None else greedy
         for j, t in enumerate(tasks):
             max_new = (self.gen.max_new_tokens if max_new_per_task is None
                        else int(max_new_per_task[j]))
@@ -252,17 +352,54 @@ class PagedEngine:
             prompt = list(t.prompt_ids)
             self._queue.append(_Request(idx=base + j, task=t, group_id=gid,
                                         prompt=prompt, max_new=max_new,
-                                        phash=hash(tuple(prompt))))
+                                        phash=hash(tuple(prompt)),
+                                        temperature=temp, top_p=tp,
+                                        greedy=gr))
 
     def submit_group(self, task: MathTask, group_size: int, *,
                      group_id: int = 0,
-                     max_new: Optional[int] = None) -> None:
+                     max_new: Optional[int] = None,
+                     temperature: Optional[float] = None,
+                     top_p: Optional[float] = None,
+                     greedy: Optional[bool] = None) -> None:
         """Enqueue one GRPO group: ``group_size`` completions of ONE
         prompt.  Admission coalesces them into a single prefill plus
         ``group_size − 1`` COW forks (when ``serve.share_prefix``)."""
         mnew = None if max_new is None else [max_new] * group_size
         self.submit([task] * group_size, group_ids=[group_id] * group_size,
-                    max_new_per_task=mnew)
+                    max_new_per_task=mnew, temperature=temperature,
+                    top_p=top_p, greedy=greedy)
+
+    def resume(self, prev, new_turn: Sequence[int], *,
+               task: Optional[MathTask] = None,
+               group_id: Optional[int] = None,
+               max_new: Optional[int] = None,
+               temperature: Optional[float] = None,
+               top_p: Optional[float] = None,
+               greedy: Optional[bool] = None) -> None:
+        """Re-enter a multi-turn conversation after a tool call: enqueue a
+        request whose prompt is the full history plus ``new_turn``.
+
+        ``prev`` is either the previous turn's ``Rollout`` (history =
+        its prompt + completion) or a raw token history.  This is just a
+        submission — with ``serve.radix`` on, admission matches the
+        history against the tree (the previous turn's pages were inserted
+        at ``_finish``) and prefills only the page-tail + ``new_turn``
+        delta; with radix off it degrades to a full re-prefill, token-
+        identically."""
+        if isinstance(prev, Rollout):
+            history = list(prev.prompt_ids) + list(prev.completion_ids)
+            task = prev.task if task is None else task
+            group_id = prev.group_id if group_id is None else group_id
+        else:
+            history = list(prev)
+        prompt = history + list(new_turn)
+        if task is None:
+            raise ValueError("resume from raw tokens needs an explicit task")
+        t = dataclasses.replace(task, prompt_ids=list(prompt))
+        self.submit([t], group_ids=[group_id or 0],
+                    max_new_per_task=None if max_new is None else [max_new],
+                    temperature=temperature, top_p=top_p, greedy=greedy)
 
     def _admit(self, now: float) -> None:
         while self._queue and self.kv.free_slots:
@@ -275,36 +412,82 @@ class PagedEngine:
                     # otherwise WAIT — admitting a second leader for the
                     # same prompt would recompute the prompt at HIGHER
                     # page cost than the fork we just refused
+                    if (self.kv.free_pages < len(leader.forks) + 2
+                            and not self._radix_evict(
+                                len(leader.forks) + 2 - self.kv.free_pages)):
+                        break
                     if self.kv.free_pages < len(leader.forks) + 2:
                         break
                     self._queue.pop(0)
                     self._admit_fork(leader, req, now)
                     continue
+            # longest cached prefix from the radix tree, capped one token
+            # short of the full prompt (the final logits must come from a
+            # real prefill for first-token sampling to work)
+            hit_pages: List[int] = []
+            hit = 0
+            if self.radix is not None and req.plen > 1:
+                pages, n = self.radix.match(req.prompt)
+                hit = min(n, ((req.plen - 1) // self.kv.page) * self.kv.page)
+                hit_pages = pages[:hit // self.kv.page]
             # prompt pages + one decode-headroom page — but never demand
             # more than the request will EVER need, or a short-completion
             # request whose total exactly fits the pool could never admit
             need = min(self.kv.pages_needed(req.plen) + 1,
                        self.kv.pages_needed(req.plen + req.max_new))
+            need -= len(hit_pages)
             if self.kv.free_pages < need:
-                break
+                # the tree's retained-but-idle leaves are reclaimable
+                # capacity: evict before refusing admission (adopted pages
+                # are on the match path, never LRU leaves of other runs —
+                # but a stale match could still lose its node, so re-match
+                # below if eviction ran)
+                if not self._radix_evict(need - self.kv.free_pages):
+                    break
+                if hit_pages:
+                    pages, n = self.radix.match(req.prompt)
+                    hit = min(n,
+                              ((req.plen - 1) // self.kv.page) * self.kv.page)
+                    hit_pages = pages[:hit // self.kv.page]
+                    need = min(self.kv.pages_needed(req.plen) + 1,
+                               self.kv.pages_needed(req.plen + req.max_new))
+                    need -= len(hit_pages)
+                if self.kv.free_pages < need:
+                    break
             self._queue.pop(0)
             slot = self.kv.alloc_slot()
+            if hit_pages:
+                self.kv.adopt_pages(slot, hit_pages, hit)
             ok = self.kv.ensure(slot, req.plen)
             assert ok, "admission checked free_pages"
             req.slot, req.state = slot, "PREFILL"
+            req.prefill_done = hit
+            req.radix_tokens = hit
             req.t_admit = now
             req.versions = {self._version}
             self._active[slot] = req
             self.stats.admissions += 1
+            # radix-served prompt tokens are shared-prefill credit exactly
+            # like fork-served ones: g_eff (and through it the scheduler's
+            # prefill_g_eff) prices both with the same machinery
+            self.stats.prefill_tokens_shared += hit
+            self.stats.radix_hit_tokens += hit
             if self.serve.share_prefix:
                 self._coalesce(req, now)
 
+    def _radix_evict(self, need: int) -> int:
+        """Reclaim ``need`` pages from the radix tree's idle leaves (0 when
+        no tree, nothing evictable, or ``need`` non-positive)."""
+        if self.radix is None or need <= 0:
+            return 0
+        return self.radix.evict(need)
+
     def _prefilling_leader_for(self, req: _Request) -> Optional[_Request]:
-        """An active mid-prefill request with the same prompt, if any
-        (once a leader starts decoding its prompt logits are gone, so
-        late arrivals can no longer fork from it)."""
+        """An active mid-prefill request with the same prompt AND sampling
+        params, if any (once a leader starts decoding its prompt logits
+        are gone, so late arrivals can no longer fork from it)."""
         return next((r for r in self._active.values()
-                     if r.state == "PREFILL" and r.phash == req.phash
+                     if r.state == "PREFILL" and r.skey == req.skey
                      and r.prompt == req.prompt), None)
 
     def _admit_fork(self, leader: _Request, sib: _Request,
@@ -322,14 +505,15 @@ class PagedEngine:
         self.stats.admissions += 1
 
     def _coalesce(self, leader: _Request, now: float) -> None:
-        """Scan the queue for requests with the SAME prompt as the just-
-        admitted ``leader`` and attach them as FORK siblings.  Each
+        """Scan the queue for requests with the SAME prompt and sampling
+        params as the just-admitted ``leader`` and attach them as FORK
+        siblings.  Each
         sibling admitted keeps ~1 page of headroom free for its tail-page
         COW copy (preemption covers misestimates)."""
         i = 0
         while i < len(self._queue):
             sib = self._queue[i]
-            if sib.phash != leader.phash or sib.prompt != leader.prompt:
+            if sib.skey != leader.skey or sib.prompt != leader.prompt:
                 i += 1
                 continue
             if (not self.kv.free_slots
@@ -340,6 +524,14 @@ class PagedEngine:
 
     # ------------------------------------------------------------- eviction
     def _finish(self, req: _Request, now: float) -> None:
+        if self.radix is not None:
+            # retain the finished sequence's full pages in the tree BEFORE
+            # freeing the slot, so the conversation's K/V survives for the
+            # next turn's resume().  K/V is written for positions
+            # 0..written−1 (prompt + all but the last sampled token);
+            # insert() truncates to whole pages itself.
+            seq = (req.prompt + req.tokens)[:req.written]
+            self.radix.insert(seq, self.kv._pages_of[req.slot])
         self.kv.free_slot(req.slot)
         del self._active[req.slot]
         req.slot = -1
@@ -388,6 +580,13 @@ class PagedEngine:
                 # makes sharing least effective
                 self.stats.prefill_tokens_shared -= req.plen
                 req.forked = False
+            if req.radix_tokens:
+                # same honesty rule for radix-served prompt tokens: the
+                # adopted pages are released with the slot, so the credit
+                # is void (re-admission re-matches and re-credits)
+                self.stats.prefill_tokens_shared -= req.radix_tokens
+                self.stats.radix_hit_tokens -= req.radix_tokens
+                req.radix_tokens = 0
         self._queue[:0] = group
         self.stats.preemptions += 1
         return True
@@ -425,6 +624,10 @@ class PagedEngine:
                 ]
                 if not lacking:
                     break
+                # idle radix leaves are cheaper to reclaim than a live
+                # sequence's work: evict before preempting
+                if self._radix_evict(len(lacking)):
+                    continue
                 if not self._preempt_youngest():
                     raise RuntimeError(
                         "page pool exhausted with a single sequence active "
@@ -471,11 +674,22 @@ class PagedEngine:
             self._bt_dev, jnp.asarray(token), jnp.asarray(pos),
             jnp.asarray(active))
         self.kv.k_pages, self.kv.v_pages = nk, nv
-        toks, logps = self._sample(logits, self._split())
+        if all(self._default_params(self._active[s]) for s in slots):
+            arr_toks, arr_logps = self._sample(logits, self._split())
+            toks = {s: int(arr_toks[s]) for s in slots}
+            logps = {s: float(arr_logps[s]) for s in slots}
+        else:
+            # at least one row overrides its sampling params: sample rows
+            # individually (slow path; the default-config stream above is
+            # bit-identical to the pre-override engine)
+            toks, logps = {}, {}
+            for s in slots:
+                toks[s], logps[s] = self._sample_req(
+                    logits[s], self._split(), self._active[s])
         for s in slots:
             r = self._active[s]
-            r.tokens.append(int(toks[s]))
-            r.logps.append(float(logps[s]))
+            r.tokens.append(toks[s])
+            r.logps.append(logps[s])
             self.kv.seq_lens[s] = r.written
             self.stats.tokens_generated += 1
             if r.tokens[-1] == self.gen.eos_id:
@@ -498,9 +712,9 @@ class PagedEngine:
         for sib in list(leader.forks):
             got = self.kv.fork_slot(leader.slot, leader.plen, child=sib.slot)
             assert got == sib.slot
-            tok, logp = self._sample(last_logits, self._split())
-            sib.tokens.append(int(tok))
-            sib.logps.append(float(logp))
+            tok, logp = self._sample_req(last_logits, self._split(), sib)
+            sib.tokens.append(tok)
+            sib.logps.append(logp)
             sib.state = "DECODE"
             sib.parent = None
             sib.forked = True
@@ -534,9 +748,9 @@ class PagedEngine:
         req.prefill_done += n
         self.stats.prefill_tokens += n
         if req.prefill_done >= req.plen:
-            first, logp = self._sample(logits[n - 1], self._split())
-            req.tokens.append(int(first))
-            req.logps.append(float(logp))
+            first, logp = self._sample_req(logits[n - 1], self._split(), req)
+            req.tokens.append(first)
+            req.logps.append(logp)
             req.state = "DECODE"
             self.kv.seq_lens[req.slot] = req.plen
             self.stats.tokens_generated += 1
@@ -617,6 +831,7 @@ class PagedEngine:
         tokens = st.tokens_generated - base.tokens_generated
         pf = st.prefill_tokens - base.prefill_tokens
         pf_shared = st.prefill_tokens_shared - base.prefill_tokens_shared
+        radix_tok = st.radix_hit_tokens - base.radix_hit_tokens
         metrics = {
             "weight_swaps": st.weight_swaps - base.weight_swaps,
             "versions": sorted(versions_used),
@@ -629,6 +844,9 @@ class PagedEngine:
             "prefill_tokens_shared": pf_shared,
             "prefix_hit_rate": pf_shared / (pf + pf_shared)
                                if pf + pf_shared else 0.0,
+            "radix_hit_tokens": radix_tok,
+            "radix_hit_rate": radix_tok / (pf + pf_shared)
+                              if pf + pf_shared else 0.0,
             "g_eff": (pf + pf_shared) / pf if pf else 1.0,
             "forks": st.forks - base.forks,
             "cow_copies": st.cow_copies - base.cow_copies,

@@ -21,6 +21,12 @@ COW-fork the shared prompt instead of prefilling it G times), and
 prices replica prefill as C_prefill / G_eff.  No report (or a report
 from an engine without sharing) → G_eff = 1 → plans bit-identical.
 
+For **agentic multi-turn** serving the loop closes twice more: the
+radix-cache hit rate is already folded into ``g_eff`` (radix-served
+prompt tokens count as shared), and ``fit_env_model`` rebuilds the
+scheduler's third-stage ``EnvCostModel`` from the measured episode shape
+(turns per episode, mean inter-turn env gap) so env latency moves γ.
+
 ``fit_gen_time`` turns the engine's per-request (length, seconds) samples
 into a ``core.cost_model.GenTimeModel`` — the length-distribution-aware
 generation-time model the simulator consumes instead of a fixed
@@ -35,7 +41,8 @@ import numpy as np
 
 from repro.autotune.measured import _clip       # shared [floor, ceil] clamp
 from repro.core.cluster import DeviceProfile
-from repro.core.cost_model import (ANALYTIC, CostProvider, GenTimeModel)
+from repro.core.cost_model import (ANALYTIC, CostProvider, EnvCostModel,
+                                   GenTimeModel)
 
 from .engine import EngineStats
 
@@ -56,11 +63,20 @@ class EngineReport:
     prefix_hit_rate: float = 0.0   # prompt tokens served by a fork / needed
     shared_page_fraction: float = 0.0  # logical page refs on shared pages
     g_eff: float = 1.0             # needed prompt tokens / computed ones
+    # multi-turn agentic serving: the radix-cache share of the prefix hits
+    # (subset of prefix_hit_rate) plus the measured episode shape, from
+    # which ``fit_env_model`` rebuilds the scheduler's third-stage model.
+    # Defaults = single-turn engine → fit_env_model returns None.
+    radix_hit_rate: float = 0.0    # prompt tokens served from the radix tree
+    turns_per_episode: float = 1.0
+    turn_gap_s: float = 0.0        # mean measured env/tool inter-turn gap
 
     @classmethod
     def from_stats(cls, stats: EngineStats, device_type: str,
                    *, engine: str = "paged",
-                   tokens_per_sec: float = 0.0) -> "EngineReport":
+                   tokens_per_sec: float = 0.0,
+                   turns_per_episode: float = 1.0,
+                   turn_gap_s: float = 0.0) -> "EngineReport":
         return cls(device_type=device_type, engine=engine,
                    tokens_per_sec=tokens_per_sec,
                    slot_occupancy=stats.slot_occupancy,
@@ -69,7 +85,10 @@ class EngineReport:
                    decode_steps=stats.decode_steps,
                    prefix_hit_rate=stats.prefix_hit_rate,
                    shared_page_fraction=stats.shared_page_fraction,
-                   g_eff=stats.g_eff)
+                   g_eff=stats.g_eff,
+                   radix_hit_rate=stats.radix_hit_rate,
+                   turns_per_episode=turns_per_episode,
+                   turn_gap_s=turn_gap_s)
 
 
 class ServingCostModel(CostProvider):
@@ -115,9 +134,30 @@ class ServingCostModel(CostProvider):
         return self.fallback.hbm_eff(profile)
 
 
+def fit_env_model(report: EngineReport, *, workers: int = 64,
+                  cv: float = 0.5,
+                  overlap: float = 0.0) -> Optional[EnvCostModel]:
+    """Measured multi-turn serving → the scheduler's third-stage env model.
+
+    Rebuilds a ``core.cost_model.EnvCostModel`` from the engine-side
+    episode shape (mean turns per episode, mean inter-turn gap); the
+    pool-side knobs the engine cannot observe (worker count, latency
+    spread, decode overlap) are passed through.  A single-turn report
+    (turns ≤ 1 or no measured gap) returns None — callers keep
+    ``SchedulerConfig.env = None`` and plans stay bit-identical.
+    """
+    if report.turns_per_episode <= 1.0 or report.turn_gap_s <= 0.0:
+        return None
+    return EnvCostModel(mean_s=report.turn_gap_s, cv=cv,
+                        turns=report.turns_per_episode,
+                        workers=workers, overlap=overlap)
+
+
 def fit_gen_time(samples: Sequence[Tuple[int, float]],
                  prompt_len: float = 0.0,
-                 g_eff: float = 1.0) -> Optional[GenTimeModel]:
+                 g_eff: float = 1.0,
+                 turns: float = 1.0,
+                 turn_gap_s: float = 0.0) -> Optional[GenTimeModel]:
     """Least-squares fit of T(L) = t_prefill + a·L + b·L·(prompt + L/2)
     over the engine's per-request (completion length, seconds) samples.
     Needs ≥3 distinct lengths to resolve the quadratic; returns None
@@ -128,7 +168,12 @@ def fit_gen_time(samples: Sequence[Tuple[int, float]],
     divided by it at evaluation time (``GenTimeModel.raw``).  Pass it
     when the samples came from an engine WITHOUT sharing but the
     simulated deployment will share; samples from a sharing engine
-    already absorb the saving, so the default 1.0 is correct there."""
+    already absorb the saving, so the default 1.0 is correct there.
+
+    ``turns``/``turn_gap_s`` (e.g. from a multi-turn ``EngineReport``)
+    stamp the episode shape onto the model: ``GenTimeModel.duration``
+    adds (turns−1)·gap of un-normalized env wall time per episode.  The
+    defaults add nothing — single-turn fits are unchanged."""
     if len({ln for ln, _ in samples}) < 3:
         return None
     L = np.asarray([ln for ln, _ in samples], np.float64)
@@ -138,4 +183,6 @@ def fit_gen_time(samples: Sequence[Tuple[int, float]],
     tp, a, b = (max(float(c), 0.0) for c in coef)
     if a == 0.0 and b == 0.0:
         return None
-    return GenTimeModel(a=a, b=b, t_prefill=tp, g_eff=max(g_eff, 1.0))
+    return GenTimeModel(a=a, b=b, t_prefill=tp, g_eff=max(g_eff, 1.0),
+                        turns=max(turns, 1.0),
+                        turn_gap_s=max(turn_gap_s, 0.0))

@@ -201,6 +201,42 @@ class PagedKVCache:
         self.cow_copies += 1
         return True
 
+    # ---------------------------------------------- radix-cache co-ownership
+    def retain_page(self, pid: int) -> None:
+        """Take a reference on ``pid`` on behalf of an owner that is not a
+        slot (the radix prefix cache).  The page must be live — the tree
+        only adopts pages out of a slot that still holds them."""
+        assert 0 < pid < self.num_pages and self._ref[pid] > 0, \
+            "retain_page requires a live non-null page"
+        self._ref[pid] += 1
+
+    def release_page(self, pid: int) -> None:
+        """Drop a non-slot reference taken by ``retain_page``; the page
+        returns to the free list when no slot or tree node holds it."""
+        assert self._ref[pid] > 0
+        self._ref[pid] -= 1
+        if self._ref[pid] == 0:
+            self._free_pages.append(pid)
+
+    def adopt_pages(self, slot: int, page_ids: List[int],
+                    n_tokens: int) -> None:
+        """Alias cached pages into an empty ``slot``'s block table covering
+        ``n_tokens`` logical slots (refcounts incremented, no K/V moved) —
+        the radix-cache analogue of ``fork_slot``, where the prefix comes
+        from the tree instead of a live parent.  Writes into adopted pages
+        must go through the same ``writable`` COW barrier."""
+        owned = self._pages_of[slot]
+        assert not owned, "adopt target slot must hold no pages"
+        assert len(page_ids) == self.pages_needed(n_tokens) and \
+            n_tokens % self.page == 0, "adoption must be page-aligned"
+        for i, pid in enumerate(page_ids):
+            assert self._ref[pid] > 0, "cannot adopt a freed page"
+            self.block_tables[slot, i] = pid
+            self._ref[pid] += 1
+            owned.append(pid)
+        self.seq_lens[slot] = n_tokens
+        self.dirty = True
+
     def free_slot(self, slot: int) -> None:
         for pid in self._pages_of.pop(slot):
             self._ref[pid] -= 1

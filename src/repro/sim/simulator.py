@@ -63,7 +63,8 @@ from typing import Dict, List, Optional, Sequence, Set
 
 import numpy as np
 
-from repro.core.cost_model import GenTimeModel, LengthDistribution
+from repro.core.cost_model import (EnvCostModel, GenTimeModel,
+                                   LengthDistribution)
 from repro.core.jobs import (AdmissionConfig, ControlPlane,
                              EwmaThroughputTrend, JobRecord, JobState,
                              TrendConfig)
@@ -90,6 +91,11 @@ class SimConfig:
     # GenTimeModel.from_replica_cost); None = the historical fixed
     # per-token constant — existing runs are bit-identical
     gen_time: Optional[GenTimeModel] = None
+    # agentic multi-turn env/tool pool: each episode waits out sampled
+    # inter-turn env gaps before its reward (stochastic counterpart of the
+    # scheduler's EnvCostModel.stage_time); None = no gaps, no extra rng
+    # draws — existing runs are bit-identical
+    env: Optional[EnvCostModel] = None
 
 
 @dataclass
@@ -251,8 +257,10 @@ class AsyncRLSimulator:
                 *_lognorm(self.P)), 16, self.P.max_len))
             dur = _gen_duration(cfg.gen_time, length, self.P, rate[i])
             gen_busy_sum += dur
-            q.push(now + dur + cfg.reward_cost_s, "rollout_done",
-                   (epoch, i, version, length))
+            # env gaps are wall time the replica stalls, not generation —
+            # they delay the rollout but do not count as gen_busy
+            q.push(now + dur + _env_gap(cfg.env, rng) + cfg.reward_cost_s,
+                   "rollout_done", (epoch, i, version, length))
 
         def maybe_train(now: float) -> None:
             nonlocal steps, tokens_consumed, version, in_flight, consumed
@@ -496,6 +504,15 @@ def _gen_duration(gtm: Optional[GenTimeModel], length: float,
                         tokens_per_sec=max(rate, 1e-9), mean_len=P.mean())
 
 
+def _env_gap(env: Optional[EnvCostModel], rng: np.random.Generator) -> float:
+    """Sampled inter-turn env/tool wall time one episode waits out (0.0 and
+    no rng draw without a model — keeps existing streams bit-identical)."""
+    if env is None:
+        return 0.0
+    calls = int(round(env.calls_per_episode))
+    return float(env.sample_gaps(rng, calls).sum())
+
+
 # ===================================================================== multi
 class DeviceLedger:
     """Shared device-ownership ledger for N concurrent jobs.
@@ -550,6 +567,7 @@ class MultiSimConfig:
     replanner: Optional[PoolReplanner] = None
     check_invariants: bool = False
     gen_time: Optional[GenTimeModel] = None  # see SimConfig.gen_time
+    env: Optional[EnvCostModel] = None       # see SimConfig.env
     # --- control plane (ISSUE 6): online arrivals + departure
     admission: Optional[AdmissionConfig] = None   # defaulted when arrivals
     depart_on_completion: bool = False     # finished jobs leave the pool and
@@ -836,8 +854,8 @@ class MultiJobSimulator:
                                    16, jr.P.max_len))
             dur = _gen_duration(cfg.gen_time, length, jr.P, jr.rate[i])
             jr.gen_busy_sum += dur
-            q.push(now + dur + cfg.reward_cost_s, "rollout_done",
-                   (jr.name, jr.epoch, i, jr.version, length))
+            q.push(now + dur + _env_gap(cfg.env, rng) + cfg.reward_cost_s,
+                   "rollout_done", (jr.name, jr.epoch, i, jr.version, length))
 
         def maybe_train(jr: _JobRun, now: float) -> None:
             if jr.steps >= jr.n_steps or now < jr.trainer_busy_until:
@@ -991,6 +1009,14 @@ class MultiJobSimulator:
         for a in cfg.arrivals:
             pending_submits += 1
             q.push(a.t_submit, "job_submit", a)
+        # periodic admission retry (ControlPlane.tick): re-price queued jobs
+        # every retry_interval_s instead of waiting for the next
+        # departure/failure-driven replan.  No tick events when the knob is
+        # unset — existing event streams are untouched.
+        retry_s = (cfg.admission.retry_interval_s
+                   if cfg.admission is not None else None)
+        if control is not None and retry_s is not None:
+            q.push(retry_s, "admission_tick", None)
         for jr in jobs.values():
             for i in range(jr.n_rep):
                 launch(jr, i, 0.0)
@@ -1087,6 +1113,18 @@ class MultiJobSimulator:
                                      cluster=replanner.surviving_cluster())
                 if dec.action == "queue":
                     request_replan(t, f"arrival:{a.spec.name}")
+            elif ev.kind == "admission_tick":
+                due = control.tick(t, cluster=replanner.surviving_cluster())
+                if due:
+                    request_replan(t, "admission_retry:" + ",".join(due))
+                # keep ticking while there is (or will be) a queue AND some
+                # job is still running to share with — otherwise the tick
+                # chain ends and the event queue can drain
+                if (pending_submits
+                        or (control.queued()
+                            and any(jr.steps < jr.n_steps
+                                    for jr in jobs.values()))):
+                    q.push(t + retry_s, "admission_tick", None)
             elif ev.kind == "pool_drain":
                 state = "DRAINING"
                 q.push(t + elastic.replan_latency_s, "pool_ready", None)

@@ -1,0 +1,220 @@
+"""Agentic multi-turn rollouts: env/tool pool as the third pipeline stage.
+
+What must hold:
+
+  * the simulated tool is deterministic in tokens — a cold-cache and a
+    warm-cache engine replay token-identical multi-turn episodes, with
+    the warm engine prefilling a fraction of the tokens (radix re-entry);
+  * ``EnvCostModel`` defaults are no-ops — turns=1 (or env=None) keeps
+    scheduler plans bit-identical, the simulator's event stream
+    untouched, and ``fit_env_model`` returning None;
+  * with a real env model, env latency moves the bipartition: per-config
+    h_ψ deflates (faster replicas stall more on the same call), C_I gains
+    a stage term, and γ shifts;
+  * the simulator's sampled env gaps extend wall time without breaking
+    rollout conservation;
+  * the async trainer can drive whole multi-turn episodes end-to-end.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.cluster import tpu_heterogeneous
+from repro.core.cost_model import (EnvCostModel, GenTimeModel,
+                                   LengthDistribution, ReplicaConfig,
+                                   replica_throughput)
+from repro.core.milp import enumerate_replica_configs
+from repro.core.model_spec import PAPER_MODELS
+from repro.core.scheduler import SchedulerConfig, schedule
+from repro.core.staleness import StalenessConfig
+from repro.data.tasks import MathTaskGenerator, Tokenizer
+from repro.models.api import ModelConfig, get_model
+from repro.rl.agentic import EnvConfig, MultiTurnDriver, SimToolEnv
+from repro.rl.rollout import GenConfig
+from repro.rl.weight_sync import WeightStore
+from repro.serve import PagedEngine, ServeConfig
+from repro.serve.feedback import EngineReport, fit_env_model
+from repro.sim.simulator import AsyncRLSimulator, SimConfig
+
+TOK = Tokenizer()
+TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=32,
+                   n_heads=4, n_kv_heads=2, d_ff=64, vocab=TOK.vocab_size,
+                   dtype="float32", remat=False)
+P = LengthDistribution(mean_len=4096, prompt_len=512)
+SPEC = PAPER_MODELS["1.5B"]
+
+
+def _store(seed=0):
+    store = WeightStore()
+    store.publish(get_model(TINY).init(jax.random.PRNGKey(seed), TINY))
+    return store
+
+
+def _sched(env=None):
+    return SchedulerConfig(tokens_per_step=2 ** 18, stable_iters=3,
+                           max_iters=8, adapt_delta=False,
+                           staleness=StalenessConfig(eta=4), env=env)
+
+
+# ---------------------------------------------------------------- env pool
+def test_sim_tool_env_observation_is_pure():
+    env_a, env_b = SimToolEnv(EnvConfig(seed=7)), SimToolEnv(EnvConfig(seed=7))
+    hist = [5, 9, 11, 200]
+    assert env_a.observe(hist) == env_b.observe(hist)
+    assert env_a.observe(hist) == env_a.observe(list(hist))   # stateless
+    assert env_a.observe(hist) != env_a.observe(hist + [3])
+    assert env_a.observe(hist) != SimToolEnv(EnvConfig(seed=8)).observe(hist)
+    # observations are valid (non-special) tokenizer ids
+    assert all(Tokenizer.OFFSET <= t < TOK.vocab_size
+               for t in env_a.observe(hist))
+    # latency accrues simulated seconds without sleeping
+    t = env_a.latency()
+    assert t > 0 and env_a.total_wait_s == t and env_a.calls == 1
+
+
+def test_env_cost_model_single_turn_is_noop():
+    env = EnvCostModel(mean_s=3.0, turns=1.0, workers=2)
+    assert env.calls_per_episode == 0.0
+    assert env.stage_time(1e6) == 0.0
+    rc = replica_throughput(SPEC, ReplicaConfig("TPUv5e", (4,)), P)
+    assert env.replica_util(rc, P) == 1.0
+    assert env.sample_gaps(np.random.default_rng(0), 0).size == 0
+
+
+def test_env_deflates_faster_replicas_more():
+    """Same env call stalls a fast replica for a larger fraction of its
+    wall time — the per-config deflation that reshuffles Ψ preferences."""
+    env = EnvCostModel(mean_s=2.0, turns=4.0, workers=8)
+    rc = replica_throughput(SPEC, ReplicaConfig("TPUv5e", (4,)), P)
+    fast = dataclasses.replace(rc, tokens_per_sec=4 * rc.tokens_per_sec)
+    assert env.replica_util(fast, P) < env.replica_util(rc, P) < 1.0
+    # Ψ enumeration applies it per config; None leaves Ψ untouched
+    counts = {"TPUv5e": 8}
+    base = enumerate_replica_configs(SPEC, counts, P)
+    defl = enumerate_replica_configs(SPEC, counts, P, env=env)
+    assert len(base) == len(defl)
+    for (c0, r0), (c1, r1) in zip(base, defl):
+        assert c0 == c1 and r1.tokens_per_sec < r0.tokens_per_sec
+
+
+def test_env_latency_moves_gamma_noop_without_model():
+    cluster = tpu_heterogeneous(8, 16)
+    base = schedule(SPEC, cluster, P, _sched())
+    # a single-turn env model is a no-op: bit-identical decision
+    noop = schedule(SPEC, cluster, P,
+                    _sched(EnvCostModel(mean_s=5.0, turns=1.0)))
+    assert noop.signature() == base.signature()
+    assert base.cost_env == 0.0 and noop.cost_env == 0.0
+    # a heavy multi-turn env pool adds a C_I stage and shifts γ
+    heavy = schedule(SPEC, cluster, P,
+                     _sched(EnvCostModel(mean_s=2.0, turns=8.0, workers=2)))
+    assert heavy.cost_env > 0.0
+    assert heavy.cost_infer > base.cost_infer
+    assert heavy.gamma != base.gamma
+    assert "env=" in heavy.describe() and "env=" not in base.describe()
+
+
+def test_fit_env_model_roundtrip_and_single_turn_none():
+    rep = EngineReport(device_type="TPUv5e", engine="paged",
+                       tokens_per_sec=0.0, slot_occupancy=0.8,
+                       page_occupancy=0.9, batch_slots=8, decode_steps=100,
+                       turns_per_episode=3.0, turn_gap_s=0.25)
+    env = fit_env_model(rep, workers=32, cv=0.4)
+    assert env is not None
+    assert env.turns == 3.0 and env.mean_s == 0.25 and env.workers == 32
+    assert fit_env_model(dataclasses.replace(rep, turns_per_episode=1.0)) \
+        is None
+    assert fit_env_model(dataclasses.replace(rep, turn_gap_s=0.0)) is None
+
+
+def test_gen_time_model_turn_gap_added_after_normalization():
+    """Env gaps are wall time, not generation: the gap must survive the
+    mean-length normalization instead of being scaled away by it."""
+    base = GenTimeModel(a=2e-3, b=1e-5, t_prefill=0.05)
+    turny = GenTimeModel(a=2e-3, b=1e-5, t_prefill=0.05,
+                         turns=3.0, turn_gap_s=0.5)
+    for L in (64.0, 512.0, 4096.0):
+        assert turny.duration(L, prompt_len=512, tokens_per_sec=1e4,
+                              mean_len=1024) == pytest.approx(
+            base.duration(L, prompt_len=512, tokens_per_sec=1e4,
+                          mean_len=1024) + 1.0)
+
+
+# --------------------------------------------------------------- simulator
+def test_simulator_env_gaps_extend_wall_time_conserved():
+    cluster = tpu_heterogeneous(8, 16)
+    plan = schedule(SPEC, cluster, P, _sched())
+    base = AsyncRLSimulator(plan, P, SimConfig(
+        n_steps=5, rollouts_per_step=32, eta=4,
+        check_invariants=True)).run()
+    gappy = AsyncRLSimulator(plan, P, SimConfig(
+        n_steps=5, rollouts_per_step=32, eta=4, check_invariants=True,
+        env=EnvCostModel(mean_s=2.0, turns=4.0))).run()
+    assert gappy.steps == base.steps == 5
+    assert gappy.wall_time_s > base.wall_time_s
+    # the stall shows up as reduced generation busy fraction, and every
+    # launched rollout is still accounted for
+    assert gappy.gen_busy_frac < base.gen_busy_frac
+    assert gappy.rollouts_launched == (gappy.rollouts_trained
+                                       + gappy.rollouts_in_buffer
+                                       + gappy.rollouts_generating
+                                       + gappy.dropped)
+
+
+# ------------------------------------------------------- multi-turn driver
+def test_multi_turn_episodes_token_identical_warm_vs_cold():
+    """The fig12 identity gate in unit form: radix on/off engines replay
+    the same episodes token-for-token, and the warm engine prefills less
+    than half the prompt tokens."""
+    store = _store()
+    tasks = MathTaskGenerator(seed=3).batch(3)
+    gen = GenConfig(max_new_tokens=16, segment=8, greedy=True)
+    env_cfg = EnvConfig(turns=3, tool_tokens=8, max_new_per_turn=12, seed=5)
+
+    def run(radix):
+        eng = PagedEngine(TINY, store, gen,
+                          ServeConfig(max_slots=4, max_len=256, page_size=16,
+                                      radix=radix), rng_seed=1)
+        drv = MultiTurnDriver(eng, SimToolEnv(env_cfg))
+        return drv.run(tasks, greedy=True)
+
+    cold_eps, cold_m = run(False)
+    warm_eps, warm_m = run(True)
+    for c, w in zip(cold_eps, warm_eps):
+        assert len(c.turns) == len(w.turns) == 3
+        for rc_, rw in zip(c.turns, w.turns):
+            assert rc_.prompt_ids == rw.prompt_ids
+            assert rc_.completion_ids == rw.completion_ids
+        assert c.env_wait_s > 0 and w.env_wait_s > 0
+    assert cold_m["radix_hit_tokens"] == 0
+    assert warm_m["prefill_tokens"] * 2 <= cold_m["prefill_tokens"]
+    assert warm_m["radix_hit_rate"] > 0.3
+    assert warm_m["env_calls"] == cold_m["env_calls"] == 2 * len(tasks)
+    # measured episode shape closes the loop into the scheduler's model
+    env = fit_env_model(EngineReport(
+        device_type="TPUv5e", engine="paged", tokens_per_sec=0.0,
+        slot_occupancy=1.0, page_occupancy=1.0, batch_slots=4,
+        decode_steps=1, turns_per_episode=warm_m["turns"],
+        turn_gap_s=warm_m["turn_gap_s"]))
+    assert env is not None and env.turns == 3
+
+
+@pytest.mark.slow
+def test_async_trainer_agentic_end_to_end():
+    from repro.rl.async_trainer import AsyncGRPOTrainer, TrainerConfig
+    tc = TrainerConfig(group_size=2, prompts_per_step=2, seq_len=160,
+                       total_steps=1, engine="paged",
+                       staleness=StalenessConfig(eta=2, rollouts_per_step=4),
+                       agentic=EnvConfig(turns=2, tool_tokens=6,
+                                         max_new_per_turn=10))
+    tr = AsyncGRPOTrainer(TINY, tc)
+    m = tr.produce()
+    assert m["launched"] == 4 and m["episodes"] == 4 and m["turns"] == 2
+    assert m["env_calls"] == 4 and m["env_wait_s"] > 0
+    assert tr.train_one() is not None
+    # agentic path demands the paged engine
+    with pytest.raises(ValueError):
+        AsyncGRPOTrainer(TINY, TrainerConfig(engine="static",
+                                             agentic=EnvConfig()))

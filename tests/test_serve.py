@@ -43,6 +43,7 @@ from repro.rl.weight_sync import WeightStore
 from repro.serve import (EngineReport, PagedEngine, ServeConfig,
                          ServingCostModel, fit_gen_time)
 from repro.serve.kv_cache import PagedKVCache
+from repro.serve.radix import RadixCache
 
 TOK = Tokenizer()
 TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=32,
@@ -123,36 +124,57 @@ def test_fork_slot_aliases_without_copy_and_cow_diverges():
 @settings(max_examples=20, deadline=None)
 @given(st.lists(st.integers(0, 1 << 20), min_size=1, max_size=40))
 def test_refcount_conservation_property(ops):
-    """Any interleaving of alloc/ensure/fork/cow-write/free keeps the pool
-    conserved: physical pages_in_use + free_pages == num_pages − 1, every
-    live block-table entry names a page with refcount > 0, and no page
-    sits on the free list while still referenced."""
+    """Any interleaving of alloc/ensure/fork/cow-write/free with radix
+    insert/match/evict keeps the pool conserved: physical pages_in_use +
+    free_pages == num_pages − 1, every live block-table entry names a
+    page with refcount > 0, no page sits on the free list while still
+    referenced, and no radix-tree node references a freed page.  After
+    freeing every slot and resetting the tree, the pool is whole."""
     kv = PagedKVCache(TINY, max_slots=4, max_len=64, page_size=8,
                       num_pages=11)
+    radix = RadixCache(kv)
+
+    def _toks(x, n):
+        return [(x + 7 * i) % 250 + 3 for i in range(n)]
+
     live = []
     for x in ops:
-        op = x % 5
+        op = x % 8
         if op == 0:
             s = kv.alloc_slot()
             if s is not None:
                 live.append(s)
         elif op == 1 and live:
-            kv.free_slot(live.pop((x // 5) % len(live)))
+            kv.free_slot(live.pop((x // 8) % len(live)))
         elif op == 2 and live:
-            s = live[(x // 5) % len(live)]
-            kv.ensure(s, (x // 25) % 70)       # may exceed max_len: refused
+            s = live[(x // 8) % len(live)]
+            kv.ensure(s, (x // 64) % 70)       # may exceed max_len: refused
         elif op == 3 and live:
-            parent = live[(x // 5) % len(live)]
+            parent = live[(x // 8) % len(live)]
             covered = len(kv._pages_of[parent]) * kv.page
             if covered:
-                child = kv.fork_slot(parent, 1 + (x // 25) % covered)
+                child = kv.fork_slot(parent, 1 + (x // 64) % covered)
                 if child is not None:
                     live.append(child)
         elif op == 4 and live:
-            s = live[(x // 5) % len(live)]
+            s = live[(x // 8) % len(live)]
             covered = len(kv._pages_of[s]) * kv.page
             if covered:
-                kv.writable(s, (x // 25) % covered)
+                kv.writable(s, (x // 64) % covered)
+        elif op == 5 and live:
+            # cache a live slot's page-aligned prefix in the tree (the
+            # tree co-owns the pages alongside the slot)
+            s = live[(x // 8) % len(live)]
+            npages = len(kv._pages_of[s])
+            if npages:
+                k = 1 + (x // 64) % npages
+                radix.insert(_toks(x // 512, k * kv.page),
+                             kv._pages_of[s][:k])
+        elif op == 6:
+            # same token universe as the inserts, so matches really hit
+            radix.match(_toks(x // 512, kv.page * (1 + x // 8 % 3)))
+        elif op == 7:
+            radix.evict(1 + (x // 8) % 4)
         # --- invariants after every operation
         assert kv.pages_in_use + kv.free_pages == kv.num_pages - 1
         assert kv._ref[0] == 0                 # null page never owned
@@ -165,6 +187,19 @@ def test_refcount_conservation_property(ops):
                 assert kv.block_tables[s, i] == pid
                 assert pid not in free
             assert (kv.block_tables[s, len(owned):] == 0).all()
+        stack = list(radix.root.children.values())
+        while stack:
+            node = stack.pop()
+            for pid in node.pages:
+                assert kv._ref[pid] > 0, "tree references a dead page"
+                assert pid not in free
+            stack.extend(node.children.values())
+    # teardown drains every owner: slots, then the tree — pool is whole
+    for s in live:
+        kv.free_slot(s)
+    radix.reset()
+    assert kv.pages_in_use == 0
+    assert kv.free_pages == kv.num_pages - 1
 
 
 # ~6s: 3-sibling COW generation vs 3 independent runs; the fork
@@ -210,6 +245,121 @@ def test_admission_dedupes_identical_prompts_outside_groups():
     assert rollouts[0].completion_ids == rollouts[1].completion_ids
     assert m["forks"] == 1
     assert m["prefill_tokens"] == len(task.prompt_ids)
+
+
+def test_admission_dedupe_keys_on_sampling_params():
+    """Identical prompts with DIFFERENT sampling params must not alias
+    into one fork group — the dedupe key is (prompt, params, max_new),
+    not the prompt hash alone."""
+    store = _store()
+    task = MathTaskGenerator(seed=23).sample()
+    gen = GenConfig(max_new_tokens=10, greedy=True, eos_id=-1)
+    eng = PagedEngine(TINY, store, gen,
+                      ServeConfig(max_slots=4, max_len=64, page_size=8,
+                                  prefill_chunk=8))
+    eng.submit([task])                         # engine defaults (greedy)
+    eng.submit([task], temperature=0.7, greedy=False)
+    eng.submit([task], top_p=0.9, greedy=False)
+    eng.drain()
+    rollouts, m = eng.collect()
+    assert len(rollouts) == 3
+    assert m["forks"] == 0                     # three distinct param sets
+    assert m["prefill_tokens"] == 3 * len(task.prompt_ids)
+    # same params DO coalesce (baseline behavior preserved)
+    eng2 = PagedEngine(TINY, store, gen,
+                       ServeConfig(max_slots=4, max_len=64, page_size=8,
+                                   prefill_chunk=8))
+    eng2.submit([task], temperature=0.7, greedy=False)
+    eng2.submit([task], temperature=0.7, greedy=False)
+    eng2.drain()
+    _, m2 = eng2.collect()
+    assert m2["forks"] == 1
+    assert m2["prefill_tokens"] == len(task.prompt_ids)
+
+
+# -------------------------------------------------------------- radix cache
+def test_radix_tree_match_insert_split_evict():
+    kv = PagedKVCache(TINY, max_slots=4, max_len=64, page_size=8,
+                      num_pages=17)
+    rx = RadixCache(kv)
+    s = kv.alloc_slot()
+    kv.ensure(s, 32)                           # 4 pages
+    pages = list(kv._pages_of[s])
+    seq = list(range(3, 35))                   # 32 tokens, page-aligned
+    assert rx.insert(seq, pages) == 4
+    assert rx.cached_pages == 4 and rx.n_nodes == 1
+    # full and partial matches are page-aligned
+    got, n = rx.match(seq)
+    assert n == 32 and got == pages
+    got, n = rx.match(seq[:20])                # 2.5 pages → 2 pages
+    assert n == 16 and got == pages[:2]
+    _, n = rx.match([99] * 16)
+    assert n == 0
+    # diverging insert splits at the page boundary
+    s2 = kv.alloc_slot()
+    kv.ensure(s2, 16)
+    seq2 = seq[:16] + [200] * 16               # shares 2 pages, then forks
+    rx.insert(seq2, pages[:2] + list(kv._pages_of[s2]))
+    assert rx.n_nodes == 3                     # prefix + two branches
+    assert rx.cached_pages == 6
+    # eviction removes LRU leaves only; interior prefix survives
+    kv.free_slot(s)
+    kv.free_slot(s2)
+    freed = rx.evict(2)
+    assert freed >= 2 and rx.n_nodes == 2
+    rx.reset()
+    assert rx.cached_pages == 0
+    assert kv.pages_in_use == 0
+    assert kv.free_pages == kv.num_pages - 1
+
+
+def test_radix_resubmit_hits_tree_token_identically():
+    """An identical prompt resubmitted AFTER the first completed (no live
+    fork leader) is served from the radix tree: page-aligned prompt K/V
+    adopted, only the tail prefilled, same tokens as a cold engine."""
+    store = _store()
+    task = MathTaskGenerator(seed=29).sample()
+    gen = GenConfig(max_new_tokens=12, greedy=True, eos_id=-1)
+    sv = dict(max_slots=2, max_len=96, page_size=8, prefill_chunk=8)
+    cold = PagedEngine(TINY, store, gen, ServeConfig(**sv))
+    warm = PagedEngine(TINY, store, gen, ServeConfig(**sv, radix=True))
+    c1, _ = cold.generate([task])
+    w1, m1 = warm.generate([task])
+    assert m1["radix_hit_tokens"] == 0         # nothing cached yet
+    c2, _ = cold.generate([task])
+    w2, m2 = warm.generate([task])
+    assert c1[0].completion_ids == w1[0].completion_ids
+    assert c2[0].completion_ids == w2[0].completion_ids
+    plen = len(task.prompt_ids)
+    expect = ((plen - 1) // 8) * 8             # capped: last token prefills
+    assert m2["radix_hit_tokens"] == expect > 0
+    assert m2["prefill_tokens"] == plen - expect
+    # pool conserved with the tree live
+    assert warm.kv.pages_in_use + warm.kv.free_pages == warm.kv.num_pages - 1
+
+
+def test_radix_reset_on_weight_swap():
+    """Cached K/V is stale after a weight swap: the tree resets (swaps
+    happen at segment boundaries, so an in-between request absorbs the
+    swap), and the next identical prompt re-prefills in full under the
+    new weights instead of hitting poisoned cache."""
+    store = _store()
+    gen_ = MathTaskGenerator(seed=31)
+    task, other = gen_.sample(), gen_.sample()
+    gen = GenConfig(max_new_tokens=8, segment=1, greedy=True, eos_id=-1)
+    eng = PagedEngine(TINY, store, gen,
+                      ServeConfig(max_slots=2, max_len=96, page_size=8,
+                                  prefill_chunk=8, radix=True))
+    eng.generate([task])
+    assert eng.radix.n_nodes > 0
+    model = get_model(TINY)
+    store.publish(model.init(jax.random.PRNGKey(99), TINY))
+    _, m_other = eng.generate([other])         # swap lands here; tree drops
+    assert m_other["weight_swaps"] == 1
+    _, m = eng.generate([task])
+    assert m["radix_hit_tokens"] == 0          # task's entry did not survive
+    assert m["prefill_tokens"] == len(task.prompt_ids)
+    assert eng.radix.n_nodes > 0               # post-swap completions cached
 
 
 def test_share_prefix_disabled_prefills_every_request():
