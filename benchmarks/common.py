@@ -42,3 +42,29 @@ def homogeneous_plan(spec, cluster, cfg=FAST_CFG):
 
 def csv_row(name: str, us: float, derived: str) -> str:
     return f"{name},{us:.0f},{derived}"
+
+
+def _jsonable(v):
+    """Make a scalar JSON-safe: non-finite floats become None (strict
+    JSON has no Infinity/NaN), numpy scalars collapse to Python ones."""
+    if hasattr(v, "item"):
+        v = v.item()
+    if isinstance(v, float) and (v != v or v in (float("inf"),
+                                                 float("-inf"))):
+        return None
+    return v
+
+
+def bench_payload(name: str, rows, **fields) -> dict:
+    """Standard ``BENCH_JSON`` payload: every benchmark registered in
+    ``benchmarks.run`` fills its module-level ``BENCH_JSON`` with one of
+    these so the aggregator writes a ``BENCH_<name>.json`` per figure /
+    table.  ``rows`` is the figure's tabular data (list of dicts or
+    csv-row strings); extra keyword fields ride along verbatim."""
+    def clean(x):
+        if isinstance(x, dict):
+            return {k: clean(v) for k, v in x.items()}
+        if isinstance(x, (list, tuple)):
+            return [clean(v) for v in x]
+        return _jsonable(x)
+    return {"name": name, "rows": clean(list(rows)), **clean(fields)}

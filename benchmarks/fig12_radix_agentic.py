@@ -70,7 +70,7 @@ def _store(cfg: ModelConfig, seed: int = 0) -> WeightStore:
     return store
 
 
-def run(tiny: bool = False) -> list:
+def run(tiny: bool = False, trace_path: str = "") -> list:
     global BENCH_JSON
     rows = []
     cfg = _model(tiny)
@@ -172,6 +172,42 @@ def run(tiny: bool = False) -> list:
         "fig12/noop", us_b,
         f"bit_identical={noop_ok} single_turn_fit=None"))
 
+    # ---- traced agentic sim: the env-priced plan drives the async-RL
+    # simulator with a Tracer attached; the analyzer must see nonzero
+    # utilization on generation, env, AND train tracks, and the
+    # trace-derived throughput must agree with the conservation ledger
+    # (the ISSUE 8 acceptance check)
+    trace_fields = {}
+    from repro.obs import Tracer, analyze_trace, check_report
+    from repro.sim import AsyncRLSimulator, SimConfig
+    tracer = Tracer(meta={"benchmark": "fig12_radix_agentic"})
+    sim, us_t = timed(AsyncRLSimulator(
+        p_env, P, SimConfig(n_steps=6 if tiny else 12,
+                            rollouts_per_step=32, eta=4,
+                            reward_cost_s=0.1, env=env,
+                            trace=tracer)).run)
+    report = analyze_trace(tracer.to_chrome())
+    fails = check_report(report, min_stages=3, max_tput_err=0.01)
+    assert not fails, fails
+    for stage in ("generation", "env", "train"):
+        assert report["stages"][stage]["utilization"] > 0.0, stage
+    if trace_path:
+        tracer.dump(trace_path)
+    trace_fields = {
+        "trace_events": tracer.n_events,
+        "trace_tput_rel_err": report["throughput"]["rel_err"],
+        "trace_stage_util": {
+            s: report["stages"][s]["utilization"]
+            for s in ("generation", "env", "train")},
+    }
+    rows.append(csv_row(
+        "fig12/trace", us_t,
+        f"events={tracer.n_events} "
+        f"gen_util={report['stages']['generation']['utilization']:.2f} "
+        f"env_util={report['stages']['env']['utilization']:.2f} "
+        f"train_util={report['stages']['train']['utilization']:.2f} "
+        f"tput_rel_err={report['throughput']['rel_err']:.4f}"))
+
     BENCH_JSON = {
         "name": "radix_cache",
         "tiny": tiny,
@@ -192,6 +228,7 @@ def run(tiny: bool = False) -> list:
         "cost_env": float(p_env.cost_env),
         "sched_moved": bool(moved),
         "noop_bit_identical": bool(noop_ok),
+        **trace_fields,
     }
     return rows
 
@@ -204,8 +241,11 @@ def main() -> None:
                     help="CI mode: 2-layer model, short targets")
     ap.add_argument("--json-out", default="",
                     help="also write the BENCH_radix_cache.json artifact")
+    ap.add_argument("--trace", default="",
+                    help="write the traced sim leg's Chrome-trace JSON "
+                         "here (view: https://ui.perfetto.dev)")
     args = ap.parse_args()
-    print("\n".join(run(tiny=args.tiny)))
+    print("\n".join(run(tiny=args.tiny, trace_path=args.trace)))
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(BENCH_JSON, f, indent=2, sort_keys=True)

@@ -8,6 +8,10 @@ from __future__ import annotations
 
 from repro.core.model_spec import PAPER_MODELS
 from .common import FAST_CFG, P, SETTINGS, csv_row, homogeneous_plan, timed
+from .common import bench_payload
+
+# filled by run(); benchmarks.run writes it to BENCH_<name>.json
+BENCH_JSON: dict = {}
 
 
 def run() -> list[str]:
@@ -30,6 +34,8 @@ def run() -> list[str]:
             f"hex vs worst-homo {worst_homo/e2e['hex24+24']:.2f}x "
             f"(paper ≤2.67x), vs best-homo "
             f"{best_homo/e2e['hex24+24']:.2f}x (paper ≥1.49x)"))
+    global BENCH_JSON
+    BENCH_JSON = bench_payload('stage_latency', rows)
     return rows
 
 

@@ -8,6 +8,10 @@ from __future__ import annotations
 from repro.core.model_spec import PAPER_MODELS
 from repro.sim import AsyncRLSimulator, SimConfig
 from .common import FAST_CFG, P, SETTINGS, csv_row, homogeneous_plan, timed
+from .common import bench_payload
+
+# filled by run(); benchmarks.run writes it to BENCH_<name>.json
+BENCH_JSON: dict = {}
 
 
 def throughput(spec, cluster):
@@ -35,6 +39,8 @@ def run() -> list[str]:
             f"(paper 1.31-1.50x); hex vs H20 "
             f"{tps['hex24+24']/max(tps['H20x88'],1e-9):.2f}x "
             f"(paper 2.29-2.76x)"))
+    global BENCH_JSON
+    BENCH_JSON = bench_payload('end_to_end', rows)
     return rows
 
 

@@ -8,6 +8,10 @@ from repro.core.cluster import (paper_heterogeneous, paper_homogeneous_h20,
                                 paper_homogeneous_h800)
 from repro.core.model_spec import PAPER_MODELS
 from .common import FAST_CFG, P, csv_row, homogeneous_plan, timed
+from .common import bench_payload
+
+# filled by run(); benchmarks.run writes it to BENCH_<name>.json
+BENCH_JSON: dict = {}
 
 
 def run() -> list[str]:
@@ -27,6 +31,8 @@ def run() -> list[str]:
             f"({inf(p_800)/inf(p_hex):.2f}x, paper 1.35-1.61x) | "
             f"TRAIN hex={tr(p_hex):.1f}s H20={tr(p_20):.1f}s "
             f"({tr(p_20)/max(tr(p_hex),1e-9):.2f}x, paper 1.85-3.13x)"))
+    global BENCH_JSON
+    BENCH_JSON = bench_payload('breakdown', rows)
     return rows
 
 

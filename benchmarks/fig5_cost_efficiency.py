@@ -7,6 +7,10 @@ from __future__ import annotations
 from repro.core.cluster import paper_heterogeneous
 from repro.core.model_spec import PAPER_MODELS
 from .common import FAST_CFG, P, csv_row, homogeneous_plan, timed
+from .common import bench_payload
+
+# filled by run(); benchmarks.run writes it to BENCH_<name>.json
+BENCH_JSON: dict = {}
 
 SIZES = [(12, 12), (16, 16), (20, 20), (24, 32)]    # 24..56 GPUs
 
@@ -29,6 +33,8 @@ def run() -> list[str]:
             f"fig5/{name}/stability", 0,
             f"per-dollar spread {spread*100:.0f}% across 24-56 GPUs "
             f"(paper: stable)"))
+    global BENCH_JSON
+    BENCH_JSON = bench_payload('cost_efficiency', rows)
     return rows
 
 

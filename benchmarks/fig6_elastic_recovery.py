@@ -12,8 +12,14 @@ the simulated async-RL run and compares:
 
 Scenarios: losing the fast rollout node, losing half the slow rollout
 pool, and a sustained-straggler brownout.
+
+``--trace PATH`` attaches a ``repro.obs.Tracer`` to the first scenario's
+elastic run and writes the Chrome-trace JSON there (CI uploads it as an
+artifact and gates ``python -m repro.obs analyze`` on it).
 """
 from __future__ import annotations
+
+import argparse
 
 from repro.core.cluster import paper_heterogeneous
 from repro.core.model_spec import PAPER_MODELS
@@ -21,6 +27,10 @@ from repro.core.scheduler import SchedulerConfig, schedule
 from repro.sim import (AsyncRLSimulator, ElasticConfig, ElasticReplanner,
                        FailureInjection, SimConfig, StragglerInjection)
 from .common import P, csv_row, timed
+from .common import bench_payload
+
+# filled by run(); benchmarks.run writes it to BENCH_<name>.json
+BENCH_JSON: dict = {}
 
 SPEC = PAPER_MODELS["1.5B"]
 SCHED_CFG = SchedulerConfig(tokens_per_step=2 ** 18, stable_iters=3,
@@ -50,18 +60,28 @@ def _scenarios(plan):
                     for i in slow[: max(1, len(slow) // 2)]])
 
 
-def run() -> list[str]:
+def run(tiny: bool = False, trace_path: str = "") -> list[str]:
     rows = []
+    sim_kw = dict(SIM)
+    if tiny:
+        sim_kw.update(n_steps=10, rollouts_per_step=32)
     plan = schedule(SPEC, CLUSTER, P, SCHED_CFG)
-    for name, churn in _scenarios(plan):
+    tracer = None
+    if trace_path:
+        from repro.obs import Tracer
+        tracer = Tracer(meta={"benchmark": "fig6_elastic_recovery"})
+    for idx, (name, churn) in enumerate(_scenarios(plan)):
         static, us_s = timed(
-            AsyncRLSimulator(plan, P, SimConfig(**SIM, **churn)).run)
+            AsyncRLSimulator(plan, P, SimConfig(**sim_kw, **churn)).run)
         replanner = ElasticReplanner(
             SPEC, CLUSTER, P, SCHED_CFG,
             ElasticConfig(replan_latency_s=5.0, straggler_threshold=0.5))
+        # the trace rides scenario 0's elastic run only: one timebase,
+        # one ledger, one self-consistent trace file
         el, us_e = timed(
             AsyncRLSimulator(plan, P, SimConfig(
-                **SIM, **churn, replanner=replanner)).run)
+                **sim_kw, **churn, replanner=replanner,
+                trace=tracer if idx == 0 else None)).run)
         ratio = el.throughput_tps / max(static.throughput_tps, 1e-9)
         rows.append(csv_row(
             f"fig6/{name}/static", us_s,
@@ -73,8 +93,26 @@ def run() -> list[str]:
             f"swaps={len(el.swaps)} "
             f"max_staleness={el.max_staleness} "
             f"elastic/static={ratio:.2f}x"))
+    if tracer is not None:
+        tracer.dump(trace_path)
+        rows.append(csv_row(
+            "fig6/trace", 0,
+            f"{tracer.n_events} events -> {trace_path}"))
+    global BENCH_JSON
+    BENCH_JSON = bench_payload('elastic_recovery', rows, tiny=tiny)
     return rows
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced step count (CI-sized)")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome-trace JSON of scenario 0's "
+                         "elastic run here")
+    args = ap.parse_args()
+    print("\n".join(run(tiny=args.tiny, trace_path=args.trace)))
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    main()

@@ -34,6 +34,10 @@ from repro.core.scheduler import SchedulerConfig, schedule_slice
 from repro.sim import (ElasticConfig, JobFailure, MultiJobSimulator,
                        MultiSimConfig, PoolReplanner, replica_device_map)
 from .common import csv_row, timed
+from .common import bench_payload
+
+# filled by run(); benchmarks.run writes it to BENCH_<name>.json
+BENCH_JSON: dict = {}
 
 # short-trace profile so the arbitration sweep stays fast
 P_JOBS = LengthDistribution(mean_len=1024, prompt_len=128)
@@ -156,6 +160,8 @@ def run(tiny: bool = False) -> list[str]:
             f"wgeo={_weighted_geomean(jobs3, t3):.0f} "
             f"transfers={pool3.transfers} " + " ".join(
                 f"{j.name}={t3[j.name]:.0f}t/s" for j in jobs3)))
+    global BENCH_JSON
+    BENCH_JSON = bench_payload('multi_job', rows)
     return rows
 
 

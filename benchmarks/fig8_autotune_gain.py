@@ -29,6 +29,10 @@ from repro.core.model_spec import PAPER_MODELS
 from repro.core.scheduler import SchedulerConfig, schedule
 from repro.kernels import tuning
 from .common import csv_row, timed
+from .common import bench_payload
+
+# filled by run(); benchmarks.run writes it to BENCH_<name>.json
+BENCH_JSON: dict = {}
 
 P_TPU = LengthDistribution(mean_len=4096, prompt_len=512)
 # The derived factors must move ≥ this (relative) for ≥1 device type.
@@ -109,6 +113,8 @@ def run(tiny: bool = False, costdb_path: str = "") -> list[str]:
             f"obj={pm.objective:.2f}s gamma={pm.gamma:.3f} "
             f"DT={len(pm.train_devices)} DI={len(pm.infer_devices)} "
             f"decision_moved={moved}"))
+    global BENCH_JSON
+    BENCH_JSON = bench_payload('autotune_gain', rows)
     return rows
 
 

@@ -34,6 +34,10 @@ from repro.rl.weight_sync import WeightStore
 from repro.serve import (EngineReport, PagedEngine, ServeConfig,
                          ServingCostModel, fit_gen_time)
 from .common import csv_row, timed
+from .common import bench_payload
+
+# filled by run(); benchmarks.run writes it to BENCH_<name>.json
+BENCH_JSON: dict = {}
 
 MIN_HIGH_CV_GAIN = 1.3
 
@@ -135,6 +139,8 @@ def run(tiny: bool = False) -> list:
         f"analytic_obj={pa1.objective:.2f}s serving_obj={pm.objective:.2f}s "
         f"decision_moved={pa1.signature() != pm.signature()} "
         f"gen_time_fit={'ok' if gtm is not None else 'insufficient'}"))
+    global BENCH_JSON
+    BENCH_JSON = bench_payload('continuous_batching', rows)
     return rows
 
 

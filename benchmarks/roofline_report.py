@@ -6,6 +6,10 @@ import json
 from pathlib import Path
 
 from .common import csv_row
+from .common import bench_payload
+
+# filled by run(); benchmarks.run writes it to BENCH_<name>.json
+BENCH_JSON: dict = {}
 
 RESULTS = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
 
@@ -40,6 +44,8 @@ def run() -> list[str]:
     rows.append(csv_row("roofline/summary", 0,
                         f"{len(ok)} cells ok, {len(skipped)} skipped "
                         f"(long_500k on full-attention archs)"))
+    global BENCH_JSON
+    BENCH_JSON = bench_payload('roofline_report', rows)
     return rows
 
 

@@ -9,6 +9,10 @@ from repro.core.cluster import H20, H800
 from repro.core.cost_model import per_token_costs
 from repro.core.model_spec import PAPER_MODELS
 from .common import P, csv_row, timed
+from .common import bench_payload
+
+# filled by run(); benchmarks.run writes it to BENCH_<name>.json
+BENCH_JSON: dict = {}
 
 
 def run() -> list[str]:
@@ -29,6 +33,8 @@ def run() -> list[str]:
         f"mean H20 inference advantage {sum(inf_ratios)/3:.2f}x "
         f"(paper 2.72x); mean H800 training advantage "
         f"{sum(tr_ratios)/3:.2f}x (paper 3.12x)"))
+    global BENCH_JSON
+    BENCH_JSON = bench_payload('per_token_cost', rows)
     return rows
 
 

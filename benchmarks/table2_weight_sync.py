@@ -11,6 +11,10 @@ from repro.core.cluster import (paper_heterogeneous, paper_homogeneous_h20,
 from repro.core.cost_model import weight_sync_cost
 from repro.core.model_spec import PAPER_MODELS
 from .common import csv_row, timed
+from .common import bench_payload
+
+# filled by run(); benchmarks.run writes it to BENCH_<name>.json
+BENCH_JSON: dict = {}
 
 
 def _sync(spec, cluster, frac_train=0.5, quant=2):
@@ -39,6 +43,8 @@ def run() -> list[str]:
             f"H800={t800:.1f}s(paper {p[0]}) H20={t20:.1f}s(paper {p[1]}) "
             f"hex={thex:.1f}s(paper {p[2]}) hex-int8={thex_int8:.1f}s "
             f"({thex/max(thex_int8,1e-9):.1f}x faster, beyond-paper)"))
+    global BENCH_JSON
+    BENCH_JSON = bench_payload('weight_sync', rows)
     return rows
 
 

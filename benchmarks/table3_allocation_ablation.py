@@ -7,6 +7,10 @@ from repro.core.cluster import paper_heterogeneous
 from repro.core.model_spec import PAPER_MODELS
 from repro.core.scheduler import schedule, schedule_uniform
 from .common import FAST_CFG, P, csv_row, timed
+from .common import bench_payload
+
+# filled by run(); benchmarks.run writes it to BENCH_<name>.json
+BENCH_JSON: dict = {}
 
 
 def run() -> list[str]:
@@ -21,6 +25,8 @@ def run() -> list[str]:
             f"table3/{name}", us,
             f"optimized={t_opt:.0f}t/s uniform={t_uni:.0f}t/s "
             f"speedup={t_opt/max(t_uni,1e-9):.2f}x (paper 1.57-1.68x)"))
+    global BENCH_JSON
+    BENCH_JSON = bench_payload('allocation_ablation', rows)
     return rows
 
 

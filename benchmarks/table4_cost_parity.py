@@ -7,6 +7,10 @@ from __future__ import annotations
 from repro.core.cluster import paper_heterogeneous, paper_homogeneous_h800
 from repro.core.model_spec import PAPER_MODELS
 from .common import FAST_CFG, P, csv_row, homogeneous_plan, timed
+from .common import bench_payload
+
+# filled by run(); benchmarks.run writes it to BENCH_<name>.json
+BENCH_JSON: dict = {}
 
 
 def run() -> list[str]:
@@ -28,6 +32,8 @@ def run() -> list[str]:
             f"hex ${cost_hex:.0f}/h @{t_hex:.0f}t/s vs H800 "
             f"${cost_800:.0f}/h @{t_800:.0f}t/s → per-token cost ratio "
             f"{cpt_800/max(cpt_hex,1e-12):.2f}x cheaper (paper 1.31-1.50x)"))
+    global BENCH_JSON
+    BENCH_JSON = bench_payload('cost_parity', rows)
     return rows
 
 

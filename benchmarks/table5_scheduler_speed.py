@@ -13,6 +13,10 @@ from repro.core.scheduler import (SchedulerConfig, schedule,
                                   schedule_without_repartition,
                                   schedule_without_search)
 from .common import P, csv_row
+from .common import bench_payload
+
+# filled by run(); benchmarks.run writes it to BENCH_<name>.json
+BENCH_JSON: dict = {}
 
 SPEC = PAPER_MODELS["1.5B"]
 CFG = SchedulerConfig(tokens_per_step=2 ** 20, stable_iters=3,
@@ -50,6 +54,8 @@ def run(tiny: bool = False) -> list[str]:
             f"ours={t_ours:.2f}s w/o-search={t_ws:.2f}s "
             f"({t_ws/max(t_ours,1e-9):.1f}x) w/o-repartition={t_wr:.2f}s "
             f"({t_wr/max(t_ours,1e-9):.1f}x) — paper 20-44x"))
+    global BENCH_JSON
+    BENCH_JSON = bench_payload('scheduler_speed', rows)
     return rows
 
 

@@ -210,12 +210,25 @@ class ControlPlane:
 
     def __init__(self, cluster: Cluster,
                  pool_cfg: Optional[PoolConfig] = None,
-                 cfg: Optional[AdmissionConfig] = None):
+                 cfg: Optional[AdmissionConfig] = None,
+                 tracer=None, metrics=None):
         self.cluster = cluster
         self.pool_cfg = pool_cfg or PoolConfig()
         self.cfg = cfg or AdmissionConfig()
         self.records: Dict[str, JobRecord] = {}
         self.decisions: List[AdmissionDecision] = []
+        # observability (repro.obs Tracer / MetricsRegistry, both
+        # optional): lifecycle instants on the "jobs" group, decision
+        # counters, and the admission-latency histogram.  None = no-op.
+        self.tracer = tracer
+        self.metrics = metrics
+
+    def _observe(self, dec: AdmissionDecision, t: float) -> None:
+        if self.tracer is not None:
+            self.tracer.instant("jobs", dec.job, f"admission:{dec.action}",
+                                t, reason=dec.reason)
+        if self.metrics is not None:
+            self.metrics.counter(f"jobs/decisions/{dec.action}").inc()
 
     # ------------------------------------------------------------- intake
     def register_initial(self, jobs: Sequence[JobSpec],
@@ -240,6 +253,8 @@ class ControlPlane:
             raise ValueError(f"job {spec.name!r} already submitted")
         rec = JobRecord(spec, t_submit=t, n_steps=n_steps)
         self.records[spec.name] = rec
+        if self.tracer is not None:
+            self.tracer.instant("jobs", spec.name, "submit", t)
         solo_tput = 0.0
         if self.cfg.price_on_submit:
             rec.t_last_price = t
@@ -251,6 +266,7 @@ class ControlPlane:
         dec = AdmissionDecision(spec.name, "queue", "priced feasible",
                                 solo_tput)
         self.decisions.append(dec)
+        self._observe(dec, t)
         return dec
 
     def _price(self, spec: JobSpec,
@@ -277,6 +293,7 @@ class ControlPlane:
         rec.to(JobState.REJECTED, t, reason)
         dec = AdmissionDecision(rec.name, "reject", reason, solo_tput)
         self.decisions.append(dec)
+        self._observe(dec, t)
         return dec
 
     # ------------------------------------------------------------ lifecycle
@@ -298,6 +315,12 @@ class ControlPlane:
                 rec.to(JobState.ADMITTED, t, "placed")
                 rec.to(JobState.RUNNING, t, "pool commit")
                 started.append(rec.name)
+                if self.tracer is not None:
+                    self.tracer.instant("jobs", rec.name, "running", t)
+                lat = rec.admission_latency_s
+                if self.metrics is not None and lat is not None:
+                    self.metrics.histogram(
+                        "jobs/admission_latency_s").observe(lat)
         return started
 
     def tick(self, t: float,
@@ -325,19 +348,27 @@ class ControlPlane:
                     self._reject(rec, t, f"retry: {why}", solo_tput)
                     continue
             due.append(rec.name)
-            self.decisions.append(AdmissionDecision(
-                rec.name, "retry", f"re-priced after {rec.retries} tick(s)"))
+            dec = AdmissionDecision(
+                rec.name, "retry", f"re-priced after {rec.retries} tick(s)")
+            self.decisions.append(dec)
+            self._observe(dec, t)
         return due
 
     def drain(self, name: str, t: float, reason: str = "finished") -> None:
         self.records[name].to(JobState.DRAINING, t, reason)
+        if self.tracer is not None:
+            self.tracer.instant("jobs", name, "drain", t, reason=reason)
 
     def complete(self, name: str, t: float,
                  reason: str = "slice reclaimed") -> None:
         self.records[name].to(JobState.COMPLETED, t, reason)
+        if self.tracer is not None:
+            self.tracer.instant("jobs", name, "complete", t, reason=reason)
 
     def preempt(self, name: str, t: float, reason: str = "") -> None:
         self.records[name].to(JobState.PREEMPTED, t, reason)
+        if self.tracer is not None:
+            self.tracer.instant("jobs", name, "preempt", t, reason=reason)
 
     # ---------------------------------------------------------------- stats
     def admission_latencies(self) -> Dict[str, float]:

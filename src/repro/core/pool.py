@@ -571,7 +571,8 @@ def _place_jobs(jobs: Sequence[JobSpec],
 def schedule_pool(jobs: Sequence[JobSpec], cluster: Cluster,
                   cfg: Optional[PoolConfig] = None, *,
                   cost_provider: Optional[CostProvider] = None,
-                  allow_partial: bool = False) -> PoolPlan:
+                  allow_partial: bool = False,
+                  trace=None) -> PoolPlan:
     """Offline pool arbitration: Eq. (1') over a fresh cluster.
 
     ``cost_provider`` (when given) overrides the efficiency-factor source in
@@ -609,8 +610,14 @@ def schedule_pool(jobs: Sequence[JobSpec], cluster: Cluster,
         jobs, domains, sched, cfg)
     if not placed or (infeasible and not allow_partial):
         raise PoolInfeasibleError(infeasible)
-    return _finish(placed, domains, alloc, plans, transfers, t0,
+    plan = _finish(placed, domains, alloc, plans, transfers, t0,
                    infeasible=infeasible)
+    if trace is not None:       # wall-clock span over the arbitration
+        now = trace.now()
+        trace.span("scheduler", "pool", "schedule_pool",
+                   now - plan.wall_time_s, plan.wall_time_s,
+                   jobs=len(placed), transfers=plan.transfers)
+    return plan
 
 
 def _greedy_backfill(jobs: Sequence[JobSpec],
@@ -648,7 +655,8 @@ def replan_pool(prev: PoolPlan, cluster: Cluster,
                 frozen: Sequence[str] = (),
                 departed: Sequence[str] = (),
                 arrivals: Sequence[JobSpec] = (),
-                allow_partial: bool = False) -> PoolPlan:
+                allow_partial: bool = False,
+                trace=None) -> PoolPlan:
     """Elastic pool re-arbitration over the *surviving* ``cluster``.
 
     Ownership is warm-started from ``prev`` (dead devices dropped); each
@@ -768,4 +776,10 @@ def replan_pool(prev: PoolPlan, cluster: Cluster,
                     pool_epoch=prev.pool_epoch + 1,
                     provenance=f"replan:{reason}",
                     infeasible=infeasible)
+    if trace is not None:       # wall-clock span over the re-arbitration
+        now = trace.now()
+        trace.span("scheduler", "pool", "replan_pool",
+                   now - pool.wall_time_s, pool.wall_time_s,
+                   jobs=len(placed), transfers=pool.transfers,
+                   reason=reason)
     return pool

@@ -30,6 +30,8 @@ import traceback
 from functools import partial
 from pathlib import Path
 
+from repro.obs import log
+
 RESULTS_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 
 
@@ -226,9 +228,9 @@ def run_cell(arch: str, shape_name: str, mesh_name: str,
             mem_per_dev = (mem["argument_bytes"] + mem["temp_bytes"]
                            + mem["output_bytes"]
                            - (mem["alias_bytes"] or 0))
-        print("memory_analysis:", mem)
+        log.info(f"memory_analysis: {mem}", memory_analysis=mem)
     except Exception as e:                                 # pragma: no cover
-        print("memory_analysis unavailable:", e)
+        log.info(f"memory_analysis unavailable: {e}", error=str(e))
 
     def _cost_of(comp):
         try:
@@ -237,7 +239,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str,
                 ca = ca[0]
             return dict(ca) if ca else {}
         except Exception as e:                             # pragma: no cover
-            print("cost_analysis unavailable:", e)
+            log.info(f"cost_analysis unavailable: {e}", error=str(e))
             return {}
 
     def _hlo_of(comp, low):
@@ -271,9 +273,12 @@ def run_cell(arch: str, shape_name: str, mesh_name: str,
                            for k in set(st_hi.wire_bytes)
                            | set(st_lo.wire_bytes)},
         }
-    print("cost_analysis: flops=%.3e bytes=%.3e%s" %
-          (cost.get("flops", 0.0), cost.get("bytes accessed", 0.0),
-           " (extrapolated)" if extrapolate else ""))
+    log.info("cost_analysis: flops=%.3e bytes=%.3e%s" %
+             (cost.get("flops", 0.0), cost.get("bytes accessed", 0.0),
+              " (extrapolated)" if extrapolate else ""),
+             flops=cost.get("flops", 0.0),
+             bytes_accessed=cost.get("bytes accessed", 0.0),
+             extrapolated=extrapolate is not None)
 
     calib = rf.calibrate_cost_analysis()
     roof = rf.build_roofline(
@@ -304,12 +309,14 @@ def run_cell(arch: str, shape_name: str, mesh_name: str,
                                    for k, v in (overrides or {}).items()}
         _cell_path(arch, shape_name, mesh_name, tag).write_text(
             json.dumps(result, indent=2))
-    print(json.dumps({k: result[k] for k in
-                      ("arch", "shape", "mesh", "status", "lower_s",
-                       "compile_s")}))
-    print("roofline: compute=%.4fs memory=%.4fs collective=%.4fs -> %s" %
-          (roof.t_compute, roof.t_memory, roof.t_collective,
-           roof.bottleneck))
+    summary = {k: result[k] for k in
+               ("arch", "shape", "mesh", "status", "lower_s", "compile_s")}
+    log.info(json.dumps(summary), **summary)
+    log.info("roofline: compute=%.4fs memory=%.4fs collective=%.4fs -> %s" %
+             (roof.t_compute, roof.t_memory, roof.t_collective,
+              roof.bottleneck),
+             t_compute=roof.t_compute, t_memory=roof.t_memory,
+             t_collective=roof.t_collective, bottleneck=roof.bottleneck)
     return result
 
 
@@ -333,7 +340,8 @@ def run_all(meshes, archs=None, shapes=None, force=False,
                 cmd = [sys.executable, "-m", "repro.launch.dryrun",
                        "--arch", arch, "--shape", shape,
                        "--mesh", mesh_name]
-                print(f"\n=== {arch} × {shape} × {mesh_name} ===", flush=True)
+                log.info(f"\n=== {arch} × {shape} × {mesh_name} ===",
+                         arch=arch, shape=shape, mesh=mesh_name)
                 try:
                     r = subprocess.run(cmd, timeout=timeout)
                     if r.returncode != 0:
@@ -342,11 +350,11 @@ def run_all(meshes, archs=None, shapes=None, force=False,
                 except subprocess.TimeoutExpired:
                     failures.append((arch, shape, mesh_name, "timeout"))
     if failures:
-        print("\nFAILURES:")
+        log.info("\nFAILURES:", failures=failures)
         for f in failures:
-            print("  ", f)
+            log.info(f"   {f}")
         sys.exit(1)
-    print("\nall requested dry-run cells green")
+    log.info("\nall requested dry-run cells green")
 
 
 def main() -> None:
@@ -361,7 +369,9 @@ def main() -> None:
                     help="cfg override key=value (hillclimb knobs)")
     ap.add_argument("--tag", default="", help="suffix for the result JSON")
     ap.add_argument("--timeout", type=int, default=3600)
+    log.add_flags(ap)
     args = ap.parse_args()
+    log.configure(args)
 
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
     if args.all:

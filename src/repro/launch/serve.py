@@ -35,9 +35,12 @@ import time
 import jax
 import numpy as np
 
+from repro.obs import log
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    log.add_flags(ap)
     ap.add_argument("--arch", default="qwen-distill-1.5b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--engine", choices=("static", "paged"), default="static")
@@ -57,6 +60,7 @@ def main() -> None:
     ap.add_argument("--greedy", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    log.configure(args)
 
     from repro.configs import get_config, get_smoke_config
     from repro.data.tasks import MathTaskGenerator, Tokenizer
@@ -103,37 +107,49 @@ def main() -> None:
             [len(r.completion_ids) for r in rollouts]))
         metrics["slot_occupancy"] = engine.stats.slot_occupancy
         metrics["page_occupancy"] = engine.stats.page_occupancy
-        print(f"multi-turn: turns={metrics['turns']} "
-              f"env_calls={metrics['env_calls']} "
-              f"env_wait_s={metrics['env_wait_s']:.3f}  "
-              f"radix_hit_rate={metrics['radix_hit_rate']:.2f}")
+        log.info(f"multi-turn: turns={metrics['turns']} "
+                 f"env_calls={metrics['env_calls']} "
+                 f"env_wait_s={metrics['env_wait_s']:.3f}  "
+                 f"radix_hit_rate={metrics['radix_hit_rate']:.2f}",
+                 turns=metrics["turns"], env_calls=metrics["env_calls"],
+                 env_wait_s=metrics["env_wait_s"],
+                 radix_hit_rate=metrics["radix_hit_rate"])
     else:
         rollouts, metrics = engine.generate(tasks)
     dt = time.time() - t0
     n_tok = sum(len(r.completion_ids) for r in rollouts)
-    print(f"[{args.engine}] generated {n_tok} tokens for {args.batch} "
-          f"requests in {dt:.2f}s  ({n_tok/dt:.1f} tok/s)  "
-          f"mean_len={metrics['mean_len']:.1f}  "
-          f"decode_slot_steps={metrics.get('decode_slot_steps', '?')}")
+    log.info(f"[{args.engine}] generated {n_tok} tokens for {args.batch} "
+             f"requests in {dt:.2f}s  ({n_tok/dt:.1f} tok/s)  "
+             f"mean_len={metrics['mean_len']:.1f}  "
+             f"decode_slot_steps={metrics.get('decode_slot_steps', '?')}",
+             engine=args.engine, tokens=n_tok, batch=args.batch,
+             seconds=dt, tok_per_s=n_tok / dt,
+             mean_len=metrics["mean_len"],
+             decode_slot_steps=metrics.get("decode_slot_steps"))
     if args.engine == "paged":
-        print(f"slot_occupancy={metrics['slot_occupancy']:.2f}  "
-              f"page_occupancy={metrics['page_occupancy']:.2f}  "
-              f"preemptions={metrics['preemptions']}")
+        log.info(f"slot_occupancy={metrics['slot_occupancy']:.2f}  "
+                 f"page_occupancy={metrics['page_occupancy']:.2f}  "
+                 f"preemptions={metrics['preemptions']}",
+                 slot_occupancy=metrics["slot_occupancy"],
+                 page_occupancy=metrics["page_occupancy"],
+                 preemptions=metrics["preemptions"])
         from repro.kernels import tuning
         # ServingCostModel keys reports by DeviceProfile name; fall back to
         # the raw device kind (unpriceable, but still human-readable) when
         # the local accelerator maps to no profile (e.g. CPU smoke runs)
         dev = (tuning.current_device_type()
                or jax.devices()[0].device_kind)
-        print("engine report:",
-              EngineReport.from_stats(
-                  engine.stats, dev, engine="paged",
-                  tokens_per_sec=n_tok / dt,
-                  turns_per_episode=float(metrics.get("turns", 1)),
-                  turn_gap_s=float(metrics.get("turn_gap_s", 0.0))))
+        report = EngineReport.from_stats(
+            engine.stats, dev, engine="paged",
+            tokens_per_sec=n_tok / dt,
+            turns_per_episode=float(metrics.get("turns", 1)),
+            turn_gap_s=float(metrics.get("turn_gap_s", 0.0)))
+        log.info(f"engine report: {report}", report=report)
     r = rollouts[0]
-    print("sample prompt:    ", repr(tok.decode(r.prompt_ids)))
-    print("sample completion:", repr(tok.decode(r.completion_ids)))
+    log.info(f"sample prompt:     {tok.decode(r.prompt_ids)!r}",
+             prompt=tok.decode(r.prompt_ids))
+    log.info(f"sample completion: {tok.decode(r.completion_ids)!r}",
+             completion=tok.decode(r.completion_ids))
 
 
 if __name__ == "__main__":

@@ -20,9 +20,12 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro.obs import log
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    log.add_flags(ap)
     ap.add_argument("--arch", default="qwen-distill-1.5b")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced same-family config (CPU-sized)")
@@ -37,7 +40,11 @@ def main() -> None:
     ap.add_argument("--schedule", action="store_true",
                     help="print the AReaL-Hex schedule for the paper's "
                          "heterogeneous cluster before training")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome-trace JSON of the run here "
+                         "(view: https://ui.perfetto.dev)")
     args = ap.parse_args()
+    log.configure(args)
 
     from repro.configs import get_config, get_smoke_config
     from repro.core.staleness import StalenessConfig
@@ -54,16 +61,20 @@ def main() -> None:
         from repro.core.scheduler import schedule
         from repro.core.cluster import paper_heterogeneous
         plan = schedule(get_config(args.arch).spec, paper_heterogeneous(8, 8))
-        print("AReaL-Hex schedule (24+24 paper cluster):")
-        print(plan.describe())
+        log.info("AReaL-Hex schedule (24+24 paper cluster):")
+        log.info(plan.describe(), schedule=plan.describe())
 
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer(meta={"launcher": "train", "arch": args.arch})
     tc = TrainerConfig(
         group_size=args.group_size, prompts_per_step=args.prompts_per_step,
         total_steps=args.steps, seed=args.seed,
         staleness=StalenessConfig(
             eta=args.eta,
             rollouts_per_step=args.group_size * args.prompts_per_step),
-        opt=AdamWConfig(lr=args.lr))
+        opt=AdamWConfig(lr=args.lr), trace=tracer)
     trainer = AsyncGRPOTrainer(cfg, tc)
 
     mgr = None
@@ -78,7 +89,7 @@ def main() -> None:
             trainer.opt_state = state["opt_state"]
             trainer.store.publish(trainer.params)
             trainer.buffer.ctl.version = trainer.store.version
-            print(f"resumed from step {step0}")
+            log.info(f"resumed from step {step0}", resumed_step=step0)
 
     t0 = time.time()
     done = 0
@@ -98,11 +109,20 @@ def main() -> None:
             })
         if done % 5 == 0 or done == args.steps:
             st = trainer.buffer.stats()
-            print(f"[{done:4d}/{args.steps}] loss={m['loss']:.4f} "
-                  f"reward={trainer.rewarder.stats.mean:.3f} "
-                  f"staleness={st['mean_staleness']:.2f} "
-                  f"elapsed={time.time()-t0:.0f}s", flush=True)
-    print("training complete")
+            log.info(f"[{done:4d}/{args.steps}] loss={m['loss']:.4f} "
+                     f"reward={trainer.rewarder.stats.mean:.3f} "
+                     f"staleness={st['mean_staleness']:.2f} "
+                     f"elapsed={time.time()-t0:.0f}s",
+                     step=done, steps=args.steps, loss=m["loss"],
+                     reward=trainer.rewarder.stats.mean,
+                     mean_staleness=st["mean_staleness"],
+                     elapsed_s=time.time() - t0)
+    if tracer is not None:
+        tracer.dump(args.trace)
+        log.info(f"trace written to {args.trace} "
+                 f"({tracer.n_events} events)", trace=args.trace,
+                 events=tracer.n_events)
+    log.info("training complete")
 
 
 if __name__ == "__main__":

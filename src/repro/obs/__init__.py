@@ -1,0 +1,69 @@
+"""Unified observability layer: tracing, metrics, and stage-overlap
+analysis for the whole async-RL stack (ISSUE 8).
+
+AReaL-Hex's thesis is that the scheduler balances producer–consumer
+interactions "to avoid both idleness and stale rollout trajectories".
+This package is how the repo *shows* that balance: one trace/metrics
+substrate that the simulators, the paged engine, the control plane, the
+trainer, and the pool scheduler all emit into, consumed by the same
+offline analyzer that CI gates on.
+
+Trace lifecycle — record → export → analyze
+===========================================
+
+**1. Record.**  Create a :class:`Tracer` and hand it to any
+instrumented component; every hook is behind ``if tracer is not None``,
+so a ``None`` tracer (the default everywhere) is a provable zero-cost
+no-op — results and rng streams are bit-identical (tests/test_obs.py
+asserts this).  Simulators stamp events with *sim-time*; wall-clock
+components stamp with ``tracer.now()``.  Never share one tracer across
+the two timebases. ::
+
+    from repro.obs import Tracer
+    from repro.sim import AsyncRLSimulator, SimConfig
+
+    tracer = Tracer()
+    res = AsyncRLSimulator(plan, P, SimConfig(trace=tracer)).run()
+
+**2. Export.**  ``tracer.dump("trace.json")`` writes Chrome-trace JSON
+(``tracer.to_chrome()`` returns the same dict in-memory).  Tracks are
+grouped per pipeline stage (generation / env / reward / train / sync),
+per replica, per job, and per swap window; the simulator's conservation
+ledger rides along under ``otherData.ledger``.
+
+**To view in Perfetto:** open https://ui.perfetto.dev, click *Open
+trace file* (or drag-and-drop), and pick the JSON — each group renders
+as a process with one swimlane per track.  ``chrome://tracing`` loads
+the same file.
+
+**3. Analyze.**  ``python -m repro.obs analyze trace.json`` (or
+:func:`analyze_trace` on the dict) computes per-device utilization,
+per-stage bubble fractions, producer–consumer imbalance, and
+staleness-vs-idleness summaries, and cross-checks trace-derived
+throughput and device busy-time against the conservation ledger —
+``--min-stages`` / ``--max-tput-err`` turn it into a CI gate (nonzero
+exit on failure).
+
+Metrics ride the same package: :class:`MetricsRegistry` holds counters,
+gauges, and fixed-bucket histograms with ``snapshot()``/``delta()``
+JSON export; ``EngineStats.to_metrics()``, ``RolloutBuffer`` staleness,
+``ControlPlane`` admission latency, and simulator busy/idle all publish
+through it.  :mod:`repro.obs.log` is the launchers' structured logger
+(``--quiet`` / ``--json``; human output unchanged by default).
+"""
+from repro.obs.analyze import analyze_trace, check_report
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               snapshot_delta)
+from repro.obs.trace import TraceError, Tracer
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "TraceError",
+    "Tracer",
+    "analyze_trace",
+    "check_report",
+    "snapshot_delta",
+]

@@ -1,0 +1,7 @@
+"""CLI entry: ``python -m repro.obs analyze TRACE [--json] [...]``."""
+import sys
+
+from .analyze import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,152 @@
+"""Metrics registry: counters, gauges, and fixed-bucket histograms with
+snapshot / delta JSON export.
+
+This replaces the ad-hoc stat plumbing that used to be scattered across
+the stack: ``EngineStats.to_metrics()`` exports every engine count and
+derived rate, ``RolloutBuffer`` records the per-version staleness
+distribution, ``ControlPlane`` records admission latency, and the
+simulators record per-device busy/idle.  A snapshot is a plain
+JSON-able dict; ``delta`` subtracts two snapshots so periodic exporters
+can emit rates without the registry keeping history.
+"""
+from __future__ import annotations
+
+import bisect
+import json
+from typing import Dict, List, Optional, Sequence
+
+# Power-of-two upper bounds cover the repo's native ranges: staleness in
+# versions (0..η, small ints) and latencies in seconds (sub-second to
+# ~20 min).  Sites with tighter needs pass explicit buckets on first
+# creation.
+DEFAULT_BUCKETS = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0,
+                   256.0, 512.0, 1024.0)
+
+
+class Counter:
+    """Monotonically increasing value (float increments allowed, e.g.
+    busy-seconds)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value: float = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+
+class Gauge:
+    """Last-write-wins sampled value."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value: float = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Histogram:
+    """Fixed upper-bound buckets plus an overflow bucket; tracks sum and
+    count so the mean survives export."""
+
+    __slots__ = ("buckets", "counts", "sum", "count")
+
+    def __init__(self, buckets: Sequence[float] = DEFAULT_BUCKETS):
+        b = tuple(float(x) for x in buckets)
+        if not b or b != tuple(sorted(b)):
+            raise ValueError(f"buckets must be sorted and non-empty: {b}")
+        self.buckets = b
+        self.counts: List[int] = [0] * (len(b) + 1)   # last = overflow
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.sum += v
+        self.count += 1
+        # value lands in the first bucket whose upper bound is >= v
+        self.counts[bisect.bisect_left(self.buckets, v)] += 1
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+
+class MetricsRegistry:
+    """Get-or-create accessors keyed by slash-separated names
+    (``engine/decode_steps``, ``sim/staleness``, ...)."""
+
+    def __init__(self) -> None:
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter()
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge()
+        return g
+
+    def histogram(self, name: str,
+                  buckets: Optional[Sequence[float]] = None) -> Histogram:
+        h = self._histograms.get(name)
+        if h is None:
+            h = self._histograms[name] = Histogram(buckets or DEFAULT_BUCKETS)
+        return h
+
+    # -------------------------------------------------------------- export
+    def snapshot(self) -> Dict:
+        """Point-in-time JSON-able view of every registered metric."""
+        return {
+            "counters": {n: c.value
+                         for n, c in sorted(self._counters.items())},
+            "gauges": {n: g.value for n, g in sorted(self._gauges.items())},
+            "histograms": {
+                n: {"buckets": list(h.buckets), "counts": list(h.counts),
+                    "sum": h.sum, "count": h.count}
+                for n, h in sorted(self._histograms.items())},
+        }
+
+    def delta(self, prev: Dict) -> Dict:
+        """Current snapshot minus ``prev``: counters and histogram
+        counts/sums subtract (missing-in-prev treated as zero); gauges
+        keep their current value (a gauge has no meaningful rate)."""
+        return snapshot_delta(self.snapshot(), prev)
+
+    def to_json(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.snapshot(), f, indent=2, sort_keys=True)
+        return path
+
+
+def snapshot_delta(cur: Dict, prev: Dict) -> Dict:
+    """Pure-snapshot form of :meth:`MetricsRegistry.delta`."""
+    pc = prev.get("counters", {})
+    ph = prev.get("histograms", {})
+    out = {
+        "counters": {n: v - pc.get(n, 0.0)
+                     for n, v in cur.get("counters", {}).items()},
+        "gauges": dict(cur.get("gauges", {})),
+        "histograms": {},
+    }
+    for n, h in cur.get("histograms", {}).items():
+        p = ph.get(n)
+        if p is None or list(p.get("buckets", [])) != list(h["buckets"]):
+            out["histograms"][n] = dict(h)
+            continue
+        out["histograms"][n] = {
+            "buckets": list(h["buckets"]),
+            "counts": [a - b for a, b in zip(h["counts"], p["counts"])],
+            "sum": h["sum"] - p["sum"],
+            "count": h["count"] - p["count"],
+        }
+    return out

@@ -52,6 +52,11 @@ class TrainerConfig:
     # cache serves each turn's history, and training consumes the FINAL
     # turn of each episode.  None = single-turn (the historical behavior).
     agentic: Optional["EnvConfig"] = None
+    # default-off observability: a repro.obs.Tracer on the wall-clock
+    # timebase.  None (the default) skips every hook — the run is
+    # bit-identical, including rng streams.  Shared with the paged engine.
+    trace: Optional[Any] = None
+    metrics: Optional[Any] = None        # repro.obs.MetricsRegistry
 
 
 def _batch_from_rollouts(rollouts: List[Rollout], seq_len: int,
@@ -93,7 +98,7 @@ class AsyncGRPOTrainer:
         self.train_step = jax.jit(make_train_step(cfg, tc.opt))
         self.store = WeightStore()
         self.store.publish(self.params)
-        self.buffer = RolloutBuffer(tc.staleness)
+        self.buffer = RolloutBuffer(tc.staleness, metrics=tc.metrics)
         # version counters must agree: store starts at 1 (initial publish)
         self.buffer.ctl.version = self.store.version
         self.tasks = MathTaskGenerator(seed=tc.seed)
@@ -117,7 +122,7 @@ class AsyncGRPOTrainer:
                 ServeConfig(max_slots=tc.group_size * tc.prompts_per_step,
                             max_len=tc.seq_len + gen.max_new_tokens + extra,
                             radix=tc.agentic is not None),
-                rng_seed=tc.seed + 1)
+                rng_seed=tc.seed + 1, tracer=tc.trace)
             if tc.agentic is not None:
                 self.driver = MultiTurnDriver(self.engine,
                                               SimToolEnv(tc.agentic))
@@ -136,9 +141,14 @@ class AsyncGRPOTrainer:
         G = self.tc.group_size
         n_prompts = self.tc.prompts_per_step
         n = G * n_prompts
+        tr = self.tc.trace
         if not self.buffer.can_launch(n):
+            if tr is not None:
+                tr.instant("stage", "generation", "stall_capacity", tr.now(),
+                           in_flight=self.buffer.ctl.in_flight)
             return {"launched": 0}
         self.buffer.launch(n)
+        t0 = tr.now() if tr is not None else 0.0
         prompts = self.tasks.batch(n_prompts)
         gids = list(range(self._group_counter, self._group_counter + n_prompts))
         self._group_counter += n_prompts
@@ -158,6 +168,9 @@ class AsyncGRPOTrainer:
         self.rewarder.score_batch(rollouts)
         for r in rollouts:
             self.buffer.push(r)
+        if tr is not None:
+            tr.span("stage", "generation", "produce", t0, tr.now() - t0,
+                    rollouts=n, version=self.store.version)
         return {"launched": n, **metrics}
 
     # ------------------------------------------------------------- consumer
@@ -166,10 +179,17 @@ class AsyncGRPOTrainer:
         if not self.buffer.ready(need):
             return None
         batch_rollouts = self.buffer.pop_batch(need)
+        tr = self.tc.trace
+        t0 = tr.now() if tr is not None else 0.0
         batch = _batch_from_rollouts(batch_rollouts, self.tc.seq_len,
                                      self.cfg.vocab)
         self.params, self.opt_state, metrics = self.train_step(
             self.params, self.opt_state, batch)
+        if tr is not None:
+            tokens = sum(r.length for r in batch_rollouts)
+            tr.span("stage", "train", "train_step", t0, tr.now() - t0,
+                    tokens=tokens, rollouts=need,
+                    version=self.store.version)
         return {k: float(v) for k, v in metrics.items()}
 
     # ----------------------------------------------------------------- loop
@@ -186,6 +206,10 @@ class AsyncGRPOTrainer:
             if step % self.tc.publish_every == 0:
                 self.store.publish(self.params)
                 self.buffer.bump_version()
+                if self.tc.trace is not None:
+                    self.tc.trace.instant("stage", "sync", "publish",
+                                          self.tc.trace.now(),
+                                          version=self.store.version)
             m.update(self.buffer.stats())
             m["step"] = step
             m["mean_reward"] = self.rewarder.stats.mean

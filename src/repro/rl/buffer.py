@@ -34,11 +34,15 @@ class Rollout:
 
 
 class RolloutBuffer:
-    def __init__(self, config: Optional[StalenessConfig] = None):
+    def __init__(self, config: Optional[StalenessConfig] = None,
+                 metrics=None):
         self.config = config or StalenessConfig()
         self.ctl = StalenessController(self.config)
         self._items: List[Rollout] = []
         self.dropped = 0
+        # default-off observability (repro.obs.MetricsRegistry): None →
+        # every hook below is skipped, behavior bit-identical
+        self.metrics = metrics
 
     # ------------------------------------------------------------- producer
     def can_launch(self, n: int = 1) -> bool:
@@ -52,6 +56,9 @@ class RolloutBuffer:
         capacity purposes until consumed)."""
         rollout.plan_epoch = self.ctl.plan_epoch
         self._items.append(rollout)
+        if self.metrics is not None:
+            self.metrics.counter("buffer/pushed").inc()
+            self.metrics.gauge("buffer/depth").set(len(self._items))
 
     # ------------------------------------------------------------- elastic
     def on_plan_swap(self) -> int:
@@ -79,6 +86,8 @@ class RolloutBuffer:
             else:
                 self.ctl.drop(1)
                 self.dropped += 1
+                if self.metrics is not None:
+                    self.metrics.counter("buffer/dropped").inc()
         self._items = fresh
         return v
 
@@ -91,6 +100,14 @@ class RolloutBuffer:
         batch = self._items[:n]
         self._items = self._items[n:]
         self.ctl.consume([r.version for r in batch])
+        if self.metrics is not None:
+            # staleness distribution per consumed rollout, keyed at the
+            # moment of admission (version_now − version_rollout ≤ η)
+            hist = self.metrics.histogram("buffer/staleness")
+            for r in batch:
+                hist.observe(self.ctl.version - r.version)
+            self.metrics.counter("buffer/consumed").inc(len(batch))
+            self.metrics.gauge("buffer/depth").set(len(self._items))
         return batch
 
     def __len__(self) -> int:

@@ -82,6 +82,8 @@ import numpy as np
 
 from repro.data.tasks import MathTask
 from repro.models.api import ModelConfig
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
 from repro.rl.buffer import Rollout
 from repro.rl.rollout import GenConfig
 from repro.rl.weight_sync import WeightStore
@@ -172,6 +174,27 @@ class EngineStats:
         logical = self.prefill_tokens + self.prefill_tokens_shared
         return self.radix_hit_tokens / logical if logical else 0.0
 
+    def to_metrics(self) -> MetricsRegistry:
+        """Export every raw count and derived rate into a fresh
+        ``repro.obs.metrics`` registry.  This is the typed carrier
+        ``EngineReport.from_metrics`` consumes — downstream consumers
+        read the registry snapshot instead of reaching into stat fields,
+        so new engine internals never break the feedback loop."""
+        reg = MetricsRegistry()
+        for name in ("decode_steps", "decode_slot_steps", "prefill_tokens",
+                     "prefill_tokens_shared", "radix_hit_tokens",
+                     "tokens_generated", "preempted_slot_steps",
+                     "weight_swaps", "admissions", "preemptions",
+                     "completed", "forks", "cow_copies", "bt_uploads"):
+            reg.counter(f"engine/{name}").inc(getattr(self, name))
+        reg.gauge("engine/max_slots").set(self.max_slots)
+        reg.gauge("engine/wall_time_s").set(self.wall_time_s)
+        for name in ("slot_occupancy", "page_occupancy",
+                     "shared_page_fraction", "prefix_hit_rate", "g_eff",
+                     "radix_hit_rate"):
+            reg.gauge(f"engine/{name}").set(getattr(self, name))
+        return reg
+
 
 @dataclass
 class _Request:
@@ -235,13 +258,17 @@ def _nucleus_filter(logits: jax.Array, top_p: float) -> jax.Array:
 class PagedEngine:
     def __init__(self, cfg: ModelConfig, store: WeightStore,
                  gen: Optional[GenConfig] = None,
-                 serve: Optional[ServeConfig] = None, rng_seed: int = 0):
+                 serve: Optional[ServeConfig] = None, rng_seed: int = 0,
+                 tracer: Optional[Tracer] = None):
         if cfg.family not in ("dense", "vlm"):
             raise ValueError(
                 f"paged serving covers the dense-transformer family; "
                 f"{cfg.family!r} models use the static RolloutEngine")
         self.cfg = cfg
         self.store = store
+        # wall-clock tracer (repro.obs); None = zero-cost no-op — the
+        # token stream is bit-identical either way (tests/test_obs.py)
+        self._tracer = tracer
         self.gen = gen or GenConfig()
         self.serve = serve or ServeConfig()
         self._rng = jax.random.PRNGKey(rng_seed)
@@ -312,6 +339,10 @@ class PagedEngine:
             self._params, self._version = self.store.fetch(
                 dtype=self.cfg.jdtype)
             self.stats.weight_swaps += 1
+            if self._tracer is not None:
+                self._tracer.instant("engine", "weights", "swap",
+                                     self._tracer.now(),
+                                     version=self._version)
             for r in self._active.values():
                 r.versions.add(self._version)
             if self.radix is not None:
@@ -397,6 +428,11 @@ class PagedEngine:
         if task is None:
             raise ValueError("resume from raw tokens needs an explicit task")
         t = dataclasses.replace(task, prompt_ids=list(prompt))
+        if self._tracer is not None:
+            self._tracer.instant("engine", "admission", "resume",
+                                 self._tracer.now(),
+                                 history=len(history),
+                                 delta=len(new_turn))
         self.submit([t], group_ids=[group_id or 0],
                     max_new_per_task=None if max_new is None else [max_new],
                     temperature=temperature, top_p=top_p, greedy=greedy)
@@ -467,6 +503,11 @@ class PagedEngine:
             req.versions = {self._version}
             self._active[slot] = req
             self.stats.admissions += 1
+            if self._tracer is not None:
+                self._tracer.instant("engine", "admission", "admit",
+                                     self._tracer.now(), slot=slot,
+                                     radix_hit_tokens=hit,
+                                     queued=len(self._queue))
             # radix-served prompt tokens are shared-prefill credit exactly
             # like fork-served ones: g_eff (and through it the scheduler's
             # prefill_g_eff) prices both with the same machinery
@@ -503,6 +544,10 @@ class PagedEngine:
         leader.forks.append(sib)
         self._active[slot] = sib
         self.stats.admissions += 1
+        if self._tracer is not None:
+            self._tracer.instant("engine", "admission", "admit_fork",
+                                 self._tracer.now(), slot=slot,
+                                 leader=leader.slot)
 
     def _coalesce(self, leader: _Request, now: float) -> None:
         """Scan the queue for requests with the SAME prompt and sampling
@@ -538,6 +583,11 @@ class PagedEngine:
         self._done.append(req)
         self.stats.completed += 1
         self.stats.gen_samples.append((len(req.tokens), now - req.t_admit))
+        if self._tracer is not None:
+            self._tracer.instant("engine", "admission", "finish",
+                                 self._tracer.now(),
+                                 tokens=len(req.tokens),
+                                 latency_s=now - req.t_admit)
 
     def _preempt_youngest(self) -> bool:
         """Pool exhausted: kick the most recently admitted sequence back to
@@ -589,6 +639,10 @@ class PagedEngine:
                 req.radix_tokens = 0
         self._queue[:0] = group
         self.stats.preemptions += 1
+        if self._tracer is not None:
+            self._tracer.instant("engine", "admission", "preempt",
+                                 self._tracer.now(), group=len(group),
+                                 free_pages=self.kv.free_pages)
         return True
 
     # ----------------------------------------------------------------- step
@@ -598,6 +652,10 @@ class PagedEngine:
         if not (self._queue or self._active):
             return False
         now = time.time()
+        tr = self._tracer
+        if tr is not None:
+            tr.begin("engine", "loop", "step", tr.now(),
+                     queued=len(self._queue), active=len(self._active))
         self._admit(now)
         try:
             return self._step_body(now)
@@ -605,6 +663,8 @@ class PagedEngine:
             # wall time accrues per step so the stepwise submit/step/collect
             # path reports real lifetime throughput, not 0
             self.stats.wall_time_s += time.time() - now
+            if tr is not None:
+                tr.end("engine", "loop", tr.now())
 
     def _step_body(self, now: float) -> bool:
         decode_slots = sorted(s for s, r in self._active.items()
@@ -651,6 +711,8 @@ class PagedEngine:
         return True
 
     def _decode_batch(self, slots: List[int], now: float) -> None:
+        tr = self._tracer
+        t0 = tr.now() if tr is not None else 0.0
         if self.stats.decode_steps % max(self.gen.segment, 1) == 0:
             self._maybe_swap_weights()
         S = self.serve.max_slots
@@ -701,6 +763,12 @@ class PagedEngine:
         self.stats.pool_util_sum += occ["pool_util"]
         self.stats.shared_frac_sum += occ["shared_frac"]
         self.stats.occ_samples += 1
+        if tr is not None:
+            tr.span("engine", "decode", "decode_step", t0, tr.now() - t0,
+                    slots=len(slots))
+            tr.counter("engine", "pages", tr.now(),
+                       free=self.kv.free_pages,
+                       occupancy=occ["page_occupancy"])
 
     def _fork_siblings(self, leader: _Request, last_logits: jax.Array,
                        now: float) -> None:
@@ -730,6 +798,8 @@ class PagedEngine:
         leader.forks = []
 
     def _prefill_one(self, req: _Request) -> int:
+        tr = self._tracer
+        t0 = tr.now() if tr is not None else 0.0
         chunk = self.serve.prefill_chunk
         n = min(chunk, req.plen - req.prefill_done)
         toks = np.zeros((chunk,), np.int32)
@@ -758,6 +828,9 @@ class PagedEngine:
                 req.max_new = 1                       # EOS straight away
             if req.forks:
                 self._fork_siblings(req, logits[n - 1], time.time())
+        if tr is not None:
+            tr.span("engine", "prefill", "prefill_chunk", t0,
+                    tr.now() - t0, tokens=n, slot=req.slot)
         return n
 
     # -------------------------------------------------------------- frontend

@@ -70,6 +70,38 @@ class EngineReport:
     radix_hit_rate: float = 0.0    # prompt tokens served from the radix tree
     turns_per_episode: float = 1.0
     turn_gap_s: float = 0.0        # mean measured env/tool inter-turn gap
+    # block-table upload count: how often steady decode had to re-stream
+    # the [max_slots, maxp] table to the device (cached-table
+    # effectiveness; rides the metrics registry like every other count)
+    bt_uploads: int = 0
+
+    @classmethod
+    def from_metrics(cls, snap: Dict, device_type: str,
+                     *, engine: str = "paged",
+                     tokens_per_sec: float = 0.0,
+                     turns_per_episode: float = 1.0,
+                     turn_gap_s: float = 0.0) -> "EngineReport":
+        """Build a report from a ``MetricsRegistry.snapshot()`` produced
+        by ``EngineStats.to_metrics()`` — the registry is the contract
+        between the engine and the cost-fitting loop; nothing here
+        touches ``EngineStats`` fields directly."""
+        c = snap.get("counters", {})
+        g = snap.get("gauges", {})
+        return cls(device_type=device_type, engine=engine,
+                   tokens_per_sec=tokens_per_sec,
+                   slot_occupancy=float(g.get("engine/slot_occupancy", 1.0)),
+                   page_occupancy=float(g.get("engine/page_occupancy", 1.0)),
+                   batch_slots=int(g.get("engine/max_slots", 0)),
+                   decode_steps=int(c.get("engine/decode_steps", 0)),
+                   prefix_hit_rate=float(g.get("engine/prefix_hit_rate",
+                                               0.0)),
+                   shared_page_fraction=float(
+                       g.get("engine/shared_page_fraction", 0.0)),
+                   g_eff=float(g.get("engine/g_eff", 1.0)),
+                   radix_hit_rate=float(g.get("engine/radix_hit_rate", 0.0)),
+                   turns_per_episode=turns_per_episode,
+                   turn_gap_s=turn_gap_s,
+                   bt_uploads=int(c.get("engine/bt_uploads", 0)))
 
     @classmethod
     def from_stats(cls, stats: EngineStats, device_type: str,
@@ -77,18 +109,13 @@ class EngineReport:
                    tokens_per_sec: float = 0.0,
                    turns_per_episode: float = 1.0,
                    turn_gap_s: float = 0.0) -> "EngineReport":
-        return cls(device_type=device_type, engine=engine,
-                   tokens_per_sec=tokens_per_sec,
-                   slot_occupancy=stats.slot_occupancy,
-                   page_occupancy=stats.page_occupancy,
-                   batch_slots=stats.max_slots,
-                   decode_steps=stats.decode_steps,
-                   prefix_hit_rate=stats.prefix_hit_rate,
-                   shared_page_fraction=stats.shared_page_fraction,
-                   g_eff=stats.g_eff,
-                   radix_hit_rate=stats.radix_hit_rate,
-                   turns_per_episode=turns_per_episode,
-                   turn_gap_s=turn_gap_s)
+        """Routed through the metrics registry (``to_metrics`` →
+        ``from_metrics``) so stats stay a single-writer detail of the
+        engine."""
+        return cls.from_metrics(stats.to_metrics().snapshot(), device_type,
+                                engine=engine, tokens_per_sec=tokens_per_sec,
+                                turns_per_episode=turns_per_episode,
+                                turn_gap_s=turn_gap_s)
 
 
 class ServingCostModel(CostProvider):

@@ -70,6 +70,8 @@ from repro.core.jobs import (AdmissionConfig, ControlPlane,
                              TrendConfig)
 from repro.core.plan import ScheduledPlan
 from repro.core.pool import JobSpec, PoolPlan
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
 from .events import (EventQueue, FailureInjection, HandoffRecord, JobArrival,
                      JobFailure, JobStraggler, PlanSwapRecord, ReplanTrigger,
                      StragglerInjection)
@@ -96,6 +98,12 @@ class SimConfig:
     # scheduler's EnvCostModel.stage_time); None = no gaps, no extra rng
     # draws — existing runs are bit-identical
     env: Optional[EnvCostModel] = None
+    # observability (repro.obs): default-off.  With both None the event
+    # stream, rng draws, and SimResult are bit-identical to an
+    # uninstrumented run (asserted in tests/test_obs.py).  Timestamps on
+    # the tracer are sim-time seconds.
+    trace: Optional[Tracer] = None
+    metrics: Optional[MetricsRegistry] = None
 
 
 @dataclass
@@ -221,6 +229,8 @@ class AsyncRLSimulator:
         epoch_open = dict(epoch=epoch, provenance=cur_plan.provenance,
                           t_start=0.0, steps0=0, tokens0=0.0)
         swap_hist_idx: List[int] = []         # stale_hist cut per swap
+        tr = cfg.trace                        # None = zero-cost no-op
+        mx = cfg.metrics
 
         def close_epoch(now: float) -> None:
             epoch_stats.append(PlanEpochStat(
@@ -249,6 +259,8 @@ class AsyncRLSimulator:
             if in_flight >= capacity:
                 paused.append(i)          # staleness capacity reached:
                 stalls_capacity += 1      # generation pauses (paper Fig. 1)
+                if mx is not None:
+                    mx.counter("sim/stalls_capacity").inc()
                 return
             in_flight += 1
             launched += 1
@@ -259,8 +271,23 @@ class AsyncRLSimulator:
             gen_busy_sum += dur
             # env gaps are wall time the replica stalls, not generation —
             # they delay the rollout but do not count as gen_busy
-            q.push(now + dur + _env_gap(cfg.env, rng) + cfg.reward_cost_s,
+            gap = _env_gap(cfg.env, rng)
+            q.push(now + dur + gap + cfg.reward_cost_s,
                    "rollout_done", (epoch, i, version, length))
+            if tr is not None:
+                tr.span("replica", f"r{i}", "generate", now, dur,
+                        tokens=length, version=version, epoch=epoch)
+                tr.span("stage", "generation", "generate", now, dur,
+                        replica=i)
+                if gap > 0.0:
+                    tr.span("stage", "env", "env_wait", now + dur, gap,
+                            replica=i)
+                if cfg.reward_cost_s > 0.0:
+                    tr.span("stage", "reward", "reward", now + dur + gap,
+                            cfg.reward_cost_s, replica=i)
+            if mx is not None:
+                mx.counter("sim/rollouts_launched").inc()
+                mx.counter(f"sim/gen_busy_s/r{i}").inc(dur)
 
         def maybe_train(now: float) -> None:
             nonlocal steps, tokens_consumed, version, in_flight, consumed
@@ -274,13 +301,21 @@ class AsyncRLSimulator:
                 dropped += n_evicted
                 in_flight -= n_evicted
                 buffer[:] = fresh
+                if tr is not None:
+                    tr.instant("stage", "train", "evict_stale", now,
+                               n=n_evicted)
+                if mx is not None:
+                    mx.counter("sim/dropped").inc(n_evicted)
             if len(buffer) < B:
                 stalls_data += 1
+                if mx is not None:
+                    mx.counter("sim/stalls_data").inc()
                 return
             batch = buffer[:B]
             del buffer[:B]
             in_flight -= B
             consumed += B
+            tok0 = tokens_consumed
             for vtag, ln in batch:
                 stale_hist.append(version - vtag)
                 tokens_consumed += ln + self.P.prompt_len
@@ -288,6 +323,20 @@ class AsyncRLSimulator:
             train_busy += t_train
             trainer_busy_until = now + dur
             q.push(now + dur, "train_done", None)
+            if tr is not None:
+                tr.span("stage", "train", "train_step", now, t_train,
+                        step=steps, tokens=tokens_consumed - tok0,
+                        version=version)
+                if t_sync > 0.0:
+                    tr.span("stage", "sync", "weight_sync", now + t_train,
+                            t_sync, version=version + 1)
+                tr.counter("sim", "buffer", now, depth=len(buffer),
+                           in_flight=in_flight)
+            if mx is not None:
+                h = mx.histogram("sim/staleness")
+                for vtag, _ln in batch:
+                    h.observe(version - vtag)
+                mx.counter("sim/rollouts_trained").inc(B)
             # resume capacity-paused replicas; drain a snapshot so a replica
             # that immediately re-pauses (capacity still full) is not popped
             # again in the same pass (that would spin forever whenever
@@ -332,8 +381,15 @@ class AsyncRLSimulator:
             state = "RUNNING"
             drain_scheduled = False
             last_commit = now
+            if tr is not None:
+                # the drain window: launches stopped replan_latency_s ago
+                tr.span("sim", "plan", "drain", now - elastic.replan_latency_s,
+                        elastic.replan_latency_s, reason=drain_reason)
             if new_plan is None:
                 # no feasible plan: continue on the old one minus the dead
+                if tr is not None:
+                    tr.instant("sim", "plan", "commit_infeasible", now,
+                               reason=drain_reason)
                 for i in sorted(idle):
                     launch(i, now)
                 idle.clear()
@@ -359,6 +415,11 @@ class AsyncRLSimulator:
                 mean_staleness_before=float(np.mean(h)) if h else 0.0,
                 max_staleness_before=int(np.max(h)) if h else 0))
             swap_hist_idx.append(len(h))
+            if tr is not None:
+                tr.instant("sim", "plan", "commit", now, epoch=epoch,
+                           replicas=n_rep, reason=drain_reason)
+            if mx is not None:
+                mx.counter("sim/plan_swaps").inc()
             paused.clear()
             idle.clear()
             # transiently-down devices (failures with a downtime) keep their
@@ -405,6 +466,8 @@ class AsyncRLSimulator:
                     # evicted, its capacity slot freed
                     dropped += 1
                     in_flight -= 1
+                    if mx is not None:
+                        mx.counter("sim/dropped").inc()
                 else:
                     buffer.append((vtag, length))
                 if ev_epoch == epoch:         # old-epoch replicas don't relaunch
@@ -464,6 +527,28 @@ class AsyncRLSimulator:
             h = stale_hist[cut:]
             rec.mean_staleness_after = float(np.mean(h)) if h else 0.0
             rec.max_staleness_after = int(np.max(h)) if h else 0
+        if tr is not None:
+            # conservation ledger → otherData.ledger: the analyzer
+            # cross-checks trace-derived throughput/busy-time against it
+            tr.meta["ledger"] = {
+                "wall_time_s": wall, "steps": steps,
+                "tokens_consumed": tokens_consumed,
+                "throughput_tps": tokens_consumed / wall,
+                "gen_busy_s": gen_busy_sum, "rep_seconds": rep_seconds,
+                "rollouts_launched": launched,
+                "rollouts_trained": consumed, "dropped": dropped,
+                "mean_staleness": (float(np.mean(stale_hist))
+                                   if stale_hist else 0.0),
+                "max_staleness": (int(np.max(stale_hist))
+                                  if stale_hist else 0),
+                "stalls_capacity": stalls_capacity,
+                "stalls_data": stalls_data,
+            }
+        if mx is not None:
+            mx.gauge("sim/gen_busy_frac").set(
+                gen_busy_sum / rep_seconds if rep_seconds > 0 else 0.0)
+            mx.gauge("sim/train_busy_frac").set(train_busy / wall)
+            mx.gauge("sim/wall_time_s").set(wall)
         return SimResult(
             wall_time_s=wall,
             steps=steps,
@@ -574,6 +659,10 @@ class MultiSimConfig:
     #                                        their slices are reclaimed (vs
     #                                        frozen-in-place, the old default)
     trend: Optional[TrendConfig] = None    # EWMA predictive-replan detector
+    # observability (see SimConfig.trace/metrics): default-off, zero-cost
+    # no-op when None; sim-time timebase
+    trace: Optional[Tracer] = None
+    metrics: Optional[MetricsRegistry] = None
 
 
 @dataclass
@@ -819,11 +908,14 @@ class MultiJobSimulator:
         jobs = self.jobs
         retired: Dict[str, SimResult] = {}     # departed jobs' final results
 
+        tr = cfg.trace                         # None = zero-cost no-op
+        mx = cfg.metrics
+
         control: Optional[ControlPlane] = None
         if (cfg.arrivals or cfg.admission is not None
                 or cfg.depart_on_completion):
             control = ControlPlane(replanner.cluster, replanner.pool_cfg,
-                                   cfg.admission)
+                                   cfg.admission, tracer=tr, metrics=mx)
             control.register_initial(cur_pool.jobs)
 
         state = "RUNNING"                      # pool-level: RUNNING | DRAINING
@@ -854,8 +946,22 @@ class MultiJobSimulator:
                                    16, jr.P.max_len))
             dur = _gen_duration(cfg.gen_time, length, jr.P, jr.rate[i])
             jr.gen_busy_sum += dur
-            q.push(now + dur + _env_gap(cfg.env, rng) + cfg.reward_cost_s,
+            gap = _env_gap(cfg.env, rng)
+            q.push(now + dur + gap + cfg.reward_cost_s,
                    "rollout_done", (jr.name, jr.epoch, i, jr.version, length))
+            if tr is not None:
+                tr.span("replica", f"{jr.name}/r{i}", "generate", now, dur,
+                        tokens=length, version=jr.version, job=jr.name)
+                tr.span("stage", "generation", "generate", now, dur,
+                        job=jr.name, replica=i)
+                if gap > 0.0:
+                    tr.span("stage", "env", "env_wait", now + dur, gap,
+                            job=jr.name)
+                if cfg.reward_cost_s > 0.0:
+                    tr.span("stage", "reward", "reward", now + dur + gap,
+                            cfg.reward_cost_s, job=jr.name)
+            if mx is not None:
+                mx.counter(f"sim/{jr.name}/rollouts_launched").inc()
 
         def maybe_train(jr: _JobRun, now: float) -> None:
             if jr.steps >= jr.n_steps or now < jr.trainer_busy_until:
@@ -873,6 +979,7 @@ class MultiJobSimulator:
             del jr.buffer[: jr.B]
             jr.in_flight -= jr.B
             jr.consumed += jr.B
+            tok0 = jr.tokens
             for vtag, ln in batch:
                 jr.stale_hist.append(jr.version - vtag)
                 jr.tokens += ln + jr.P.prompt_len
@@ -880,6 +987,18 @@ class MultiJobSimulator:
             jr.train_busy += jr.t_train
             jr.trainer_busy_until = now + dur
             q.push(now + dur, "train_done", (jr.name,))
+            if tr is not None:
+                tr.span("stage", "train", "train_step", now, jr.t_train,
+                        job=jr.name, step=jr.steps, tokens=jr.tokens - tok0,
+                        version=jr.version)
+                if jr.t_sync > 0.0:
+                    tr.span("stage", "sync", "weight_sync",
+                            now + jr.t_train, jr.t_sync, job=jr.name)
+            if mx is not None:
+                h = mx.histogram(f"sim/{jr.name}/staleness")
+                for vtag, _ln in batch:
+                    h.observe(jr.version - vtag)
+                mx.counter(f"sim/{jr.name}/rollouts_trained").inc(jr.B)
             # snapshot-drain: see the single-job maybe_train note
             resume = jr.paused[:]
             jr.paused.clear()
@@ -950,16 +1069,34 @@ class MultiJobSimulator:
             state = "RUNNING"
             drain_scheduled = False
             last_commit = now
+            if tr is not None:
+                tr.span("pool", "plan", "drain",
+                        now - elastic.replan_latency_s,
+                        elastic.replan_latency_s, reason=drain_reason)
             if new_pool is None:
                 # no feasible pool: every job keeps its plan minus the dead
                 # (queued arrivals stay PENDING for the next trigger)
+                if tr is not None:
+                    tr.instant("pool", "plan", "commit_infeasible", now,
+                               reason=drain_reason)
                 for jr in jobs.values():
                     for i in sorted(jr.idle):
                         launch(jr, i, now)
                     jr.idle.clear()
                 return
             pool_swaps += 1
-            ledger.apply(new_pool.owner, now)
+            recs = ledger.apply(new_pool.owner, now)
+            if tr is not None:
+                tr.instant("pool", "plan", "commit", now,
+                           reason=drain_reason, epoch=new_pool.pool_epoch,
+                           handoffs=len(recs))
+                for rec in recs:
+                    tr.instant("pool", "plan", "handoff", now,
+                               src=rec.from_job, dst=rec.to_job,
+                               devices=rec.n_devices)
+            if mx is not None:
+                mx.counter("pool/swaps").inc()
+                mx.counter("pool/handoffs").inc(len(recs))
             # departures: the plan dropped them — retire their runs and
             # reclaim the lifecycle state (slice ownership already moved)
             for name in departing:
@@ -1139,6 +1276,22 @@ class MultiJobSimulator:
         wall = t if t > 0 else 1e-9
         per_job = {n: jr.result(wall) for n, jr in jobs.items()}
         per_job.update(retired)
+        if tr is not None:
+            total_tokens = sum(r.tokens_consumed for r in per_job.values())
+            tr.meta["ledger"] = {
+                "wall_time_s": wall,
+                "tokens_consumed": total_tokens,
+                "throughput_tps": total_tokens / wall,
+                "pool_swaps": pool_swaps,
+                "handoffs": len(ledger.handoffs),
+                "jobs": {n: {"steps": r.steps,
+                             "tokens_consumed": r.tokens_consumed,
+                             "throughput_tps": r.throughput_tps,
+                             "dropped": r.dropped}
+                         for n, r in sorted(per_job.items())},
+            }
+        if mx is not None:
+            mx.gauge("pool/wall_time_s").set(wall)
         return MultiJobSimResult(
             per_job=per_job,
             handoffs=ledger.handoffs,
