@@ -1,8 +1,29 @@
-"""Shared helpers for the paper-table benchmarks."""
+"""Shared helpers for the paper-table benchmarks.
+
+Perf-regression baselines
+-------------------------
+``benchmarks/baselines/`` holds one committed ``BENCH_<name>.json`` per
+benchmark, seeded from a ``--tiny`` run.  The CI gate
+``python -m repro.obs regress --baselines benchmarks/baselines --run DIR``
+compares a fresh run's artifacts against them with direction-aware
+tolerance bands (throughput must not drop, latency must not grow;
+machine-dependent wall-clock metrics are skipped by default).
+
+Regenerate after an intentional perf change::
+
+    PYTHONPATH=src python -m benchmarks.run --tiny --write-baselines
+
+then commit the updated ``benchmarks/baselines/*.json`` alongside the
+change that moved the numbers.
+"""
 from __future__ import annotations
 
+import os
 import time
 from typing import Dict, List
+
+# the committed perf-regression reference (see module docstring)
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
 
 from repro.core.cluster import (Cluster, paper_heterogeneous,
                                 paper_homogeneous_h20,

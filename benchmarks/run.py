@@ -1,15 +1,21 @@
 """Benchmark aggregator: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig3] [--tiny]
-        [--artifact-dir DIR]
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,fig6] [--tiny]
+        [--artifact-dir DIR] [--write-baselines]
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--tiny`` forwards CI
 mode to every module whose ``run()`` accepts it (the others run at full
-size).  Modules may publish a machine-readable summary by setting a
-module-level ``BENCH_JSON`` dict inside ``run()``; the aggregator writes
-each one to ``<artifact-dir>/BENCH_<name>.json`` (e.g.
+size).  ``--only`` takes a comma-separated list of substrings matched
+against module names.  Modules may publish a machine-readable summary by
+setting a module-level ``BENCH_JSON`` dict inside ``run()``; the
+aggregator writes each one to ``<artifact-dir>/BENCH_<name>.json`` (e.g.
 ``BENCH_prefix_sharing.json``) so per-PR perf trajectories can be
 diffed without parsing CSV.
+
+``--write-baselines`` redirects the artifacts to the committed baseline
+directory (``benchmarks/baselines/``) consumed by the perf-regression
+gate ``python -m repro.obs regress`` — see ``benchmarks.common`` for the
+regeneration recipe.
 """
 from __future__ import annotations
 
@@ -55,12 +61,20 @@ def main() -> None:
                     help="CI mode for modules that support it")
     ap.add_argument("--artifact-dir", default=".",
                     help="where BENCH_*.json artifacts are written")
+    ap.add_argument("--write-baselines", action="store_true",
+                    help="write artifacts to benchmarks/baselines/ "
+                         "(the committed perf-regression reference)")
     args = ap.parse_args()
+    if args.write_baselines:
+        from benchmarks.common import BASELINE_DIR
+        os.makedirs(BASELINE_DIR, exist_ok=True)
+        args.artifact_dir = BASELINE_DIR
 
+    only = [tok for tok in args.only.split(",") if tok]
     print("name,us_per_call,derived")
     failures = []
     for mod_name in MODULES:
-        if args.only and args.only not in mod_name:
+        if only and not any(tok in mod_name for tok in only):
             continue
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])

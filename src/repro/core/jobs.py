@@ -211,17 +211,19 @@ class ControlPlane:
     def __init__(self, cluster: Cluster,
                  pool_cfg: Optional[PoolConfig] = None,
                  cfg: Optional[AdmissionConfig] = None,
-                 tracer=None, metrics=None):
+                 tracer=None, metrics=None, monitor=None):
         self.cluster = cluster
         self.pool_cfg = pool_cfg or PoolConfig()
         self.cfg = cfg or AdmissionConfig()
         self.records: Dict[str, JobRecord] = {}
         self.decisions: List[AdmissionDecision] = []
-        # observability (repro.obs Tracer / MetricsRegistry, both
-        # optional): lifecycle instants on the "jobs" group, decision
-        # counters, and the admission-latency histogram.  None = no-op.
+        # observability (repro.obs Tracer / MetricsRegistry /
+        # HealthMonitor, all optional): lifecycle instants on the "jobs"
+        # group, decision counters, the admission-latency histogram, and
+        # the monitor's admission-SLO burn feed.  None = no-op.
         self.tracer = tracer
         self.metrics = metrics
+        self.monitor = monitor
 
     def _observe(self, dec: AdmissionDecision, t: float) -> None:
         if self.tracer is not None:
@@ -321,6 +323,8 @@ class ControlPlane:
                 if self.metrics is not None and lat is not None:
                     self.metrics.histogram(
                         "jobs/admission_latency_s").observe(lat)
+                if self.monitor is not None and lat is not None:
+                    self.monitor.on_admission(rec.name, t, lat)
         return started
 
     def tick(self, t: float,

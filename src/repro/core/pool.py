@@ -572,7 +572,7 @@ def schedule_pool(jobs: Sequence[JobSpec], cluster: Cluster,
                   cfg: Optional[PoolConfig] = None, *,
                   cost_provider: Optional[CostProvider] = None,
                   allow_partial: bool = False,
-                  trace=None) -> PoolPlan:
+                  trace=None, metrics=None) -> PoolPlan:
     """Offline pool arbitration: Eq. (1') over a fresh cluster.
 
     ``cost_provider`` (when given) overrides the efficiency-factor source in
@@ -617,6 +617,9 @@ def schedule_pool(jobs: Sequence[JobSpec], cluster: Cluster,
         trace.span("scheduler", "pool", "schedule_pool",
                    now - plan.wall_time_s, plan.wall_time_s,
                    jobs=len(placed), transfers=plan.transfers)
+    if metrics is not None:     # repro.obs.MetricsRegistry (default-off)
+        metrics.histogram("pool/schedule_latency_s").observe(
+            plan.wall_time_s)
     return plan
 
 
@@ -656,7 +659,7 @@ def replan_pool(prev: PoolPlan, cluster: Cluster,
                 departed: Sequence[str] = (),
                 arrivals: Sequence[JobSpec] = (),
                 allow_partial: bool = False,
-                trace=None) -> PoolPlan:
+                trace=None, metrics=None) -> PoolPlan:
     """Elastic pool re-arbitration over the *surviving* ``cluster``.
 
     Ownership is warm-started from ``prev`` (dead devices dropped); each
@@ -782,4 +785,6 @@ def replan_pool(prev: PoolPlan, cluster: Cluster,
                    now - pool.wall_time_s, pool.wall_time_s,
                    jobs=len(placed), transfers=pool.transfers,
                    reason=reason)
+    if metrics is not None:     # repro.obs.MetricsRegistry (default-off)
+        metrics.histogram("pool/replan_latency_s").observe(pool.wall_time_s)
     return pool

@@ -59,6 +59,10 @@ def main() -> None:
                     help="paged: observation tokens injected per turn")
     ap.add_argument("--greedy", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics", default="",
+                    help="write a MetricsRegistry snapshot JSON of the "
+                         "serve run here (inspect: python -m repro.obs analyze "
+                         "--metrics PATH)")
     args = ap.parse_args()
     log.configure(args)
 
@@ -145,6 +149,26 @@ def main() -> None:
             turns_per_episode=float(metrics.get("turns", 1)),
             turn_gap_s=float(metrics.get("turn_gap_s", 0.0)))
         log.info(f"engine report: {report}", report=report)
+    if args.metrics:
+        from repro.obs import MetricsRegistry
+        registry = MetricsRegistry()
+        registry.counter("serve/tokens").inc(n_tok)
+        registry.counter("serve/requests").inc(args.batch)
+        registry.gauge("serve/tok_per_s").set(n_tok / dt)
+        registry.gauge("serve/mean_len").set(float(metrics["mean_len"]))
+        lat_hist = registry.histogram("serve/completion_len")
+        for ro in rollouts:
+            lat_hist.observe(float(len(ro.completion_ids)))
+        if args.engine == "paged":
+            registry.gauge("serve/slot_occupancy").set(
+                float(metrics["slot_occupancy"]))
+            registry.gauge("serve/page_occupancy").set(
+                float(metrics["page_occupancy"]))
+            registry.counter("serve/preemptions").inc(
+                int(metrics.get("preemptions", 0)))
+        registry.to_json(args.metrics)
+        log.info(f"metrics written to {args.metrics}",
+                 metrics=args.metrics)
     r = rollouts[0]
     log.info(f"sample prompt:     {tok.decode(r.prompt_ids)!r}",
              prompt=tok.decode(r.prompt_ids))

@@ -43,6 +43,10 @@ def main() -> None:
     ap.add_argument("--trace", default="",
                     help="write a Chrome-trace JSON of the run here "
                          "(view: https://ui.perfetto.dev)")
+    ap.add_argument("--metrics", default="",
+                    help="write a MetricsRegistry snapshot JSON of the "
+                         "run here (inspect: python -m repro.obs analyze "
+                         "--metrics PATH)")
     args = ap.parse_args()
     log.configure(args)
 
@@ -68,13 +72,17 @@ def main() -> None:
     if args.trace:
         from repro.obs import Tracer
         tracer = Tracer(meta={"launcher": "train", "arch": args.arch})
+    registry = None
+    if args.metrics:
+        from repro.obs import MetricsRegistry
+        registry = MetricsRegistry()
     tc = TrainerConfig(
         group_size=args.group_size, prompts_per_step=args.prompts_per_step,
         total_steps=args.steps, seed=args.seed,
         staleness=StalenessConfig(
             eta=args.eta,
             rollouts_per_step=args.group_size * args.prompts_per_step),
-        opt=AdamWConfig(lr=args.lr), trace=tracer)
+        opt=AdamWConfig(lr=args.lr), trace=tracer, metrics=registry)
     trainer = AsyncGRPOTrainer(cfg, tc)
 
     mgr = None
@@ -122,6 +130,10 @@ def main() -> None:
         log.info(f"trace written to {args.trace} "
                  f"({tracer.n_events} events)", trace=args.trace,
                  events=tracer.n_events)
+    if registry is not None:
+        registry.to_json(args.metrics)
+        log.info(f"metrics written to {args.metrics}",
+                 metrics=args.metrics)
     log.info("training complete")
 
 

@@ -46,24 +46,84 @@ exit on failure).
 
 Metrics ride the same package: :class:`MetricsRegistry` holds counters,
 gauges, and fixed-bucket histograms with ``snapshot()``/``delta()``
-JSON export; ``EngineStats.to_metrics()``, ``RolloutBuffer`` staleness,
+JSON export and interpolated p50/p95/p99 per histogram;
+``EngineStats.to_metrics()``, ``RolloutBuffer`` staleness,
 ``ControlPlane`` admission latency, and simulator busy/idle all publish
 through it.  :mod:`repro.obs.log` is the launchers' structured logger
 (``--quiet`` / ``--json``; human output unchanged by default).
+
+Online loop — monitor → alert → replan (ISSUE 9)
+================================================
+
+The analyzer above is *post-mortem*; :class:`HealthMonitor` runs the
+same questions online.  It consumes the metrics registry
+(``observe_registry``), the trace stream (``tracer.add_sink``), or
+direct feeds (``on_gen_span`` / ``on_buffer`` / ``on_staleness`` /
+...), evaluates rolling-window detectors on ``poll(now)`` — per-replica
+straggler z-score, producer–consumer imbalance, staleness SLO burn
+(:mod:`repro.obs.slo`), per-stage bubble drift, admission-latency SLO —
+and emits typed :class:`Alert`\\ s (trace instant + structured-log line
+each).  The simulators poll an attached monitor on
+``cfg.poll_interval_s`` and route sustained straggler / imbalance
+alerts straight into the predictive-replan path, draining a sick
+replica on distributional evidence instead of waiting for the job-level
+throughput EWMA to sag. ::
+
+    from repro.obs import HealthMonitor, MonitorConfig
+    from repro.sim import MultiJobSimulator, MultiSimConfig
+
+    mon = HealthMonitor(MonitorConfig(straggler_z=3.0))
+    res = MultiJobSimulator(pool, P, MultiSimConfig(
+        elastic=..., monitor=mon, monitor_replan=True)).run()
+    for a in mon.alerts:
+        print(a.severity, a.detector, a.key, a.message)
+
+Everything is default-off: no monitor is constructed unless passed in,
+and every feed site hides behind ``if monitor is not None``, so results
+stay bit-identical without one (tests/test_monitor.py asserts this).
+
+Perf loop — bench → baseline → regress (ISSUE 9)
+================================================
+
+Every benchmark in ``benchmarks/run.py`` emits a ``BENCH_<name>.json``
+payload; committed baselines live under ``benchmarks/baselines/``
+(regenerate with ``python -m benchmarks.run --tiny
+--write-baselines``).  ``python -m repro.obs regress --baselines
+benchmarks/baselines --run DIR`` flattens payloads into metrics,
+applies direction-aware tolerance bands (throughput-like must not
+drop, latency-like must not rise; machine-dependent wall-clock skipped
+by default), and exits nonzero on regression — CI runs it against a
+fresh ``--tiny`` subset and uploads the JSON report as an artifact.
 """
-from repro.obs.analyze import analyze_trace, check_report
+from repro.obs.analyze import analyze_trace, check_report, summarize_metrics
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
-                               snapshot_delta)
+                               hist_frac_ge, hist_quantile, snapshot_delta)
+from repro.obs.monitor import Alert, HealthMonitor, MonitorConfig
+from repro.obs.regress import compare_dirs, compare_metrics, extract_metrics
+from repro.obs.slo import BurnWindow, SLOSpec, burn_rate, classify_burn
 from repro.obs.trace import TraceError, Tracer
 
 __all__ = [
+    "Alert",
+    "BurnWindow",
     "Counter",
     "Gauge",
+    "HealthMonitor",
     "Histogram",
     "MetricsRegistry",
+    "MonitorConfig",
+    "SLOSpec",
     "TraceError",
     "Tracer",
     "analyze_trace",
+    "burn_rate",
     "check_report",
+    "classify_burn",
+    "compare_dirs",
+    "compare_metrics",
+    "extract_metrics",
+    "hist_frac_ge",
+    "hist_quantile",
     "snapshot_delta",
+    "summarize_metrics",
 ]

@@ -1,7 +1,17 @@
-"""CLI entry: ``python -m repro.obs analyze TRACE [--json] [...]``."""
+"""CLI entry: ``python -m repro.obs analyze TRACE [--json] [...]`` and
+``python -m repro.obs regress [--baselines DIR] [--run DIR] [...]``."""
 import sys
 
-from .analyze import main
+
+def _dispatch(argv):
+    # ``regress`` has its own flat parser; everything else goes through
+    # the analyze subcommand parser.
+    if argv and argv[0] == "regress":
+        from .regress import main as regress_main
+        return regress_main(argv[1:])
+    from .analyze import main as analyze_main
+    return analyze_main(argv)
+
 
 if __name__ == "__main__":
-    sys.exit(main())
+    sys.exit(_dispatch(sys.argv[1:]))

@@ -126,6 +126,14 @@ def analyze_trace(trace: Dict[str, Any]) -> Dict[str, Any]:
         gen_busy["ledger_s"] = float(lb)
         gen_busy["rel_err"] = abs(gen_busy["trace_s"] - float(lb)) / float(lb)
 
+    # ---- p50/p95/p99 of span durations per stage track (trace-side
+    # complement of the registry histograms' interpolated quantiles)
+    for name, s in stages.items():
+        durs = sorted(b - a for a, b, _, _ in spans[("stage", name)])
+        for key, q in (("p50_s", 0.50), ("p95_s", 0.95),
+                       ("p99_s", 0.99)):
+            s[key] = durs[min(int(q * len(durs)), len(durs) - 1)]
+
     gen_u = stages.get("generation", {}).get("utilization", 0.0)
     train_u = stages.get("train", {}).get("utilization", 0.0)
     report: Dict[str, Any] = {
@@ -153,6 +161,25 @@ def analyze_trace(trace: Dict[str, Any]) -> Dict[str, Any]:
         "ledger": ledger,
     }
     return report
+
+
+def summarize_metrics(snapshot: Dict[str, Any]) -> Dict[str, Any]:
+    """Condense a ``MetricsRegistry.snapshot()`` dict for reporting:
+    counters and gauges pass through, histograms reduce to count / mean
+    / interpolated p50/p95/p99 (computed here if the snapshot predates
+    quantile export)."""
+    from .metrics import QUANTILE_KEYS, hist_quantile
+    hists: Dict[str, Any] = {}
+    for name, h in snapshot.get("histograms", {}).items():
+        count = h.get("count", 0)
+        entry = {"count": count,
+                 "mean": (h.get("sum", 0.0) / count) if count else 0.0}
+        for key, q in QUANTILE_KEYS:
+            entry[key] = h.get(key, hist_quantile(h, q))
+        hists[name] = entry
+    return {"counters": dict(snapshot.get("counters", {})),
+            "gauges": dict(snapshot.get("gauges", {})),
+            "histograms": hists}
 
 
 def check_report(report: Dict[str, Any], *, min_stages: int = 0,
@@ -202,7 +229,31 @@ def _human(report: Dict[str, Any]) -> str:
                      f"max={sv['max_staleness']} dropped={sv['dropped']} "
                      f"| idle gen={sv['generation_idle_fraction']:.1%} "
                      f"train={sv['train_idle_fraction']:.1%}")
+    mx = report.get("metrics")
+    if mx and mx.get("histograms"):
+        lines.extend(_hist_lines(mx))
     return "\n".join(lines)
+
+
+def _hist_lines(mx: Dict[str, Any]) -> List[str]:
+    lines = ["histogram              count      mean       p50"
+             "       p95       p99"]
+    for name, h in sorted(mx["histograms"].items()):
+        lines.append(f"  {name:<20} {h['count']:6d}  {h['mean']:8.3f}"
+                     f"  {h['p50']:8.3f}  {h['p95']:8.3f}"
+                     f"  {h['p99']:8.3f}")
+    return lines
+
+
+def _human_metrics(mx: Dict[str, Any]) -> str:
+    """Standalone registry-snapshot summary (no trace)."""
+    lines: List[str] = []
+    for kind in ("counters", "gauges"):
+        for name, v in sorted(mx.get(kind, {}).items()):
+            lines.append(f"{kind[:-1]:<8} {name:<24} {v:g}")
+    if mx.get("histograms"):
+        lines.extend(_hist_lines(mx))
+    return "\n".join(lines) or "(empty snapshot)"
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -213,7 +264,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     a = sub.add_parser("analyze",
                        help="per-stage utilization, bubbles, ledger "
                             "cross-checks; nonzero exit on gate failure")
-    a.add_argument("trace", help="Chrome-trace JSON written by Tracer.dump")
+    a.add_argument("trace", nargs="?",
+                   help="Chrome-trace JSON written by Tracer.dump "
+                        "(optional when only --metrics is inspected)")
     a.add_argument("--json", action="store_true",
                    help="emit the full report as JSON instead of a summary")
     a.add_argument("--min-stages", type=int, default=0,
@@ -221,11 +274,37 @@ def main(argv: Optional[List[str]] = None) -> int:
                         "utilization")
     a.add_argument("--max-tput-err", type=float, default=0.01,
                    help="max relative error vs the conservation ledger")
+    a.add_argument("--metrics", metavar="PATH",
+                   help="registry snapshot JSON (from --metrics on a "
+                        "launcher) to summarize alongside the trace: "
+                        "counters, gauges, histogram p50/p95/p99")
     args = ap.parse_args(argv)
+    if not args.trace and not args.metrics:
+        ap.error("a trace file and/or --metrics PATH is required")
 
-    with open(args.trace) as f:
-        trace = json.load(f)
-    report = analyze_trace(trace)
+    if args.trace:
+        with open(args.trace) as f:
+            trace = json.load(f)
+        report = analyze_trace(trace)
+    else:
+        report = None
+    if args.metrics:
+        with open(args.metrics) as f:
+            metrics = summarize_metrics(json.load(f))
+    else:
+        metrics = None
+
+    if report is None:
+        # metrics-only inspection: no trace gates to check
+        if args.json:
+            print(json.dumps({"metrics": metrics, "failures": []},
+                             indent=2, sort_keys=True, default=str))
+        else:
+            print(_human_metrics(metrics))
+        return 0
+
+    if metrics is not None:
+        report["metrics"] = metrics
     fails = check_report(report, min_stages=args.min_stages,
                          max_tput_err=args.max_tput_err)
     if args.json:

@@ -50,7 +50,9 @@ class Gauge:
 
 class Histogram:
     """Fixed upper-bound buckets plus an overflow bucket; tracks sum and
-    count so the mean survives export."""
+    count so the mean survives export.  Quantiles are estimated by linear
+    interpolation inside the bucket that holds the target rank
+    (Prometheus-style), so p50/p95/p99 survive export too."""
 
     __slots__ = ("buckets", "counts", "sum", "count")
 
@@ -73,6 +75,78 @@ class Histogram:
     @property
     def mean(self) -> float:
         return self.sum / self.count if self.count else 0.0
+
+    def quantile(self, q: float) -> float:
+        """Interpolated q-quantile (0 ≤ q ≤ 1) from the bucket counts."""
+        return hist_quantile({"buckets": self.buckets,
+                              "counts": self.counts}, q)
+
+    def frac_ge(self, x: float) -> float:
+        """Estimated fraction of observations ≥ x (interpolated CDF
+        complement) — the burn-rate detectors' tail probe."""
+        return hist_frac_ge({"buckets": self.buckets,
+                             "counts": self.counts}, x)
+
+
+QUANTILE_KEYS = (("p50", 0.50), ("p95", 0.95), ("p99", 0.99))
+
+
+def hist_quantile(h: Dict, q: float) -> float:
+    """Interpolated quantile from an exported histogram dict (the
+    ``{"buckets": [...], "counts": [...]}`` shape ``snapshot()`` emits).
+
+    Each finite bucket i covers ``(bounds[i-1], bounds[i]]`` (the first
+    covers ``[min(0, bounds[0]), bounds[0]]``); the rank is interpolated
+    linearly inside its bucket.  The overflow bucket has no upper edge,
+    so any rank landing there reports the last finite bound — a floor,
+    which is the conservative direction for SLO tail checks."""
+    bounds = [float(b) for b in h["buckets"]]
+    counts = [int(c) for c in h["counts"]]
+    total = sum(counts)
+    if total <= 0:
+        return 0.0
+    target = min(max(q, 0.0), 1.0) * total
+    cum = 0.0
+    for i, c in enumerate(counts):
+        if cum + c >= target and c > 0:
+            if i >= len(bounds):               # overflow: no upper edge
+                return bounds[-1]
+            lo = bounds[i - 1] if i > 0 else min(0.0, bounds[0])
+            hi = bounds[i]
+            return lo + (hi - lo) * (target - cum) / c
+        cum += c
+    return bounds[-1]
+
+
+def hist_frac_ge(h: Dict, x: float) -> float:
+    """Estimated fraction of observations ≥ x from an exported histogram
+    dict, linearly interpolating inside the bucket containing x."""
+    bounds = [float(b) for b in h["buckets"]]
+    counts = [int(c) for c in h["counts"]]
+    total = sum(counts)
+    if total <= 0:
+        return 0.0
+    below = 0.0
+    for i, c in enumerate(counts):
+        lo = bounds[i - 1] if 0 < i < len(bounds) else (
+            min(0.0, bounds[0]) if i == 0 else bounds[-1])
+        if i >= len(bounds):                   # overflow bucket: all ≥ last
+            break
+        hi = bounds[i]
+        if hi < x:
+            below += c
+        elif lo < x:
+            below += c * (x - lo) / (hi - lo) if hi > lo else 0.0
+        # buckets entirely ≥ x contribute nothing to `below`
+    return max(0.0, min(1.0, (total - below) / total))
+
+
+def _hist_export(buckets, counts, total, count) -> Dict:
+    h = {"buckets": list(buckets), "counts": list(counts),
+         "sum": total, "count": count}
+    for key, q in QUANTILE_KEYS:
+        h[key] = hist_quantile(h, q)
+    return h
 
 
 class MetricsRegistry:
@@ -111,8 +185,7 @@ class MetricsRegistry:
                          for n, c in sorted(self._counters.items())},
             "gauges": {n: g.value for n, g in sorted(self._gauges.items())},
             "histograms": {
-                n: {"buckets": list(h.buckets), "counts": list(h.counts),
-                    "sum": h.sum, "count": h.count}
+                n: _hist_export(h.buckets, h.counts, h.sum, h.count)
                 for n, h in sorted(self._histograms.items())},
         }
 
@@ -143,10 +216,8 @@ def snapshot_delta(cur: Dict, prev: Dict) -> Dict:
         if p is None or list(p.get("buckets", [])) != list(h["buckets"]):
             out["histograms"][n] = dict(h)
             continue
-        out["histograms"][n] = {
-            "buckets": list(h["buckets"]),
-            "counts": [a - b for a, b in zip(h["counts"], p["counts"])],
-            "sum": h["sum"] - p["sum"],
-            "count": h["count"] - p["count"],
-        }
+        counts = [a - b for a, b in zip(h["counts"], p["counts"])]
+        out["histograms"][n] = _hist_export(
+            h["buckets"], counts, h["sum"] - p["sum"],
+            h["count"] - p["count"])
     return out

@@ -55,6 +55,11 @@ class Tracer:
         # letters: X complete-span, B/E begin/end, i instant, C counter.
         self._events: List[Tuple] = []
         self._open: Dict[Tuple[str, str], List[str]] = {}
+        # streaming consumers (e.g. the health monitor): called with the
+        # raw event tuple fields on every record.  Empty by default, so
+        # the recording hot path stays a tuple append plus one falsy
+        # check.
+        self._sinks: List[Any] = []
         # free-form run metadata (e.g. the simulator's conservation
         # ledger) — exported under Chrome's "otherData" key so the
         # analyzer can cross-check trace-derived quantities against it.
@@ -66,16 +71,30 @@ class Tracer:
         Simulators must NOT use this — they pass sim-time directly."""
         return time.perf_counter() - self._wall0
 
+    def add_sink(self, fn: Any) -> None:
+        """Register a streaming consumer called as
+        ``fn(ph, group, track, name, t, dur, args)`` on every recorded
+        event (the health monitor's ``on_trace_event`` fits this)."""
+        self._sinks.append(fn)
+
+    def _feed(self, ev: Tuple) -> None:
+        for fn in self._sinks:
+            fn(*ev)
+
     def span(self, group: str, track: str, name: str, t: float,
              dur: float, **args: Any) -> None:
         """A complete span ``[t, t+dur)`` (seconds) on ``group/track``."""
         self._events.append(("X", group, track, name, t, dur, args))
+        if self._sinks:
+            self._feed(self._events[-1])
 
     def begin(self, group: str, track: str, name: str, t: float,
               **args: Any) -> None:
         """Open a nested span; close with :meth:`end` on the same track."""
         self._open.setdefault((group, track), []).append(name)
         self._events.append(("B", group, track, name, t, 0.0, args))
+        if self._sinks:
+            self._feed(self._events[-1])
 
     def end(self, group: str, track: str, t: float, **args: Any) -> str:
         """Close the innermost open span on ``group/track``."""
@@ -84,16 +103,22 @@ class Tracer:
             raise TraceError(f"end() without begin() on {group}/{track}")
         name = stack.pop()
         self._events.append(("E", group, track, name, t, 0.0, args))
+        if self._sinks:
+            self._feed(self._events[-1])
         return name
 
     def instant(self, group: str, track: str, name: str, t: float,
                 **args: Any) -> None:
         self._events.append(("i", group, track, name, t, 0.0, args))
+        if self._sinks:
+            self._feed(self._events[-1])
 
     def counter(self, group: str, name: str, t: float,
                 **values: float) -> None:
         """A sampled counter series (stacked area chart in Perfetto)."""
         self._events.append(("C", group, name, name, t, 0.0, values))
+        if self._sinks:
+            self._feed(self._events[-1])
 
     # ------------------------------------------------------------- querying
     @property

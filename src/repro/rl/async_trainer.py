@@ -57,6 +57,10 @@ class TrainerConfig:
     # bit-identical, including rng streams.  Shared with the paged engine.
     trace: Optional[Any] = None
     metrics: Optional[Any] = None        # repro.obs.MetricsRegistry
+    # online health monitor (repro.obs.HealthMonitor, wall-clock
+    # timebase): stall/staleness/depth feeds plus a throttled poll per
+    # loop iteration.  None = no hooks, bit-identical run.
+    monitor: Optional[Any] = None
 
 
 def _batch_from_rollouts(rollouts: List[Rollout], seq_len: int,
@@ -134,6 +138,11 @@ class AsyncGRPOTrainer:
                              f"(expected 'static' or 'paged')")
         self._group_counter = 0
         self.history: List[Dict] = []
+        self._last_poll = 0.0
+        if tc.monitor is not None and tc.trace is not None:
+            # stream the trainer/engine stage spans into the monitor's
+            # bubble detector as they are recorded
+            tc.trace.add_sink(tc.monitor.on_trace_event)
 
     # ------------------------------------------------------------- producer
     def produce(self) -> Dict:
@@ -146,6 +155,9 @@ class AsyncGRPOTrainer:
             if tr is not None:
                 tr.instant("stage", "generation", "stall_capacity", tr.now(),
                            in_flight=self.buffer.ctl.in_flight)
+            mon = self.tc.monitor
+            if mon is not None:
+                mon.on_stall("trainer", mon.now(), "capacity")
             return {"launched": 0}
         self.buffer.launch(n)
         t0 = tr.now() if tr is not None else 0.0
@@ -176,9 +188,20 @@ class AsyncGRPOTrainer:
     # ------------------------------------------------------------- consumer
     def train_one(self) -> Optional[Dict]:
         need = self.tc.group_size * self.tc.prompts_per_step
+        mon = self.tc.monitor
         if not self.buffer.ready(need):
+            if mon is not None:
+                mon.on_stall("trainer", mon.now(), "data")
             return None
         batch_rollouts = self.buffer.pop_batch(need)
+        if mon is not None:
+            now = mon.now()
+            version = self.buffer.version
+            eta = self.tc.staleness.eta
+            for r in batch_rollouts:
+                mon.on_staleness("trainer", now, version - r.version, eta)
+            mon.on_buffer("trainer", now, len(self.buffer),
+                          self.buffer.ctl.capacity)
         tr = self.tc.trace
         t0 = tr.now() if tr is not None else 0.0
         batch = _batch_from_rollouts(batch_rollouts, self.tc.seq_len,
@@ -196,10 +219,16 @@ class AsyncGRPOTrainer:
     def run(self, steps: Optional[int] = None, log_every: int = 5,
             verbose: bool = True) -> List[Dict]:
         steps = steps or self.tc.total_steps
+        mon = self.tc.monitor
         step = 0
         while step < steps:
             self.produce()
             m = self.train_one()
+            if mon is not None:
+                now = mon.now()
+                if now - self._last_poll >= mon.cfg.poll_interval_s:
+                    self._last_poll = now
+                    mon.poll(now)
             if m is None:
                 continue
             step += 1

@@ -43,6 +43,12 @@ class RolloutBuffer:
         # default-off observability (repro.obs.MetricsRegistry): None →
         # every hook below is skipped, behavior bit-identical
         self.metrics = metrics
+        if self.metrics is not None:
+            # publish the bounds once so registry consumers (the health
+            # monitor's staleness-burn and depth detectors) can judge
+            # the histogram/gauge values against them
+            self.metrics.gauge("buffer/eta").set(self.config.eta)
+            self.metrics.gauge("buffer/capacity").set(self.ctl.capacity)
 
     # ------------------------------------------------------------- producer
     def can_launch(self, n: int = 1) -> bool:

@@ -259,7 +259,7 @@ class PagedEngine:
     def __init__(self, cfg: ModelConfig, store: WeightStore,
                  gen: Optional[GenConfig] = None,
                  serve: Optional[ServeConfig] = None, rng_seed: int = 0,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None, monitor=None):
         if cfg.family not in ("dense", "vlm"):
             raise ValueError(
                 f"paged serving covers the dense-transformer family; "
@@ -269,6 +269,10 @@ class PagedEngine:
         # wall-clock tracer (repro.obs); None = zero-cost no-op — the
         # token stream is bit-identical either way (tests/test_obs.py)
         self._tracer = tracer
+        # wall-clock health monitor (repro.obs.HealthMonitor): decode /
+        # prefill stage spans feed its bubble detector.  None = no-op;
+        # tests/test_monitor.py asserts token identity off vs on.
+        self._monitor = monitor
         self.gen = gen or GenConfig()
         self.serve = serve or ServeConfig()
         self._rng = jax.random.PRNGKey(rng_seed)
@@ -713,6 +717,8 @@ class PagedEngine:
     def _decode_batch(self, slots: List[int], now: float) -> None:
         tr = self._tracer
         t0 = tr.now() if tr is not None else 0.0
+        mon = self._monitor
+        m0 = mon.now() if mon is not None else 0.0
         if self.stats.decode_steps % max(self.gen.segment, 1) == 0:
             self._maybe_swap_weights()
         S = self.serve.max_slots
@@ -769,6 +775,8 @@ class PagedEngine:
             tr.counter("engine", "pages", tr.now(),
                        free=self.kv.free_pages,
                        occupancy=occ["page_occupancy"])
+        if mon is not None:
+            mon.on_stage_span("decode", m0, mon.now() - m0)
 
     def _fork_siblings(self, leader: _Request, last_logits: jax.Array,
                        now: float) -> None:
@@ -800,6 +808,8 @@ class PagedEngine:
     def _prefill_one(self, req: _Request) -> int:
         tr = self._tracer
         t0 = tr.now() if tr is not None else 0.0
+        mon = self._monitor
+        m0 = mon.now() if mon is not None else 0.0
         chunk = self.serve.prefill_chunk
         n = min(chunk, req.plen - req.prefill_done)
         toks = np.zeros((chunk,), np.int32)
@@ -831,6 +841,8 @@ class PagedEngine:
         if tr is not None:
             tr.span("engine", "prefill", "prefill_chunk", t0,
                     tr.now() - t0, tokens=n, slot=req.slot)
+        if mon is not None:
+            mon.on_stage_span("prefill", m0, mon.now() - m0)
         return n
 
     # -------------------------------------------------------------- frontend

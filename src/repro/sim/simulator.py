@@ -71,6 +71,7 @@ from repro.core.jobs import (AdmissionConfig, ControlPlane,
 from repro.core.plan import ScheduledPlan
 from repro.core.pool import JobSpec, PoolPlan
 from repro.obs.metrics import MetricsRegistry
+from repro.obs.monitor import HealthMonitor
 from repro.obs.trace import Tracer
 from .events import (EventQueue, FailureInjection, HandoffRecord, JobArrival,
                      JobFailure, JobStraggler, PlanSwapRecord, ReplanTrigger,
@@ -104,6 +105,14 @@ class SimConfig:
     # the tracer are sim-time seconds.
     trace: Optional[Tracer] = None
     metrics: Optional[MetricsRegistry] = None
+    # online health monitor (repro.obs.monitor): default-off.  When set,
+    # a self-re-arming "monitor_poll" event evaluates the detectors
+    # every monitor.cfg.poll_interval_s sim-seconds; with
+    # monitor_replan=True a straggler alert routes into the replan path
+    # (needs a replanner).  With monitor=None no poll events exist and
+    # runs are bit-identical (asserted in tests/test_monitor.py).
+    monitor: Optional[HealthMonitor] = None
+    monitor_replan: bool = False
 
 
 @dataclass
@@ -231,6 +240,7 @@ class AsyncRLSimulator:
         swap_hist_idx: List[int] = []         # stale_hist cut per swap
         tr = cfg.trace                        # None = zero-cost no-op
         mx = cfg.metrics
+        mon = cfg.monitor
 
         def close_epoch(now: float) -> None:
             epoch_stats.append(PlanEpochStat(
@@ -261,6 +271,8 @@ class AsyncRLSimulator:
                 stalls_capacity += 1      # generation pauses (paper Fig. 1)
                 if mx is not None:
                     mx.counter("sim/stalls_capacity").inc()
+                if mon is not None:
+                    mon.on_stall("sim", now, "capacity")
                 return
             in_flight += 1
             launched += 1
@@ -288,6 +300,9 @@ class AsyncRLSimulator:
             if mx is not None:
                 mx.counter("sim/rollouts_launched").inc()
                 mx.counter(f"sim/gen_busy_s/r{i}").inc(dur)
+            if mon is not None:
+                mon.on_gen_span("", i, now, dur, length)
+                mon.on_stage_span("generation", now, dur)
 
         def maybe_train(now: float) -> None:
             nonlocal steps, tokens_consumed, version, in_flight, consumed
@@ -310,6 +325,8 @@ class AsyncRLSimulator:
                 stalls_data += 1
                 if mx is not None:
                     mx.counter("sim/stalls_data").inc()
+                if mon is not None:
+                    mon.on_stall("sim", now, "data")
                 return
             batch = buffer[:B]
             del buffer[:B]
@@ -337,6 +354,13 @@ class AsyncRLSimulator:
                 for vtag, _ln in batch:
                     h.observe(version - vtag)
                 mx.counter("sim/rollouts_trained").inc(B)
+            if mon is not None:
+                for vtag, _ln in batch:
+                    mon.on_staleness("sim", now, version - vtag, cfg.eta)
+                mon.on_buffer("sim", now, len(buffer), capacity)
+                mon.on_stage_span("train", now, t_train)
+                if t_sync > 0.0:
+                    mon.on_stage_span("sync", now + t_train, t_sync)
             # resume capacity-paused replicas; drain a snapshot so a replica
             # that immediately re-pauses (capacity still full) is not popped
             # again in the same pass (that would spin forever whenever
@@ -381,6 +405,10 @@ class AsyncRLSimulator:
             state = "RUNNING"
             drain_scheduled = False
             last_commit = now
+            if mon is not None:
+                # new fleet = new rate distribution; stale evidence from
+                # the old plan must not trip the detectors
+                mon.reset()
             if tr is not None:
                 # the drain window: launches stopped replan_latency_s ago
                 tr.span("sim", "plan", "drain", now - elastic.replan_latency_s,
@@ -454,6 +482,8 @@ class AsyncRLSimulator:
 
         for i in range(n_rep):
             launch(i, 0.0)
+        if mon is not None:
+            q.push(mon.cfg.poll_interval_s, "monitor_poll", None)
 
         while len(q) and steps < cfg.n_steps:
             ev = q.pop()
@@ -514,6 +544,19 @@ class AsyncRLSimulator:
                 q.push(t + elastic.replan_latency_s, "replan_ready", None)
             elif ev.kind == "replan_ready":
                 commit_swap(t)
+            elif ev.kind == "monitor_poll":
+                for a in mon.poll(t):
+                    if (cfg.monitor_replan and replanner is not None
+                            and a.detector == "straggler"):
+                        trigger_replan(t, "monitor_straggler",
+                                       a.evidence["replica"])
+                # re-arm only while the sim can still make progress —
+                # otherwise the poll chain would keep an otherwise-dead
+                # run spinning forever
+                if (generating > 0 or len(buffer) >= B
+                        or drain_scheduled or state == "DRAINING"):
+                    q.push(t + mon.cfg.poll_interval_s,
+                           "monitor_poll", None)
             # trainer may have become unblocked by time passing
             if t >= trainer_busy_until:
                 maybe_train(t)
@@ -663,6 +706,11 @@ class MultiSimConfig:
     # no-op when None; sim-time timebase
     trace: Optional[Tracer] = None
     metrics: Optional[MetricsRegistry] = None
+    # online health monitor (see SimConfig.monitor): default-off.  With
+    # monitor_replan=True a sustained straggler / imbalance alert routes
+    # into the pool replan path ahead of the throughput-EWMA trigger.
+    monitor: Optional[HealthMonitor] = None
+    monitor_replan: bool = False
 
 
 @dataclass
@@ -886,7 +934,8 @@ class MultiJobSimulator:
                     (("arrivals", self.cfg.arrivals),
                      ("depart_on_completion",
                       self.cfg.depart_on_completion),
-                     ("trend", self.cfg.trend)) if v]
+                     ("trend", self.cfg.trend),
+                     ("monitor_replan", self.cfg.monitor_replan)) if v]
             if need:
                 raise ValueError(
                     f"MultiSimConfig.{'/'.join(need)} require a replanner: "
@@ -910,12 +959,14 @@ class MultiJobSimulator:
 
         tr = cfg.trace                         # None = zero-cost no-op
         mx = cfg.metrics
+        mon = cfg.monitor
 
         control: Optional[ControlPlane] = None
         if (cfg.arrivals or cfg.admission is not None
                 or cfg.depart_on_completion):
             control = ControlPlane(replanner.cluster, replanner.pool_cfg,
-                                   cfg.admission, tracer=tr, metrics=mx)
+                                   cfg.admission, tracer=tr, metrics=mx,
+                                   monitor=mon)
             control.register_initial(cur_pool.jobs)
 
         state = "RUNNING"                      # pool-level: RUNNING | DRAINING
@@ -938,6 +989,8 @@ class MultiJobSimulator:
             if jr.in_flight >= jr.capacity:
                 jr.paused.append(i)
                 jr.stalls_capacity += 1
+                if mon is not None:
+                    mon.on_stall(jr.name, now, "capacity")
                 return
             jr.in_flight += 1
             jr.launched += 1
@@ -962,6 +1015,9 @@ class MultiJobSimulator:
                             cfg.reward_cost_s, job=jr.name)
             if mx is not None:
                 mx.counter(f"sim/{jr.name}/rollouts_launched").inc()
+            if mon is not None:
+                mon.on_gen_span(jr.name, i, now, dur, length)
+                mon.on_stage_span("generation", now, dur)
 
         def maybe_train(jr: _JobRun, now: float) -> None:
             if jr.steps >= jr.n_steps or now < jr.trainer_busy_until:
@@ -974,6 +1030,8 @@ class MultiJobSimulator:
                 jr.buffer[:] = fresh
             if len(jr.buffer) < jr.B:
                 jr.stalls_data += 1
+                if mon is not None:
+                    mon.on_stall(jr.name, now, "data")
                 return
             batch = jr.buffer[: jr.B]
             del jr.buffer[: jr.B]
@@ -999,6 +1057,14 @@ class MultiJobSimulator:
                 for vtag, _ln in batch:
                     h.observe(jr.version - vtag)
                 mx.counter(f"sim/{jr.name}/rollouts_trained").inc(jr.B)
+            if mon is not None:
+                for vtag, _ln in batch:
+                    mon.on_staleness(jr.name, now, jr.version - vtag,
+                                     jr.eta)
+                mon.on_buffer(jr.name, now, len(jr.buffer), jr.capacity)
+                mon.on_stage_span("train", now, jr.t_train)
+                if jr.t_sync > 0.0:
+                    mon.on_stage_span("sync", now + jr.t_train, jr.t_sync)
             # snapshot-drain: see the single-job maybe_train note
             resume = jr.paused[:]
             jr.paused.clear()
@@ -1113,6 +1179,10 @@ class MultiJobSimulator:
                     jr.idle.clear()
                 else:
                     jr.commit(new_plan, now, drain_reason, drain_t0)
+                    if mon is not None:
+                        # new slice = new rate distribution; evidence from
+                        # the old fleet must not trip the detectors
+                        mon.reset_job(jr.name)
                     replace_down(jr, now)
                     for i in range(jr.n_rep):
                         launch(jr, i, now)
@@ -1157,6 +1227,8 @@ class MultiJobSimulator:
         for jr in jobs.values():
             for i in range(jr.n_rep):
                 launch(jr, i, 0.0)
+        if mon is not None:
+            q.push(mon.cfg.poll_interval_s, "monitor_poll", None)
 
         def all_done() -> bool:
             if pending_submits or (control is not None and control.queued()):
@@ -1267,6 +1339,31 @@ class MultiJobSimulator:
                 q.push(t + elastic.replan_latency_s, "pool_ready", None)
             elif ev.kind == "pool_ready":
                 commit_pool(t)
+            elif ev.kind == "monitor_poll":
+                for a in mon.poll(t):
+                    if not cfg.monitor_replan or replanner is None:
+                        continue
+                    if a.detector == "straggler":
+                        jr = jobs.get(a.evidence.get("job"))
+                        if jr is not None and jr.steps < jr.n_steps:
+                            trigger_replan(t, jr, a.evidence["replica"],
+                                           "monitor_straggler")
+                    elif a.detector == "buffer":
+                        name = a.evidence.get("job")
+                        jr = jobs.get(name)
+                        if jr is not None and jr.steps < jr.n_steps:
+                            request_replan(
+                                t, f"monitor_{a.evidence['mode']}:{name}")
+                # re-arm only while some job can still make progress —
+                # otherwise the poll chain would keep a dead pool
+                # spinning forever
+                if (drain_scheduled or state == "DRAINING"
+                        or any(jr.steps < jr.n_steps
+                               and (jr.generating > 0
+                                    or len(jr.buffer) >= jr.B)
+                               for jr in jobs.values())):
+                    q.push(t + mon.cfg.poll_interval_s,
+                           "monitor_poll", None)
             for jr in jobs.values():
                 if t >= jr.trainer_busy_until:
                     maybe_train(jr, t)

@@ -1,0 +1,239 @@
+"""Perf-regression harness + histogram quantiles: metric extraction from
+BENCH payloads, direction-aware tolerance checks, the regress CLI's exit
+codes, and the interpolated p50/p95/p99 surfaced through snapshots."""
+import json
+
+import pytest
+
+from repro.obs import MetricsRegistry, hist_frac_ge, hist_quantile
+from repro.obs.regress import (classify_direction, compare_dirs,
+                               compare_metrics, extract_metrics,
+                               format_report, is_wallclock)
+from repro.obs.regress import main as regress_main
+
+
+# ================================================================ quantiles
+def test_histogram_quantiles_interpolated():
+    mx = MetricsRegistry()
+    h = mx.histogram("lat", buckets=(1.0, 2.0, 4.0, 8.0))
+    for v in (0.5, 1.5, 2.5, 3.0, 3.5, 6.0):
+        h.observe(v)
+    assert h.quantile(0.0) <= h.quantile(0.5) <= h.quantile(0.99)
+    # 4/6 samples ≤ 4.0 → p50 lands inside the (2, 4] bucket
+    assert 2.0 < h.quantile(0.5) <= 4.0
+    assert 4.0 < h.quantile(0.99) <= 8.0
+    snap = mx.snapshot()["histograms"]["lat"]
+    for k in ("p50", "p95", "p99"):
+        assert k in snap
+    assert snap["p50"] == pytest.approx(h.quantile(0.5))
+
+
+def test_histogram_quantile_edge_cases():
+    mx = MetricsRegistry()
+    h = mx.histogram("x", buckets=(1.0, 2.0))
+    assert h.quantile(0.5) == 0.0           # empty histogram
+    for _ in range(4):
+        h.observe(100.0)                    # all overflow
+    # overflow bucket has no finite upper edge: conservative floor at the
+    # last finite bound rather than an invented extrapolation
+    assert h.quantile(0.5) == 2.0
+    assert h.frac_ge(1.5) == pytest.approx(1.0)
+
+
+def test_hist_frac_ge_interpolates():
+    mx = MetricsRegistry()
+    h = mx.histogram("s", buckets=(2.0, 4.0))
+    for _ in range(10):
+        h.observe(3.0)                      # all inside (2, 4]
+    snap = mx.snapshot()["histograms"]["s"]
+    assert hist_frac_ge(snap, 3.0) == pytest.approx(0.5)
+    assert hist_frac_ge(snap, 2.0) == pytest.approx(1.0)
+    assert hist_frac_ge(snap, 4.0) == pytest.approx(0.0)
+    assert hist_quantile(snap, 0.5) == pytest.approx(3.0)
+
+
+def test_snapshot_delta_recomputes_quantiles():
+    mx = MetricsRegistry()
+    h = mx.histogram("d", buckets=(1.0, 2.0, 4.0))
+    h.observe(0.5)
+    s0 = mx.snapshot()
+    for _ in range(8):
+        h.observe(3.0)
+    from repro.obs import snapshot_delta
+    d = snapshot_delta(mx.snapshot(), s0)["histograms"]["d"]
+    assert d["count"] == 8
+    # the delta's quantiles describe only the new observations
+    assert 2.0 < d["p50"] <= 4.0
+
+
+# ============================================================== extraction
+PAYLOAD = {
+    "name": "fig_demo",
+    "rows": ["alloc,120,throughput=42608 tok/s ratio=1.16x",
+             "swap,15,stall_s=0.35"],
+    "token_identical": True,
+    "g_eff": 0.87,
+    "steps": 12,
+}
+
+
+def test_extract_metrics_from_rows_and_fields():
+    m = extract_metrics(PAYLOAD)
+    assert m["alloc/throughput"] == pytest.approx(42608.0)
+    assert m["alloc/ratio"] == pytest.approx(1.16)
+    assert m["swap/stall_s"] == pytest.approx(0.35)
+    assert m["token_identical"] == 1.0      # bools are 0/1 metrics
+    assert m["g_eff"] == pytest.approx(0.87)
+    assert "name" not in m
+
+
+def test_direction_classification():
+    assert classify_direction("alloc/throughput") == "higher"
+    assert classify_direction("e2e/tput") == "higher"
+    assert classify_direction("hit_rate") == "higher"
+    assert classify_direction("token_identical") == "higher"
+    assert classify_direction("swap/stall_s") == "lower"
+    assert classify_direction("p99/latency_s") == "lower"
+    assert classify_direction("buffer/dropped") == "lower"
+    assert classify_direction("mystery_number") == "both"
+    # machine-dependent wall-clock is skipped by default
+    assert is_wallclock("alloc/us")
+    assert is_wallclock("sched/time_us")
+    assert is_wallclock("table5/ours")
+    assert not is_wallclock("alloc/throughput")
+
+
+def test_compare_metrics_direction_aware():
+    # checks come back sorted by metric: latency, other, throughput
+    base = {"a/throughput": 100.0, "a/latency": 1.0, "a/other": 5.0}
+    # throughput up + latency down: improvements, not regressions
+    up = compare_metrics(base, {"a/throughput": 120.0, "a/latency": 0.5,
+                                "a/other": 5.0}, tol=0.05)
+    assert [c["status"] for c in up] == ["improved", "ok", "improved"]
+    # throughput down / latency up beyond tolerance: regressions
+    down = compare_metrics(base, {"a/throughput": 80.0, "a/latency": 2.0,
+                                  "a/other": 5.0}, tol=0.05)
+    assert [c["status"] for c in down] == ["regressed", "ok", "regressed"]
+    # inside the tolerance band: ok (a/other is two-sided, 4% drift ok)
+    ok = compare_metrics(base, {"a/throughput": 97.0, "a/latency": 1.04,
+                                "a/other": 5.2}, tol=0.05)
+    assert [c["status"] for c in ok] == ["ok", "ok", "ok"]
+    missing = compare_metrics(base, {"a/throughput": 100.0}, tol=0.05)
+    assert {c["status"] for c in missing} == {"ok", "missing"}
+    # stall_s is a wall-clock metric: skipped, never regressed
+    wc = compare_metrics({"a/stall_s": 1.0}, {"a/stall_s": 9.0}, tol=0.05)
+    assert [c["status"] for c in wc] == ["skipped"]
+    wc = compare_metrics({"a/stall_s": 1.0}, {"a/stall_s": 9.0}, tol=0.05,
+                         include_wallclock=True)
+    assert [c["status"] for c in wc] == ["regressed"]
+
+
+# ============================================================ compare_dirs
+def _write_payload(dirpath, payload):
+    p = dirpath / f"BENCH_{payload['name']}.json"
+    p.write_text(json.dumps(payload))
+    return p
+
+
+def test_compare_dirs_pass_and_fail(tmp_path):
+    basedir = tmp_path / "base"
+    rundir = tmp_path / "run"
+    basedir.mkdir(), rundir.mkdir()
+    _write_payload(basedir, PAYLOAD)
+    _write_payload(rundir, PAYLOAD)         # identical → pass
+    rep = compare_dirs(str(basedir), str(rundir))
+    assert rep["ok"] and rep["n_regressions"] == 0
+    assert rep["n_checks"] > 0
+    assert "PASS" in format_report(rep)
+
+    bad = json.loads(json.dumps(PAYLOAD))   # degrade throughput 40%
+    bad["rows"][0] = "alloc,120,throughput=25000 tok/s ratio=1.16x"
+    bad["token_identical"] = False          # and break an invariant bool
+    _write_payload(rundir, bad)
+    rep = compare_dirs(str(basedir), str(rundir))
+    assert not rep["ok"]
+    failed = {c["metric"] for p in rep["payloads"] for c in p["checks"]
+              if c["status"] == "regressed"}
+    assert failed == {"alloc/throughput", "token_identical"}
+    assert "REGRESSION" in format_report(rep)
+
+
+def test_compare_dirs_missing_payload_strict(tmp_path):
+    basedir = tmp_path / "base"
+    rundir = tmp_path / "run"
+    basedir.mkdir(), rundir.mkdir()
+    _write_payload(basedir, PAYLOAD)        # baseline exists, run empty
+    rep = compare_dirs(str(basedir), str(rundir))
+    assert rep["ok"]                        # lenient: subset runs pass
+    assert rep["missing_payloads"] == ["fig_demo"]
+    strict = compare_dirs(str(basedir), str(rundir), strict=True)
+    assert not strict["ok"]
+
+
+def test_wallclock_skipped_unless_requested(tmp_path):
+    basedir = tmp_path / "base"
+    rundir = tmp_path / "run"
+    basedir.mkdir(), rundir.mkdir()
+    p = {"name": "t", "rows": ["sched,100,ours=2.1"], "wall_s": 9.0}
+    _write_payload(basedir, p)
+    slow = {"name": "t", "rows": ["sched,900,ours=8.4"], "wall_s": 90.0}
+    _write_payload(rundir, slow)
+    rep = compare_dirs(str(basedir), str(rundir))    # 10× slower wall: pass
+    assert rep["ok"]
+    rep = compare_dirs(str(basedir), str(rundir), include_wallclock=True)
+    assert not rep["ok"]
+
+
+# ==================================================================== CLI
+def test_regress_cli_exit_codes(tmp_path, capsys):
+    basedir = tmp_path / "base"
+    rundir = tmp_path / "run"
+    basedir.mkdir(), rundir.mkdir()
+    _write_payload(basedir, PAYLOAD)
+    _write_payload(rundir, PAYLOAD)
+    assert regress_main(["--baselines", str(basedir),
+                         "--run", str(rundir)]) == 0
+    bad = json.loads(json.dumps(PAYLOAD))
+    bad["g_eff"] = 0.4                      # −54%, way past tolerance
+    _write_payload(rundir, bad)
+    report_path = tmp_path / "report.json"
+    capsys.readouterr()                     # drop the text report above
+    assert regress_main(["--baselines", str(basedir), "--run", str(rundir),
+                         "--json", "--report", str(report_path)]) == 2
+    out = json.loads(capsys.readouterr().out)
+    assert not out["ok"]
+    saved = json.loads(report_path.read_text())
+    assert saved["n_regressions"] >= 1
+    # a generous tolerance band waves the same delta through
+    assert regress_main(["--baselines", str(basedir), "--run", str(rundir),
+                         "--tol", "0.9"]) == 0
+    # missing baselines dir is an error, not a silent pass
+    assert regress_main(["--baselines", str(tmp_path / "nope"),
+                         "--run", str(rundir)]) == 2
+
+
+def test_regress_module_dispatch():
+    """python -m repro.obs regress … routes to the regress CLI."""
+    from repro.obs.__main__ import _dispatch
+    assert _dispatch(["regress", "--baselines", "/nonexistent-xyz",
+                      "--run", "."]) == 2
+
+
+# ------------------------------------------------- analyze --metrics PATH
+def test_summarize_metrics_roundtrip(tmp_path):
+    from repro.obs.analyze import summarize_metrics
+    mx = MetricsRegistry()
+    mx.counter("c").inc(3)
+    mx.gauge("g").set(7.0)
+    h = mx.histogram("h", buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.5, 3.0):
+        h.observe(v)
+    path = tmp_path / "metrics.json"
+    mx.to_json(str(path))
+    snap = json.loads(path.read_text())
+    rep = summarize_metrics(snap)
+    assert rep["counters"]["c"] == 3
+    assert rep["gauges"]["g"] == 7.0
+    assert rep["histograms"]["h"]["count"] == 3
+    assert rep["histograms"]["h"]["p50"] == pytest.approx(
+        hist_quantile(snap["histograms"]["h"], 0.5))
