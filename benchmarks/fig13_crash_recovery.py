@@ -1,0 +1,182 @@
+"""Figure 13 (ours): crash recovery — snapshot interval vs lost work vs
+snapshot overhead.
+
+A controller crash costs three things: the MTTR outage itself, the
+in-flight rollouts that die with the controller, and — without the
+write-ahead journal — every consumption since the last snapshot.  This
+sweep injects a mid-run ``ControllerCrash`` into the single-job
+simulator across snapshot intervals, with the journal on and off, and
+reports the loss each configuration eats; a separate leg charges a
+nonzero per-snapshot trainer pause to measure the cadence's overhead
+side of the trade.  A final pool-level row exercises the multi-tenant
+restore path (control plane + device ledger + per-job buffers).
+
+Bounded-loss gates (the benchmark *fails* if violated, not just drifts):
+
+* journal on  → ``lost == 0`` consumed rollouts at every interval;
+* journal off → the restored snapshot was at most one interval old;
+* every run completes its full step budget despite the crash;
+* a no-crash run with the manager attached is dataclass-identical to
+  one without (``identical=1``).
+
+``--report PATH`` additionally writes the sweep as a recovery-report
+JSON (CI uploads it as an artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core.cluster import paper_heterogeneous
+from repro.core.model_spec import PAPER_MODELS
+from repro.core.pool import JobSpec, schedule_pool
+from repro.core.scheduler import SchedulerConfig, schedule
+from repro.core.staleness import StalenessConfig
+from repro.recovery import RecoveryConfig, RecoveryManager
+from repro.sim import (AsyncRLSimulator, ControllerCrash, MultiJobSimulator,
+                       MultiSimConfig, SimConfig)
+from .common import P, bench_payload, csv_row, timed
+
+# filled by run(); benchmarks.run writes it to BENCH_<name>.json
+BENCH_JSON: dict = {}
+
+SPEC = PAPER_MODELS["1.5B"]
+SCHED_CFG = SchedulerConfig(tokens_per_step=2 ** 18, stable_iters=3,
+                            max_iters=12, adapt_delta=False)
+CLUSTER = paper_heterogeneous(16, 16)
+SIM = dict(n_steps=30, rollouts_per_step=64, eta=4, reward_cost_s=0.1)
+T_CRASH = 18.0
+MTTR = 3.0
+SNAPSHOT_COST = 4.0    # trainer pause per snapshot in the overhead leg
+
+
+def _pool():
+    cluster = paper_heterogeneous(8, 24)
+    cfg4 = SchedulerConfig(tokens_per_step=2 ** 18, stable_iters=3,
+                           max_iters=12, adapt_delta=False,
+                           staleness=StalenessConfig(eta=4))
+    cfg2 = SchedulerConfig(tokens_per_step=2 ** 18, stable_iters=3,
+                           max_iters=12, adapt_delta=False,
+                           staleness=StalenessConfig(eta=2))
+    return schedule_pool(
+        [JobSpec("j1.5b", PAPER_MODELS["1.5B"], P, cfg4, weight=1.0),
+         JobSpec("j7b", PAPER_MODELS["7B"], P, cfg2, weight=4.0)],
+        cluster)
+
+
+def run(tiny: bool = False, report_path: str = "") -> list[str]:
+    rows: list[str] = []
+    report: dict = {"sweep": [], "overhead": [], "pool": {}}
+    sim_kw = dict(SIM)
+    intervals = [2.5, 5.0, 10.0, 20.0]
+    if tiny:
+        sim_kw.update(n_steps=12, rollouts_per_step=32)
+        intervals = [5.0, 20.0]
+    plan = schedule(SPEC, CLUSTER, P, SCHED_CFG)
+
+    # -------------------------------------------- attached-but-unused gate
+    off, _ = timed(AsyncRLSimulator(plan, P, SimConfig(**sim_kw,
+                                                       seed=3)).run)
+    mgr = RecoveryManager(RecoveryConfig(interval_s=5.0))
+    on, _ = timed(AsyncRLSimulator(plan, P, SimConfig(
+        **sim_kw, seed=3, recovery=mgr)).run)
+    identical = on == off
+    assert identical, "recovery manager attached-but-unused is not free"
+    rows.append(csv_row("fig13/no_crash", 0,
+                        f"identical={int(identical)} "
+                        f"snapshots={mgr.n_snapshots}"))
+
+    # ------------------------------------- interval × journal loss sweep
+    for journal in (True, False):
+        for interval in intervals:
+            mgr = RecoveryManager(RecoveryConfig(
+                interval_s=interval, restore_latency_s=MTTR,
+                journal=journal))
+            r, us = timed(AsyncRLSimulator(plan, P, SimConfig(
+                **sim_kw, seed=3, recovery=mgr, check_invariants=True,
+                crashes=[ControllerCrash(T_CRASH)])).run)
+            [rv] = r.recoveries
+            # bounded-loss gates (module fails loudly on violation)
+            assert r.steps == sim_kw["n_steps"], (interval, r.steps)
+            assert rv.snapshot_age_s <= interval + 1e-9, \
+                (interval, rv.snapshot_age_s)
+            if journal:
+                assert rv.lost_consumed == 0, (interval, rv.lost_consumed)
+            tag = "journal" if journal else "snaponly"
+            rows.append(csv_row(
+                f"fig13/{tag}/interval{interval:g}", us,
+                f"lost={rv.lost_consumed} lostif={rv.lost_inflight} "
+                f"replayed={rv.journal_replayed} "
+                f"age={rv.snapshot_age_s:.2f} completed=1 "
+                f"wall={r.wall_time_s:.1f}s"))
+            report["sweep"].append({
+                "journal": journal, "interval_s": interval,
+                "t_crash": T_CRASH, "mttr_s": rv.mttr_s,
+                "snapshot_age_s": rv.snapshot_age_s,
+                "lost_consumed": rv.lost_consumed,
+                "lost_inflight": rv.lost_inflight,
+                "journal_replayed": rv.journal_replayed,
+                "wall_time_s": r.wall_time_s})
+
+    # ------------------------------------------- snapshot-cost overhead
+    # (cost must stay below the cadence — RecoveryConfig rejects a pause
+    # that starves the trainer — so the tightest interval is skipped)
+    for interval in [iv for iv in intervals if iv > SNAPSHOT_COST]:
+        mgr = RecoveryManager(RecoveryConfig(
+            interval_s=interval, snapshot_cost_s=SNAPSHOT_COST))
+        r, _ = timed(AsyncRLSimulator(plan, P, SimConfig(
+            **sim_kw, seed=3, recovery=mgr)).run)
+        frac = (r.wall_time_s - off.wall_time_s) / off.wall_time_s
+        rows.append(csv_row(
+            f"fig13/overhead/interval{interval:g}", 0,
+            f"overhead_frac={frac:.4f} snapshots={mgr.n_snapshots} "
+            f"wall={r.wall_time_s:.1f}s"))
+        report["overhead"].append({
+            "interval_s": interval, "snapshot_cost_s": SNAPSHOT_COST,
+            "n_snapshots": mgr.n_snapshots,
+            "overhead_frac": frac})
+
+    # --------------------------------------------- pool-level restore leg
+    pool = _pool()
+    n_steps = 4 if tiny else 8
+    mgr = RecoveryManager(RecoveryConfig(interval_s=5.0,
+                                         restore_latency_s=MTTR))
+    r, us = timed(MultiJobSimulator(pool, MultiSimConfig(
+        n_steps=n_steps, rollouts_per_step=32, check_invariants=True,
+        recovery=mgr, crashes=[ControllerCrash(11.0)])).run)
+    [rv] = r.recoveries
+    assert all(j.steps == n_steps for j in r.per_job.values())
+    assert rv.lost_consumed == 0, rv.lost_consumed
+    rows.append(csv_row(
+        "fig13/pool", us,
+        f"lost={rv.lost_consumed} lostif={rv.lost_inflight} "
+        f"replayed={rv.journal_replayed} jobs_completed={len(r.per_job)}"))
+    report["pool"] = {
+        "t_crash": 11.0, "lost_consumed": rv.lost_consumed,
+        "lost_inflight": rv.lost_inflight,
+        "journal_replayed": rv.journal_replayed,
+        "jobs_completed": len(r.per_job)}
+
+    if report_path:
+        with open(report_path, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        rows.append(csv_row("fig13/report", 0, f"-> {report_path}"))
+
+    global BENCH_JSON
+    BENCH_JSON = bench_payload("crash_recovery", rows, tiny=tiny,
+                               identical=identical)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced sweep (CI-sized)")
+    ap.add_argument("--report", default="",
+                    help="write the recovery-report JSON here")
+    args = ap.parse_args()
+    print("\n".join(run(tiny=args.tiny, report_path=args.report)))
+
+
+if __name__ == "__main__":
+    main()

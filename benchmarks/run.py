@@ -43,6 +43,7 @@ MODULES = [
     "fig10_prefix_sharing",
     "fig11_online_jobs",
     "fig12_radix_agentic",
+    "fig13_crash_recovery",
     "table5_scheduler_speed",
     "roofline_report",
 ]

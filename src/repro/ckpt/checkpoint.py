@@ -29,6 +29,16 @@ def _to_host(tree: Any) -> Any:
     return jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
 
 
+def _fsync_path(path: Path) -> None:
+    """fsync a file or directory by path (directory fsync is what makes a
+    just-renamed entry durable on POSIX)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save_checkpoint(directory: str | Path, step: int, state: Dict,
                     keep: int = 3) -> Path:
     """Atomically persist ``state`` (arbitrary pytree dict) for ``step``."""
@@ -41,11 +51,18 @@ def save_checkpoint(directory: str | Path, step: int, state: Dict,
             f.flush()
             os.fsync(f.fileno())
         meta = {"step": step, "keys": sorted(state)}
-        (tmp / "META.json").write_text(json.dumps(meta))
+        with open(tmp / "META.json", "w") as f:
+            f.write(json.dumps(meta))
+            f.flush()
+            os.fsync(f.fileno())
         final = directory / f"step-{step:08d}"
         if final.exists():
             shutil.rmtree(final)
         os.rename(tmp, final)
+        # the rename is only durable once the parent directory entry is:
+        # without this fsync a crash right after return can roll the
+        # directory back to a state where the checkpoint never existed
+        _fsync_path(directory)
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
@@ -58,6 +75,24 @@ def _gc(directory: Path, keep: int) -> None:
                    if p.name.startswith("step-"))
     for p in ckpts[:-keep]:
         shutil.rmtree(p, ignore_errors=True)
+    sweep_tmp(directory)
+
+
+def sweep_tmp(directory: str | Path) -> List[Path]:
+    """Remove ``tmp-*`` dirs left by a save that crashed mid-write.
+
+    A crashed ``save_checkpoint`` leaves its ``tempfile.mkdtemp`` dir
+    behind (the except-path cleanup never ran); those dirs are never
+    renamed into ``step-*`` so they would leak forever.  Called on
+    ``CheckpointManager`` init and after every save."""
+    directory = Path(directory)
+    if not directory.exists():
+        return []
+    stale = sorted(p for p in directory.iterdir()
+                   if p.is_dir() and p.name.startswith("tmp-"))
+    for p in stale:
+        shutil.rmtree(p, ignore_errors=True)
+    return stale
 
 
 def latest_step(directory: str | Path) -> Optional[int]:
@@ -94,6 +129,7 @@ class CheckpointManager:
         self.directory = Path(directory)
         self.every = every
         self.keep = keep
+        sweep_tmp(self.directory)
 
     def maybe_save(self, step: int, state_fn) -> Optional[Path]:
         if step % self.every != 0:

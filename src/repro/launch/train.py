@@ -14,6 +14,7 @@ weight sync, atomic checkpoint/restart (resume with the same command).
 from __future__ import annotations
 
 import argparse
+import os
 import time
 from pathlib import Path
 
@@ -37,6 +38,15 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", nargs="?", const="", default=None,
+                    metavar="DIR",
+                    help="restore the latest checkpoint and continue "
+                         "(from DIR when given, else --ckpt-dir); fails "
+                         "loudly when none exists")
+    ap.add_argument("--crash-after", type=int, default=0, metavar="N",
+                    help="hard-exit (os._exit, no cleanup) after N "
+                         "completed steps — crash injection for "
+                         "exercising --resume")
     ap.add_argument("--schedule", action="store_true",
                     help="print the AReaL-Hex schedule for the paper's "
                          "heterogeneous cluster before training")
@@ -85,22 +95,38 @@ def main() -> None:
         opt=AdamWConfig(lr=args.lr), trace=tracer, metrics=registry)
     trainer = AsyncGRPOTrainer(cfg, tc)
 
+    resume_dir = None
+    if args.resume is not None:
+        resume_dir = args.resume or args.ckpt_dir
+        if not resume_dir:
+            ap.error("--resume needs a directory (or --ckpt-dir)")
+
     mgr = None
     if args.ckpt_dir:
         mgr = CheckpointManager(args.ckpt_dir, every=args.ckpt_every)
+
+    step0 = 0
+    restored = None
+    if resume_dir is not None:
+        from repro.ckpt.checkpoint import restore_checkpoint
+        restored = restore_checkpoint(resume_dir)   # raises when empty
+    elif mgr:
         restored = mgr.restore_latest()
-        if restored:
-            step0, state = restored
-            trainer.params = jax.tree_util.tree_map(
-                lambda a, b: b.astype(a.dtype), trainer.params,
-                state["params"])
-            trainer.opt_state = state["opt_state"]
-            trainer.store.publish(trainer.params)
-            trainer.buffer.ctl.version = trainer.store.version
-            log.info(f"resumed from step {step0}", resumed_step=step0)
+    if restored:
+        step0, state = restored
+        trainer.params = jax.tree_util.tree_map(
+            lambda a, b: b.astype(a.dtype), trainer.params,
+            state["params"])
+        trainer.opt_state = state["opt_state"]
+        trainer.store.publish(trainer.params)
+        trainer.buffer.ctl.version = trainer.store.version
+        log.info(f"resumed from step {step0} "
+                 f"(weight version {trainer.store.version})",
+                 resumed_step=step0,
+                 resumed_version=trainer.store.version)
 
     t0 = time.time()
-    done = 0
+    done = step0
     while done < args.steps:
         trainer.produce()
         m = trainer.train_one()
@@ -115,6 +141,10 @@ def main() -> None:
                 "params": trainer.params, "opt_state": trainer.opt_state,
                 "version": trainer.store.version,
             })
+        if args.crash_after and done >= args.crash_after:
+            log.info(f"injected crash after step {done}",
+                     crash_after=args.crash_after)
+            os._exit(17)    # hard kill: no atexit, no flush — a real crash
         if done % 5 == 0 or done == args.steps:
             st = trainer.buffer.stats()
             log.info(f"[{done:4d}/{args.steps}] loss={m['loss']:.4f} "

@@ -32,6 +32,12 @@ Detectors (each individually toggleable in :class:`MonitorConfig`):
     vs. a reference locked from the first few polls; alerts on drift.
 ``admission``
     SLO burn rate of admission latencies above ``admission_slo_s``.
+``snapshot``
+    Recovery-snapshot age vs the configured cadence: if the last
+    ``RecoveryManager`` snapshot is older than ``snapshot_interval_s``
+    the crash-loss bound is silently growing — warn past the interval,
+    critical past twice it.  Enabled by setting ``snapshot_interval_s``
+    > 0 (the cadence is deployment-specific, so there is no default).
 
 Everything is default-off: no component constructs a monitor unless one
 is passed in, and every feed site is behind ``if monitor is not None``,
@@ -122,6 +128,10 @@ class MonitorConfig:
         "admission", 0.90, "≥90% of admissions within admission_slo_s")
     min_admission_n: int = 4        # admissions before judging
 
+    # snapshot: recovery-snapshot age vs the expected cadence
+    detect_snapshot: bool = True
+    snapshot_interval_s: float = 0.0    # expected cadence; 0 disables
+
     def __post_init__(self) -> None:
         if self.window_s <= 0 or self.poll_interval_s <= 0:
             raise ValueError("window_s and poll_interval_s must be > 0")
@@ -192,6 +202,7 @@ class HealthMonitor:
         self._bubble_ref: Dict[str, float] = {}
         self._admission = BurnWindow(self.cfg.admission_slo,
                                      self.cfg.window_s)
+        self._last_snapshot_t: Optional[float] = None
         self._last_alert: Dict[Tuple[str, str], float] = {}
         self._last_reg_snap: Optional[Dict] = None
         self.polls = 0
@@ -248,6 +259,12 @@ class HealthMonitor:
     def on_admission(self, job: str, t: float, latency_s: float) -> None:
         """One admitted job's submit→commit latency."""
         self._admission.observe(t, latency_s > self.cfg.admission_slo_s)
+
+    def on_snapshot(self, t: float) -> None:
+        """A recovery snapshot completed (``RecoveryManager`` feeds this).
+        Survives :meth:`reset` — the snapshot cadence is a controller
+        property, not a per-plan distribution."""
+        self._last_snapshot_t = t
 
     # -------------------------------------------------- trace-stream sink
     def on_trace_event(self, ph: str, group: str, track: str, name: str,
@@ -364,6 +381,8 @@ class HealthMonitor:
             candidates += self._detect_bubble(now, horizon)
         if cfg.detect_admission:
             candidates += self._detect_admission(now)
+        if cfg.detect_snapshot and cfg.snapshot_interval_s > 0:
+            candidates += self._detect_snapshot_age(now)
         fresh: List[Alert] = []
         for a in candidates:
             gate = (a.detector, a.key)
@@ -531,3 +550,20 @@ class HealthMonitor:
             {"burn": burn, "bad_frac": bw.bad_frac(now), "n": bw.n(now),
              "slo_s": cfg.admission_slo_s,
              "objective": cfg.admission_slo.objective})]
+
+    def _detect_snapshot_age(self, now: float) -> List[Alert]:
+        cfg = self.cfg
+        if self._last_snapshot_t is None:
+            return []                # no snapshot regime observed yet
+        age = now - self._last_snapshot_t
+        if age <= cfg.snapshot_interval_s:
+            return []
+        sev = ("critical" if age > 2.0 * cfg.snapshot_interval_s
+               else "warn")
+        return [Alert(
+            "snapshot", sev, now, cfg.window_s, "controller",
+            f"last recovery snapshot {age:.0f}s old vs "
+            f"{cfg.snapshot_interval_s:g}s cadence — crash-loss bound "
+            f"growing",
+            {"age_s": age, "interval_s": cfg.snapshot_interval_s,
+             "last_snapshot_t": self._last_snapshot_t})]

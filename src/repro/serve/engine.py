@@ -854,6 +854,23 @@ class PagedEngine:
         while self.step():
             pass
 
+    def quiesce(self) -> int:
+        """Drain to a checkpointable boundary: run steps *without admitting
+        anything new* until no active request is mid-prefill (or a FORK
+        waiting on one), so a snapshot taken afterwards never captures a
+        half-prefilled request.  DECODE-state requests are fine to capture
+        — their KV is complete up to ``written`` and the next token is a
+        pure function of restored state.  Returns the number of steps run;
+        queued-but-unadmitted requests stay queued."""
+        steps = 0
+        while any(r.state in ("PREFILL", "FORK")
+                  for r in self._active.values()):
+            now = time.time()
+            self._step_body(now)
+            self.stats.wall_time_s += time.time() - now
+            steps += 1
+        return steps
+
     def collect(self, since: int = 0) -> Tuple[List[Rollout], Dict]:
         """Package finished requests (submission order) into rollouts +
         *lifetime* engine metrics — the stepwise counterpart of

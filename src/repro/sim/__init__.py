@@ -1,6 +1,6 @@
-from .events import (FailureInjection, HandoffRecord, JobArrival, JobFailure,
-                     JobStraggler, PlanSwapRecord, ReplanTrigger,
-                     StragglerInjection)
+from .events import (ControllerCrash, FailureInjection, HandoffRecord,
+                     JobArrival, JobFailure, JobStraggler, PlanSwapRecord,
+                     ReplanTrigger, StragglerInjection)
 from .replan import (ElasticConfig, ElasticReplanner, PoolReplanner,
                      replica_device_map)
 from .simulator import (AsyncRLSimulator, DeviceLedger, MultiJobSimResult,
@@ -14,6 +14,6 @@ __all__ = [
     "ReplanTrigger", "PlanSwapRecord",
     "MultiJobSimulator", "MultiSimConfig", "MultiJobSimResult",
     "PoolReplanner", "DeviceLedger", "JobFailure", "JobStraggler",
-    "JobArrival", "HandoffRecord",
+    "JobArrival", "HandoffRecord", "ControllerCrash",
     "replica_device_map",
 ]

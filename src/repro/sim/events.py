@@ -17,6 +17,18 @@ Event kinds used by ``AsyncRLSimulator``:
 ``job_straggle``, ``job_submit`` (online arrival through the admission
 controller), plus ``pool_drain`` / ``pool_ready`` for the pool-wide plan
 swap.
+
+Crash-recovery kinds shared by both loops (``repro.recovery``):
+
+  * ``snapshot``      — the attached ``RecoveryManager`` captures the full
+    controller state and truncates its journal (self-re-arming cadence);
+  * ``crash``         — a ``ControllerCrash`` fires: every
+    controller-internal event is wiped, state rolls back to the last
+    snapshot + journal replay;
+  * ``resume``        — the controller comes back ``restore_latency_s``
+    after the crash: fresh snapshot, relaunch, timers re-armed;
+  * ``trainer_wake``  — end of a ``snapshot_cost_s`` stop-the-world
+    pause: a no-op event whose arrival re-runs the trainer probe.
 """
 from __future__ import annotations
 
@@ -50,6 +62,18 @@ class EventQueue:
 
     def __len__(self) -> int:
         return len(self._h)
+
+    def retain(self, kinds) -> int:
+        """Drop every pending event whose kind is not in ``kinds``
+        (controller-crash semantics: in-memory timers and completions
+        die with the controller, external injections survive).  Returns
+        the number of events dropped; seq numbers are preserved so
+        relative order of survivors is unchanged."""
+        kinds = set(kinds)
+        before = len(self._h)
+        self._h = [e for e in self._h if e.kind in kinds]
+        heapq.heapify(self._h)
+        return before - len(self._h)
 
 
 @dataclass
@@ -102,6 +126,19 @@ class JobArrival:
     spec: "JobSpec"                       # type: ignore[name-defined]
     t_submit: float
     n_steps: Optional[int] = None
+
+
+@dataclass
+class ControllerCrash:
+    """Controller dies at ``t_crash`` (both simulator loops).
+
+    Everything since the last ``RecoveryManager`` snapshot is discarded:
+    the event queue keeps only external injections, state rolls back to
+    snapshot + journal replay, and work resumes ``restore_latency_s``
+    later (the modeled MTTR: detect + reload + replay).  Requires a
+    ``recovery=`` manager on the sim config."""
+    t_crash: float
+    restore_latency_s: Optional[float] = None   # None = manager's config
 
 
 @dataclass

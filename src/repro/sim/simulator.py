@@ -58,6 +58,7 @@ jobs (core/pool.py arbitration) while preserving every job's η bound.
 """
 from __future__ import annotations
 
+import copy
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set
 
@@ -73,9 +74,11 @@ from repro.core.pool import JobSpec, PoolPlan
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.monitor import HealthMonitor
 from repro.obs.trace import Tracer
-from .events import (EventQueue, FailureInjection, HandoffRecord, JobArrival,
-                     JobFailure, JobStraggler, PlanSwapRecord, ReplanTrigger,
-                     StragglerInjection)
+from repro.recovery.snapshot import (RecoveryError, RecoveryEvent,
+                                     RecoveryManager)
+from .events import (ControllerCrash, EventQueue, FailureInjection,
+                     HandoffRecord, JobArrival, JobFailure, JobStraggler,
+                     PlanSwapRecord, ReplanTrigger, StragglerInjection)
 from .replan import ElasticReplanner, PoolReplanner, replica_device_map
 
 
@@ -113,6 +116,15 @@ class SimConfig:
     # runs are bit-identical (asserted in tests/test_monitor.py).
     monitor: Optional[HealthMonitor] = None
     monitor_replan: bool = False
+    # crash-consistent recovery (repro.recovery): a RecoveryManager
+    # snapshots the full controller state every recovery.cfg.interval_s
+    # sim-seconds and write-ahead-journals work between snapshots; a
+    # ControllerCrash injection rolls the run back to the last snapshot
+    # + journal replay and resumes restore_latency_s later.  crashes
+    # require a manager; with recovery=None (or attached but no crash)
+    # runs are bit-identical (asserted in tests/test_recovery.py).
+    recovery: Optional[RecoveryManager] = None
+    crashes: Sequence[ControllerCrash] = field(default_factory=list)
 
 
 @dataclass
@@ -158,6 +170,8 @@ class SimResult:
     swaps: List[PlanSwapRecord] = field(default_factory=list)
     replan_triggers: List[ReplanTrigger] = field(default_factory=list)
     plan_epochs: List[PlanEpochStat] = field(default_factory=list)
+    # --- crash recovery provenance (one record per ControllerCrash)
+    recoveries: List[RecoveryEvent] = field(default_factory=list)
 
     def summary(self) -> str:
         extra = f" swaps={len(self.swaps)}" if self.swaps else ""
@@ -242,6 +256,20 @@ class AsyncRLSimulator:
         mx = cfg.metrics
         mon = cfg.monitor
 
+        # --- crash-consistent recovery (repro.recovery)
+        rec = cfg.recovery
+        if cfg.crashes and rec is None:
+            raise ValueError("ControllerCrash injection requires "
+                             "SimConfig.recovery (a RecoveryManager)")
+        journaling = rec is not None and rec.cfg.journal
+        recoveries: List[RecoveryEvent] = []
+        controller_down = False
+        next_rid = 0                          # monotonic rollout id, never reused
+        consumed_rids: Set[int] = set()       # exactly-once guard (journal mode)
+        consume_seq = 0                       # serial train-consumption counter
+        pending_train: Optional[dict] = None  # consumed-but-uncommitted step
+        cap_slack = 0                         # transient post-rollback overshoot
+
         def close_epoch(now: float) -> None:
             epoch_stats.append(PlanEpochStat(
                 epoch=epoch_open["epoch"], provenance=epoch_open["provenance"],
@@ -250,18 +278,28 @@ class AsyncRLSimulator:
                 tokens=tokens_consumed - epoch_open["tokens0"]))
 
         def check(now: float) -> None:
+            nonlocal cap_slack
             if not cfg.check_invariants:
                 return
             assert in_flight == generating + len(buffer), \
                 (now, in_flight, generating, len(buffer))
             assert launched == consumed + dropped + in_flight, \
                 (now, launched, consumed, dropped, in_flight)
-            assert 0 <= in_flight <= capacity, (now, in_flight, capacity)
+            # cap_slack: a crash-rollback of an uncommitted consumption can
+            # transiently overshoot capacity by at most one batch (launches
+            # the rolled-back step enabled pre-crash are preserved, never
+            # discarded); launch gating admits nothing until it drains
+            assert 0 <= in_flight <= capacity + cap_slack, \
+                (now, in_flight, capacity, cap_slack)
+            if in_flight <= capacity:
+                cap_slack = 0
 
         def launch(i: int, now: float) -> None:
             nonlocal in_flight, stalls_capacity, launched, generating
-            nonlocal gen_busy_sum
+            nonlocal gen_busy_sum, next_rid
             if i >= len(alive) or not alive[i]:
+                return
+            if controller_down:               # nobody to hand out prompts
                 return
             if state == "DRAINING":           # no new work while replanning
                 idle.add(i)
@@ -277,6 +315,8 @@ class AsyncRLSimulator:
             in_flight += 1
             launched += 1
             generating += 1
+            rid = next_rid
+            next_rid += 1
             length = float(np.clip(rng.lognormal(
                 *_lognorm(self.P)), 16, self.P.max_len))
             dur = _gen_duration(cfg.gen_time, length, self.P, rate[i])
@@ -285,7 +325,9 @@ class AsyncRLSimulator:
             # they delay the rollout but do not count as gen_busy
             gap = _env_gap(cfg.env, rng)
             q.push(now + dur + gap + cfg.reward_cost_s,
-                   "rollout_done", (epoch, i, version, length))
+                   "rollout_done", (epoch, i, version, length, rid))
+            if journaling:
+                rec.journal({"k": "launch", "rid": rid, "dur": dur})
             if tr is not None:
                 tr.span("replica", f"r{i}", "generate", now, dur,
                         tokens=length, version=version, epoch=epoch)
@@ -307,12 +349,17 @@ class AsyncRLSimulator:
         def maybe_train(now: float) -> None:
             nonlocal steps, tokens_consumed, version, in_flight, consumed
             nonlocal train_busy, trainer_busy_until, stalls_data, dropped
+            nonlocal consume_seq, pending_train
             if steps >= cfg.n_steps or now < trainer_busy_until:
                 return
             # evict over-stale entries (frees their capacity slots)
             fresh = [r for r in buffer if version - r[0] <= cfg.eta]
             n_evicted = len(buffer) - len(fresh)
             if n_evicted:
+                if journaling:
+                    rec.journal({"k": "evict",
+                                 "rids": [r[2] for r in buffer
+                                          if version - r[0] > cfg.eta]})
                 dropped += n_evicted
                 in_flight -= n_evicted
                 buffer[:] = fresh
@@ -333,9 +380,26 @@ class AsyncRLSimulator:
             in_flight -= B
             consumed += B
             tok0 = tokens_consumed
-            for vtag, ln in batch:
+            for vtag, ln, _rid in batch:
                 stale_hist.append(version - vtag)
                 tokens_consumed += ln + self.P.prompt_len
+            if journaling:
+                # the write-ahead record for this step: journaled at
+                # train_done (the commit point), rolled back whole on a
+                # crash in between.  The exactly-once assertion: no
+                # rollout id is ever consumed twice.
+                rids = [r[2] for r in batch]
+                for rid_ in rids:
+                    if rid_ in consumed_rids:
+                        raise RecoveryError(
+                            f"rollout {rid_} consumed twice")
+                    consumed_rids.add(rid_)
+                consume_seq += 1
+                pending_train = {
+                    "k": "train", "seq": consume_seq, "rids": rids,
+                    "batch": list(batch), "n": B,
+                    "stalenesses": [version - r[0] for r in batch],
+                    "tokens": tokens_consumed - tok0, "t_train": t_train}
             dur = t_train + t_sync
             train_busy += t_train
             trainer_busy_until = now + dur
@@ -351,11 +415,11 @@ class AsyncRLSimulator:
                            in_flight=in_flight)
             if mx is not None:
                 h = mx.histogram("sim/staleness")
-                for vtag, _ln in batch:
+                for vtag, _ln, _rid in batch:
                     h.observe(version - vtag)
                 mx.counter("sim/rollouts_trained").inc(B)
             if mon is not None:
-                for vtag, _ln in batch:
+                for vtag, _ln, _rid in batch:
                     mon.on_staleness("sim", now, version - vtag, cfg.eta)
                 mon.on_buffer("sim", now, len(buffer), capacity)
                 mon.on_stage_span("train", now, t_train)
@@ -377,6 +441,8 @@ class AsyncRLSimulator:
                 return
             pending_dead.add(replica_idx)
             triggers.append(ReplanTrigger(now, reason, replica_idx))
+            if controller_down:
+                return          # accumulate; resume re-schedules the drain
             if state == "DRAINING" or drain_scheduled:
                 return                        # accumulate into pending swap
             # debounce defers the commit past min_interval_s after the last
@@ -467,6 +533,286 @@ class AsyncRLSimulator:
             for i in range(n_rep):
                 launch(i, now)
 
+        # ----------------------------------------------- crash recovery
+        def capture() -> dict:
+            """Full controller state as one atomic unit (fresh containers;
+            plans are shared by reference — immutable inputs)."""
+            return {
+                "version": version, "buffer": list(buffer),
+                "in_flight": in_flight, "generating": generating,
+                "steps": steps, "tokens": tokens_consumed,
+                "stale_hist": list(stale_hist),
+                "stalls_capacity": stalls_capacity,
+                "stalls_data": stalls_data,
+                "dropped": dropped, "launched": launched,
+                "consumed": consumed, "train_busy": train_busy,
+                "gen_busy_sum": gen_busy_sum, "rep_seconds": rep_seconds,
+                "plan": cur_plan, "epoch": epoch,
+                "t_train": t_train, "t_sync": t_sync,
+                "rate": list(rate), "alive": list(alive),
+                "cum_factor": list(cum_factor),
+                "pending_dead": set(pending_dead),
+                "down_until": dict(down_until),
+                "last_commit": last_commit,
+                "swaps": [copy.copy(r) for r in swaps],
+                "triggers": list(triggers),
+                "epoch_stats": list(epoch_stats),
+                "epoch_open": dict(epoch_open),
+                "swap_hist_idx": list(swap_hist_idx),
+                "next_rid": next_rid, "consume_seq": consume_seq,
+                "consumed_rids": set(consumed_rids),
+                "pending_train": (dict(pending_train)
+                                  if pending_train is not None else None),
+                "cap_slack": cap_slack,
+                "rng": rng.bit_generator.state,
+                "excluded": (set(replanner.excluded)
+                             if replanner is not None else None),
+            }
+
+        def do_crash(c: ControllerCrash, now: float) -> None:
+            """Total controller loss: wipe every in-memory event, roll back
+            to the last snapshot, replay the write-ahead journal to
+            exactly-once, verify invariants, and schedule the resume."""
+            nonlocal version, in_flight, generating, steps, tokens_consumed
+            nonlocal stalls_capacity, stalls_data, dropped, launched
+            nonlocal consumed, train_busy, gen_busy_sum, rep_seconds
+            nonlocal trainer_busy_until, cur_plan, epoch, t_train, t_sync
+            nonlocal rate, alive, cum_factor, n_rep, pending_dead, down_until
+            nonlocal last_commit, swaps, triggers, epoch_stats, epoch_open
+            nonlocal swap_hist_idx, next_rid, consume_seq, consumed_rids
+            nonlocal pending_train, paused, idle, state, drain_scheduled
+            nonlocal drain_reason, drain_t0, controller_down, stale_hist
+            nonlocal buffer, cap_slack
+            snap_t, st, entries = rec.latest()
+            # a consumption uncommitted at the crash instant rolls back no
+            # matter where the snapshot fell: explicitly (snapshot captured
+            # it mid-flight) or implicitly (post-snapshot consumption whose
+            # commit never reached the journal — replay re-fills the
+            # buffer).  Either way the overshoot bound is one batch.
+            live_pt_n = pending_train["n"] if pending_train is not None else 0
+            # pre-crash progress baseline counts only *committed* steps:
+            # the live uncommitted batch is work in flight, not progress
+            steps_b, consumed_b = steps, consumed - live_pt_n
+            # controller-internal timers and completions die with the
+            # controller; external injections (hardware faults, future
+            # crashes) keep happening to the world
+            q.retain(("straggle", "fail", "recover", "crash"))
+            # --- roll back to the snapshot
+            version = st["version"]
+            buffer = list(st["buffer"])
+            in_flight = st["in_flight"]
+            generating = st["generating"]
+            steps = st["steps"]
+            tokens_consumed = st["tokens"]
+            stale_hist = list(st["stale_hist"])
+            stalls_capacity = st["stalls_capacity"]
+            stalls_data = st["stalls_data"]
+            dropped = st["dropped"]
+            launched = st["launched"]
+            consumed = st["consumed"]
+            train_busy = st["train_busy"]
+            gen_busy_sum = st["gen_busy_sum"]
+            rep_seconds = st["rep_seconds"]
+            cur_plan = st["plan"]
+            epoch = st["epoch"]
+            t_train, t_sync = st["t_train"], st["t_sync"]
+            rate = list(st["rate"])
+            alive = list(st["alive"])
+            cum_factor = list(st["cum_factor"])
+            n_rep = len(rate)
+            pending_dead = set(st["pending_dead"])
+            down_until = dict(st["down_until"])
+            last_commit = st["last_commit"]
+            swaps = [copy.copy(r) for r in st["swaps"]]
+            triggers = list(st["triggers"])
+            epoch_stats = list(st["epoch_stats"])
+            epoch_open = dict(st["epoch_open"])
+            swap_hist_idx = list(st["swap_hist_idx"])
+            next_rid = st["next_rid"]
+            consume_seq = st["consume_seq"]
+            consumed_rids = set(st["consumed_rids"])
+            rng.bit_generator.state = st["rng"]
+            if replanner is not None and st["excluded"] is not None:
+                replanner.excluded = set(st["excluded"])
+            paused = []
+            idle = set()
+            state = "RUNNING"
+            drain_scheduled = False
+            drain_reason = ""
+            drain_t0 = 0.0
+            pending_train = None
+            # --- replay the journal (exactly-once: every entry keyed by
+            # a never-reused rollout id, duplicates are a hard error)
+            completed = {e["rid"] for e in entries if e["k"] == "rollout"}
+            seen_launch: Set[int] = set()
+            seen_rollout: Set[int] = set()
+            pt = st["pending_train"]
+            lost_post = 0
+            for e in entries:
+                k = e["k"]
+                if k == "launch":
+                    if e["rid"] in seen_launch:
+                        raise RecoveryError(
+                            f"journal: duplicate launch rid {e['rid']}")
+                    seen_launch.add(e["rid"])
+                    next_rid += 1      # every journaled launch used an id
+                    if e["rid"] not in completed:
+                        lost_post += 1     # in-flight at the crash: lost
+                        continue
+                    launched += 1
+                    in_flight += 1
+                    generating += 1
+                    gen_busy_sum += e["dur"]
+                elif k == "rollout":
+                    if e["rid"] in seen_rollout:
+                        raise RecoveryError(
+                            f"journal: duplicate completion rid {e['rid']}")
+                    seen_rollout.add(e["rid"])
+                    generating -= 1
+                    if e["admitted"]:
+                        buffer.append((e["vtag"], e["length"], e["rid"]))
+                    else:
+                        dropped += 1
+                        in_flight -= 1
+                elif k == "evict":
+                    rids = set(e["rids"])
+                    keep = [r for r in buffer if r[2] not in rids]
+                    if len(buffer) - len(keep) != len(rids):
+                        raise RecoveryError("journal: evicted rollouts "
+                                            "missing from buffer")
+                    buffer = keep
+                    dropped += len(rids)
+                    in_flight -= len(rids)
+                elif k == "train":
+                    if pt is not None and e["seq"] == pt["seq"]:
+                        # consumption was in flight at the snapshot: its
+                        # pop + counters are already captured — apply only
+                        # the step commit
+                        pt = None
+                    else:
+                        head = buffer[:e["n"]]
+                        if [r[2] for r in head] != list(e["rids"]):
+                            raise RecoveryError(
+                                "journal: train batch does not match "
+                                "buffer head")
+                        del buffer[:e["n"]]
+                        in_flight -= e["n"]
+                        consumed += e["n"]
+                        tokens_consumed += e["tokens"]
+                        stale_hist.extend(e["stalenesses"])
+                        train_busy += e["t_train"]
+                        for rid_ in e["rids"]:
+                            if rid_ in consumed_rids:
+                                raise RecoveryError(
+                                    f"rollout {rid_} consumed twice "
+                                    f"across the crash boundary")
+                            consumed_rids.add(rid_)
+                    steps += 1
+                    version += 1
+                elif k == "fail":
+                    i_ = e["idx"]
+                    if i_ < len(alive):
+                        alive[i_] = False
+                    for d in e.get("devs", ()):
+                        down_until[d] = max(down_until.get(d, 0.0),
+                                            e["until"])
+                    if (e["downtime"] is None and elastic is not None
+                            and elastic.replan_on_failure):
+                        pending_dead.add(i_)
+                        triggers.append(ReplanTrigger(e["t"], "failure", i_))
+                elif k == "straggle":
+                    i_ = e["idx"]
+                    if i_ < len(rate):
+                        rate[i_] *= e["factor"]
+                        cum_factor[i_] *= e["factor"]
+                        if (elastic is not None and cum_factor[i_]
+                                <= elastic.straggler_threshold):
+                            pending_dead.add(i_)
+                            triggers.append(
+                                ReplanTrigger(e["t"], "straggler", i_))
+            # a consumption whose step never committed rolls back whole:
+            # the batch returns to the buffer head, nothing was trained
+            rolled_back = 0
+            if pt is not None:
+                n = pt["n"]
+                rolled_back = n
+                buffer[:0] = pt["batch"]
+                in_flight += n
+                consumed -= n
+                tokens_consumed -= pt["tokens"]
+                del stale_hist[-n:]
+                train_busy -= pt["t_train"]
+                for rid_ in pt["rids"]:
+                    consumed_rids.discard(rid_)
+            # pre-snapshot in-flight that never completed: lost work
+            lost_pre = generating
+            if lost_pre:
+                dropped += lost_pre
+                in_flight -= lost_pre
+                generating = 0
+            # --- prove the invariants across the crash boundary (gate c)
+            if in_flight != generating + len(buffer):
+                raise RecoveryError(
+                    f"restore: in_flight {in_flight} != generating "
+                    f"{generating} + buffered {len(buffer)}")
+            if launched != consumed + dropped + in_flight:
+                raise RecoveryError(
+                    f"restore: conservation broken: launched {launched} "
+                    f"!= {consumed}+{dropped}+{in_flight}")
+            # a rolled-back consumption may transiently overshoot capacity
+            # by at most one batch: the launches it enabled pre-crash are
+            # preserved, and launch gating drains the excess
+            allowed = capacity + st["cap_slack"] + max(rolled_back, live_pt_n)
+            if not 0 <= in_flight <= allowed:
+                raise RecoveryError(
+                    f"restore: in_flight {in_flight} outside "
+                    f"[0, {allowed}]")
+            cap_slack = max(0, in_flight - capacity)
+            if stale_hist and int(np.max(stale_hist)) > cfg.eta:
+                raise RecoveryError(
+                    f"restore: η bound violated: max staleness "
+                    f"{int(np.max(stale_hist))} > η={cfg.eta}")
+            # --- schedule the comeback
+            lat = (c.restore_latency_s if c.restore_latency_s is not None
+                   else rec.cfg.restore_latency_s)
+            controller_down = True
+            trainer_busy_until = now + lat
+            q.push(now + lat, "resume", None)
+            recoveries.append(RecoveryEvent(
+                t_crash=now, t_snapshot=snap_t, t_resume=now + lat,
+                mttr_s=lat, steps_before=steps_b, steps_after=steps,
+                consumed_before=consumed_b, consumed_after=consumed,
+                lost_inflight=lost_pre + lost_post,
+                lost_consumed=max(consumed_b - consumed, 0),
+                journal_replayed=len(entries)))
+            if tr is not None:
+                tr.span("recovery", "controller", "restore", now, lat,
+                        snapshot_t=snap_t, replayed=len(entries),
+                        lost_inflight=lost_pre + lost_post)
+            if mx is not None:
+                mx.counter("sim/crashes").inc()
+
+        def do_resume(now: float) -> None:
+            nonlocal controller_down, drain_scheduled, drain_reason, drain_t0
+            controller_down = False
+            # fresh base: a second crash must replay from a clean journal
+            # (ids freed by the loss cancellation are about to be reissued)
+            rec.snapshot(now, capture())
+            for i in range(n_rep):
+                launch(i, now)
+            if pending_dead and replanner is not None:
+                ready = max(now + elastic.replan_latency_s,
+                            last_commit + elastic.min_interval_s)
+                drain_scheduled = True
+                drain_reason = "recovery"
+                drain_t0 = now
+                q.push(ready - elastic.replan_latency_s, "replan_drain",
+                       None)
+            if mon is not None:
+                mon.reset()
+                q.push(now + mon.cfg.poll_interval_s, "monitor_poll", None)
+            q.push(now + rec.cfg.interval_s, "snapshot", None)
+
         for s in cfg.stragglers:
             if s.t_start <= 0 and s.replica_idx < n_rep:
                 rate[s.replica_idx] *= s.factor
@@ -479,9 +825,17 @@ class AsyncRLSimulator:
                 q.push(s.t_start, "straggle", s)
         for f in cfg.failures:
             q.push(f.t_fail, "fail", f)
+        for c in cfg.crashes:
+            q.push(c.t_crash, "crash", c)
 
+        if rec is not None:
+            # t=0 baseline: a crash before the first cadence snapshot
+            # restores here and replays the initial launches
+            rec.snapshot(0.0, capture())
         for i in range(n_rep):
             launch(i, 0.0)
+        if rec is not None:
+            q.push(rec.cfg.interval_s, "snapshot", None)
         if mon is not None:
             q.push(mon.cfg.poll_interval_s, "monitor_poll", None)
 
@@ -489,9 +843,10 @@ class AsyncRLSimulator:
             ev = q.pop()
             t = ev.time
             if ev.kind == "rollout_done":
-                ev_epoch, i, vtag, length = ev.payload
+                ev_epoch, i, vtag, length, rid = ev.payload
                 generating -= 1
-                if version - vtag > cfg.eta:
+                admitted = version - vtag <= cfg.eta
+                if not admitted:
                     # over-stale at entry (rare under capacity control):
                     # evicted, its capacity slot freed
                     dropped += 1
@@ -499,19 +854,31 @@ class AsyncRLSimulator:
                     if mx is not None:
                         mx.counter("sim/dropped").inc()
                 else:
-                    buffer.append((vtag, length))
+                    buffer.append((vtag, length, rid))
+                if journaling:
+                    rec.journal({"k": "rollout", "rid": rid, "vtag": vtag,
+                                 "length": length, "admitted": admitted})
                 if ev_epoch == epoch:         # old-epoch replicas don't relaunch
                     launch(i, t)
                 maybe_train(t)
             elif ev.kind == "train_done":
                 steps += 1
                 version += 1
+                if journaling and pending_train is not None:
+                    # the commit point: this step survives a crash from
+                    # here on (replayed from the journal)
+                    pending_train["t"] = t
+                    rec.journal(pending_train)
+                    pending_train = None
                 maybe_train(t)
             elif ev.kind == "straggle":
                 s = ev.payload
                 if s.replica_idx < n_rep:
                     rate[s.replica_idx] *= s.factor
                     cum_factor[s.replica_idx] *= s.factor
+                    if journaling:
+                        rec.journal({"k": "straggle", "idx": s.replica_idx,
+                                     "factor": s.factor, "t": t})
                     if (elastic is not None and
                             cum_factor[s.replica_idx]
                             <= elastic.straggler_threshold):
@@ -520,6 +887,7 @@ class AsyncRLSimulator:
                 f = ev.payload
                 if f.replica_idx < n_rep:
                     alive[f.replica_idx] = False
+                    devs: List[int] = []
                     if f.downtime is not None:
                         q.push(t + f.downtime, "recover",
                                (epoch, f.replica_idx))
@@ -532,7 +900,18 @@ class AsyncRLSimulator:
                                     down_until[d.index] = max(
                                         down_until.get(d.index, 0.0),
                                         t + f.downtime)
-                    elif elastic is not None and elastic.replan_on_failure:
+                                    devs.append(d.index)
+                    if journaling:
+                        # hardware state is world state: it must survive
+                        # a controller crash via replay
+                        rec.journal({"k": "fail", "idx": f.replica_idx,
+                                     "downtime": f.downtime, "t": t,
+                                     "devs": devs,
+                                     "until": (t + f.downtime
+                                               if f.downtime is not None
+                                               else 0.0)})
+                    if (f.downtime is None and elastic is not None
+                            and elastic.replan_on_failure):
                         trigger_replan(t, "failure", f.replica_idx)
             elif ev.kind == "recover":
                 ev_epoch, i = ev.payload
@@ -544,7 +923,38 @@ class AsyncRLSimulator:
                 q.push(t + elastic.replan_latency_s, "replan_ready", None)
             elif ev.kind == "replan_ready":
                 commit_swap(t)
+            elif ev.kind == "snapshot":
+                rec.snapshot(t, capture())
+                if rec.cfg.snapshot_cost_s > 0.0:
+                    # modeled stop-the-world capture cost: the trainer
+                    # pauses while state is serialized.  The pause needs
+                    # its own wake-up — if every replica is capacity-
+                    # paused the queue holds only future snapshots, each
+                    # re-bumping the pause past itself, and the trailing
+                    # trainer probe would never fire again
+                    trainer_busy_until = max(trainer_busy_until,
+                                             t + rec.cfg.snapshot_cost_s)
+                    q.push(t + rec.cfg.snapshot_cost_s,
+                           "trainer_wake", None)
+                # re-arm only while the sim can still make progress (same
+                # liveness condition as the monitor poll chain)
+                if (generating > 0 or len(buffer) >= B
+                        or drain_scheduled or state == "DRAINING"):
+                    q.push(t + rec.cfg.interval_s, "snapshot", None)
+                if rec.cfg.snapshot_cost_s <= 0.0:
+                    # pure observation: skip the trailing trainer probe so
+                    # a free snapshot cannot perturb stall accounting
+                    # (bit-identity with no manager attached)
+                    continue
+            elif ev.kind == "trainer_wake":
+                pass                     # falls to the trailing probe
+            elif ev.kind == "crash":
+                do_crash(ev.payload, t)
+            elif ev.kind == "resume":
+                do_resume(t)
             elif ev.kind == "monitor_poll":
+                if rec is not None:
+                    rec.observe_age(t)
                 for a in mon.poll(t):
                     if (cfg.monitor_replan and replanner is not None
                             and a.detector == "straggler"):
@@ -566,10 +976,10 @@ class AsyncRLSimulator:
         rep_seconds += n_rep * max(wall - epoch_open["t_start"], 0.0)
         close_epoch(wall)
         # fill post-swap staleness snapshots now that the stream is complete
-        for rec, cut in zip(swaps, swap_hist_idx):
+        for swr, cut in zip(swaps, swap_hist_idx):
             h = stale_hist[cut:]
-            rec.mean_staleness_after = float(np.mean(h)) if h else 0.0
-            rec.max_staleness_after = int(np.max(h)) if h else 0
+            swr.mean_staleness_after = float(np.mean(h)) if h else 0.0
+            swr.max_staleness_after = int(np.max(h)) if h else 0
         if tr is not None:
             # conservation ledger → otherData.ledger: the analyzer
             # cross-checks trace-derived throughput/busy-time against it
@@ -615,6 +1025,7 @@ class AsyncRLSimulator:
             swaps=swaps,
             replan_triggers=triggers,
             plan_epochs=epoch_stats,
+            recoveries=recoveries,
         )
 
 
@@ -711,6 +1122,13 @@ class MultiSimConfig:
     # into the pool replan path ahead of the throughput-EWMA trigger.
     monitor: Optional[HealthMonitor] = None
     monitor_replan: bool = False
+    # crash-consistent recovery (see SimConfig.recovery): the manager
+    # snapshots the whole pool — every job's run state, the device
+    # ledger, the control-plane records, the incumbent PoolPlan — as one
+    # atomic unit, and a ControllerCrash rolls the entire pool back
+    # together (a multi-tenant controller has exactly one memory to lose)
+    recovery: Optional[RecoveryManager] = None
+    crashes: Sequence[ControllerCrash] = field(default_factory=list)
 
 
 @dataclass
@@ -724,6 +1142,8 @@ class MultiJobSimResult:
     # control-plane outputs (empty when the run had no arrivals/departures)
     records: Dict[str, JobRecord] = field(default_factory=dict)
     replan_triggers: List[ReplanTrigger] = field(default_factory=list)
+    # --- crash recovery provenance (one record per ControllerCrash)
+    recoveries: List[RecoveryEvent] = field(default_factory=list)
 
     def weighted_throughput(self, weights: Dict[str, float]) -> float:
         return sum(weights.get(n, 1.0) * r.throughput_tps
@@ -795,6 +1215,10 @@ class _JobRun:
                       if cfg.trend is not None else None)
         self.last_step_t = t0                  # previous train_done time
         self.last_step_tokens = 0.0
+        # crash recovery (repro.recovery): write-ahead consumption protocol
+        self.consume_seq = 0                   # serial train-consumption counter
+        self.pending_train: Optional[dict] = None  # consumed, step uncommitted
+        self.cap_slack = 0                     # transient rollback overshoot
 
     # ------------------------------------------------------------ bookkeeping
     def check(self, now: float) -> None:
@@ -804,7 +1228,12 @@ class _JobRun:
                                  + self.in_flight), \
             (self.name, now, self.launched, self.consumed, self.dropped,
              self.in_flight)
-        assert 0 <= self.in_flight <= self.capacity
+        # cap_slack: bounded transient overshoot after a crash rollback of
+        # an uncommitted consumption (see the single-job check note)
+        assert 0 <= self.in_flight <= self.capacity + self.cap_slack, \
+            (self.name, now, self.in_flight, self.capacity, self.cap_slack)
+        if self.in_flight <= self.capacity:
+            self.cap_slack = 0
 
     def close_epoch(self, now: float) -> None:
         self.epoch_stats.append(PlanEpochStat(
@@ -980,8 +1409,23 @@ class MultiJobSimulator:
         triggers: List[ReplanTrigger] = []
         t = 0.0
 
+        # --- crash-consistent recovery (repro.recovery)
+        rmgr = cfg.recovery
+        if cfg.crashes and rmgr is None:
+            raise ValueError("ControllerCrash injection requires "
+                             "MultiSimConfig.recovery (a RecoveryManager)")
+        journaling = rmgr is not None and rmgr.cfg.journal
+        recoveries: List[RecoveryEvent] = []
+        controller_down = False
+        resume_t = 0.0                         # valid while controller_down
+        next_rid = 0                           # pool-global id, never reused
+        consumed_rids: Set[int] = set()        # exactly-once guard (journal)
+
         def launch(jr: _JobRun, i: int, now: float) -> None:
+            nonlocal next_rid
             if i >= jr.n_rep or not jr.alive[i] or jr.steps >= jr.n_steps:
+                return
+            if controller_down:                # nobody to hand out prompts
                 return
             if state == "DRAINING":            # ownership in flux: hold fire
                 jr.idle.add(i)
@@ -995,13 +1439,19 @@ class MultiJobSimulator:
             jr.in_flight += 1
             jr.launched += 1
             jr.generating += 1
+            rid = next_rid
+            next_rid += 1
             length = float(np.clip(rng.lognormal(*_lognorm(jr.P)),
                                    16, jr.P.max_len))
             dur = _gen_duration(cfg.gen_time, length, jr.P, jr.rate[i])
             jr.gen_busy_sum += dur
             gap = _env_gap(cfg.env, rng)
             q.push(now + dur + gap + cfg.reward_cost_s,
-                   "rollout_done", (jr.name, jr.epoch, i, jr.version, length))
+                   "rollout_done",
+                   (jr.name, jr.epoch, i, jr.version, length, rid))
+            if journaling:
+                rmgr.journal({"k": "launch", "job": jr.name, "rid": rid,
+                              "dur": dur})
             if tr is not None:
                 tr.span("replica", f"{jr.name}/r{i}", "generate", now, dur,
                         tokens=length, version=jr.version, job=jr.name)
@@ -1025,6 +1475,10 @@ class MultiJobSimulator:
             fresh = [r for r in jr.buffer if jr.version - r[0] <= jr.eta]
             n_evicted = len(jr.buffer) - len(fresh)
             if n_evicted:
+                if journaling:
+                    rmgr.journal({"k": "evict", "job": jr.name,
+                                  "rids": [r[2] for r in jr.buffer
+                                           if jr.version - r[0] > jr.eta]})
                 jr.dropped += n_evicted
                 jr.in_flight -= n_evicted
                 jr.buffer[:] = fresh
@@ -1038,9 +1492,24 @@ class MultiJobSimulator:
             jr.in_flight -= jr.B
             jr.consumed += jr.B
             tok0 = jr.tokens
-            for vtag, ln in batch:
+            for vtag, ln, _rid in batch:
                 jr.stale_hist.append(jr.version - vtag)
                 jr.tokens += ln + jr.P.prompt_len
+            if journaling:
+                # write-ahead record for this step: journaled at train_done
+                # (the commit point), rolled back whole on a crash between.
+                # Exactly-once: no rollout id is ever consumed twice.
+                rids = [r[2] for r in batch]
+                for rid_ in rids:
+                    if rid_ in consumed_rids:
+                        raise RecoveryError(f"rollout {rid_} consumed twice")
+                    consumed_rids.add(rid_)
+                jr.consume_seq += 1
+                jr.pending_train = {
+                    "k": "train", "job": jr.name, "seq": jr.consume_seq,
+                    "rids": rids, "batch": list(batch), "n": jr.B,
+                    "stalenesses": [jr.version - r[0] for r in batch],
+                    "tokens": jr.tokens - tok0, "t_train": jr.t_train}
             dur = jr.t_train + jr.t_sync
             jr.train_busy += jr.t_train
             jr.trainer_busy_until = now + dur
@@ -1054,11 +1523,11 @@ class MultiJobSimulator:
                             now + jr.t_train, jr.t_sync, job=jr.name)
             if mx is not None:
                 h = mx.histogram(f"sim/{jr.name}/staleness")
-                for vtag, _ln in batch:
+                for vtag, _ln, _rid in batch:
                     h.observe(jr.version - vtag)
                 mx.counter(f"sim/{jr.name}/rollouts_trained").inc(jr.B)
             if mon is not None:
-                for vtag, _ln in batch:
+                for vtag, _ln, _rid in batch:
                     mon.on_staleness(jr.name, now, jr.version - vtag,
                                      jr.eta)
                 mon.on_buffer(jr.name, now, len(jr.buffer), jr.capacity)
@@ -1078,6 +1547,8 @@ class MultiJobSimulator:
             never dropped).  Failure, straggler, trend, arrival and
             departure triggers all funnel through here."""
             nonlocal drain_scheduled, drain_reason, drain_t0
+            if controller_down:
+                return          # accumulate; resume re-schedules the drain
             if replanner is None or state == "DRAINING" or drain_scheduled:
                 return                         # accumulate into pending swap
             ready = max(now + elastic.replan_latency_s,
@@ -1201,6 +1672,373 @@ class MultiJobSimulator:
             if cfg.check_invariants:
                 assert ledger.conserved
 
+        # ----------------------------------------------- crash recovery
+        def capture() -> dict:
+            """Full pool-controller state as one atomic unit: every job's
+            run state, the device ledger, the control plane, the incumbent
+            PoolPlan (by reference — plans are immutable inputs)."""
+            job_states = {}
+            for name, jr in jobs.items():
+                job_states[name] = {
+                    "spec": jr.job, "n_steps": jr.n_steps, "t0": jr.t0,
+                    "plan": jr.plan, "epoch": jr.epoch,
+                    "rate": list(jr.rate), "alive": list(jr.alive),
+                    "cum_factor": list(jr.cum_factor),
+                    "t_train": jr.t_train, "t_sync": jr.t_sync,
+                    "version": jr.version, "buffer": list(jr.buffer),
+                    "in_flight": jr.in_flight, "generating": jr.generating,
+                    "steps": jr.steps, "tokens": jr.tokens,
+                    "stale_hist": list(jr.stale_hist),
+                    "stalls_capacity": jr.stalls_capacity,
+                    "stalls_data": jr.stalls_data,
+                    "dropped": jr.dropped, "launched": jr.launched,
+                    "consumed": jr.consumed,
+                    "gen_busy_sum": jr.gen_busy_sum,
+                    "train_busy": jr.train_busy,
+                    "rep_seconds": jr.rep_seconds,
+                    "pending_dead": set(jr.pending_dead),
+                    "done_t": jr.done_t,
+                    "swaps": [copy.copy(r) for r in jr.swaps],
+                    "swap_hist_idx": list(jr.swap_hist_idx),
+                    "epoch_stats": list(jr.epoch_stats),
+                    "epoch_open": dict(jr.epoch_open),
+                    "trend": (copy.copy(jr.trend)
+                              if jr.trend is not None else None),
+                    "last_step_t": jr.last_step_t,
+                    "last_step_tokens": jr.last_step_tokens,
+                    "consume_seq": jr.consume_seq,
+                    "pending_train": (dict(jr.pending_train)
+                                      if jr.pending_train is not None
+                                      else None),
+                    "cap_slack": jr.cap_slack,
+                }
+            from repro.recovery.restore import capture_control_plane
+            return {
+                "jobs": job_states,
+                "retired": dict(retired),
+                "pool": cur_pool,
+                "ledger": {"owner": dict(ledger.owner),
+                           "excluded": set(ledger.excluded),
+                           "handoffs": list(ledger.handoffs)},
+                "control": (capture_control_plane(control)
+                            if control is not None else None),
+                "pending_submits": pending_submits,
+                "down_until": dict(down_until),
+                "last_commit": last_commit,
+                "pool_swaps": pool_swaps,
+                "triggers": list(triggers),
+                "next_rid": next_rid,
+                "consumed_rids": set(consumed_rids),
+                "rng": rng.bit_generator.state,
+                "excluded": (set(replanner.excluded)
+                             if replanner is not None else None),
+            }
+
+        def _restore_job(js: dict) -> _JobRun:
+            jr = _JobRun(js["spec"], js["plan"], cfg,
+                         n_steps=js["n_steps"], t0=js["t0"])
+            jr.epoch = js["epoch"]
+            jr.rate = list(js["rate"])
+            jr.n_rep = len(jr.rate)
+            jr.alive = list(js["alive"])
+            jr.cum_factor = list(js["cum_factor"])
+            jr.t_train, jr.t_sync = js["t_train"], js["t_sync"]
+            jr.version = js["version"]
+            jr.buffer = list(js["buffer"])
+            jr.in_flight = js["in_flight"]
+            jr.generating = js["generating"]
+            jr.steps = js["steps"]
+            jr.tokens = js["tokens"]
+            jr.stale_hist = list(js["stale_hist"])
+            jr.stalls_capacity = js["stalls_capacity"]
+            jr.stalls_data = js["stalls_data"]
+            jr.dropped = js["dropped"]
+            jr.launched = js["launched"]
+            jr.consumed = js["consumed"]
+            jr.gen_busy_sum = js["gen_busy_sum"]
+            jr.train_busy = js["train_busy"]
+            jr.rep_seconds = js["rep_seconds"]
+            jr.pending_dead = set(js["pending_dead"])
+            jr.done_t = js["done_t"]
+            jr.swaps = [copy.copy(r) for r in js["swaps"]]
+            jr.swap_hist_idx = list(js["swap_hist_idx"])
+            jr.epoch_stats = list(js["epoch_stats"])
+            jr.epoch_open = dict(js["epoch_open"])
+            jr.trend = (copy.copy(js["trend"])
+                        if js["trend"] is not None else None)
+            jr.last_step_t = js["last_step_t"]
+            jr.last_step_tokens = js["last_step_tokens"]
+            jr.consume_seq = js["consume_seq"]
+            jr.pending_train = None            # rolled back below if open
+            jr.cap_slack = js["cap_slack"]
+            return jr
+
+        def do_crash(c: ControllerCrash, now: float) -> None:
+            """Total pool-controller loss: wipe every in-memory event, roll
+            every job back to the last snapshot together, replay the
+            write-ahead journal to exactly-once, verify the invariants
+            (η, conservation, ledger), and schedule the resume."""
+            nonlocal state, drain_scheduled, drain_reason, drain_t0
+            nonlocal cur_pool, last_commit, pool_swaps, pending_submits
+            nonlocal down_until, triggers, next_rid, consumed_rids
+            nonlocal controller_down, resume_t
+            from repro.recovery.restore import restore_control_plane
+            snap_t, st, entries = rmgr.latest()
+
+            def totals():
+                s = (sum(jr.steps for jr in jobs.values())
+                     + sum(r.steps for r in retired.values()))
+                cns = (sum(jr.consumed for jr in jobs.values())
+                       + sum(r.rollouts_trained for r in retired.values()))
+                return s, cns
+
+            # consumptions uncommitted at the crash instant roll back —
+            # explicitly or via replay (see the single-job do_crash note);
+            # record their sizes before the job objects are rebuilt
+            live_pt_n = {name: (jr.pending_train["n"]
+                                if jr.pending_train is not None else 0)
+                         for name, jr in jobs.items()}
+            steps_b, consumed_b = totals()
+            # committed-progress baseline: uncommitted batches are work in
+            # flight, not progress
+            consumed_b -= sum(live_pt_n.values())
+            # controller-internal timers and completions die with the
+            # controller; external injections (hardware faults, recoveries,
+            # submission requests, future crashes) keep happening
+            q.retain(("fail", "job_straggle", "job_submit", "job_recover",
+                      "crash"))
+            # --- roll back to the snapshot (in place: self.jobs aliases)
+            jobs.clear()
+            for name, js in st["jobs"].items():
+                jobs[name] = _restore_job(js)
+            retired.clear()
+            retired.update(st["retired"])
+            cur_pool = st["pool"]
+            ledger.owner = dict(st["ledger"]["owner"])
+            ledger.excluded = set(st["ledger"]["excluded"])
+            ledger.handoffs = list(st["ledger"]["handoffs"])
+            if control is not None and st["control"] is not None:
+                restore_control_plane(control, st["control"])
+            pending_submits = st["pending_submits"]
+            down_until = dict(st["down_until"])
+            last_commit = st["last_commit"]
+            pool_swaps = st["pool_swaps"]
+            triggers = list(st["triggers"])
+            next_rid = st["next_rid"]
+            consumed_rids = set(st["consumed_rids"])
+            rng.bit_generator.state = st["rng"]
+            if replanner is not None and st["excluded"] is not None:
+                replanner.excluded = set(st["excluded"])
+            state = "RUNNING"
+            drain_scheduled = False
+            drain_reason = ""
+            drain_t0 = 0.0
+            # --- replay the journal (exactly-once: entries keyed by
+            # never-reused pool-global rollout ids)
+            completed = {e["rid"] for e in entries if e["k"] == "rollout"}
+            seen_launch: Set[int] = set()
+            seen_rollout: Set[int] = set()
+            per_pt = {n: js["pending_train"]
+                      for n, js in st["jobs"].items()}
+            lost_post = 0
+            for e in entries:
+                k = e["k"]
+                if k == "submit":
+                    pending_submits -= 1
+                    control.submit(e["spec"], e["t"], n_steps=e["n_steps"],
+                                   cluster=replanner.surviving_cluster())
+                    continue
+                jr = jobs.get(e["job"])
+                if k == "launch":
+                    if e["rid"] in seen_launch:
+                        raise RecoveryError(
+                            f"journal: duplicate launch rid {e['rid']}")
+                    seen_launch.add(e["rid"])
+                    next_rid += 1      # every journaled launch used an id
+                    if jr is None:     # job placed by a rolled-back commit
+                        continue
+                    if e["rid"] not in completed:
+                        lost_post += 1     # in-flight at the crash: lost
+                        continue
+                    jr.launched += 1
+                    jr.in_flight += 1
+                    jr.generating += 1
+                    jr.gen_busy_sum += e["dur"]
+                elif k == "rollout":
+                    if e["rid"] in seen_rollout:
+                        raise RecoveryError(
+                            f"journal: duplicate completion rid {e['rid']}")
+                    seen_rollout.add(e["rid"])
+                    if jr is None:
+                        continue
+                    jr.generating -= 1
+                    if e["admitted"]:
+                        jr.buffer.append((e["vtag"], e["length"], e["rid"]))
+                    else:
+                        jr.dropped += 1
+                        jr.in_flight -= 1
+                elif k == "evict":
+                    if jr is None:
+                        continue
+                    rids = set(e["rids"])
+                    keep = [r for r in jr.buffer if r[2] not in rids]
+                    if len(jr.buffer) - len(keep) != len(rids):
+                        raise RecoveryError("journal: evicted rollouts "
+                                            "missing from buffer")
+                    jr.buffer = keep
+                    jr.dropped += len(rids)
+                    jr.in_flight -= len(rids)
+                elif k == "train":
+                    if jr is None:
+                        continue
+                    pt = per_pt.get(e["job"])
+                    if pt is not None and e["seq"] == pt["seq"]:
+                        # consumption in flight at the snapshot: its pop +
+                        # counters are captured — apply only the commit
+                        per_pt[e["job"]] = None
+                    else:
+                        head = jr.buffer[:e["n"]]
+                        if [r[2] for r in head] != list(e["rids"]):
+                            raise RecoveryError(
+                                "journal: train batch does not match "
+                                "buffer head")
+                        del jr.buffer[:e["n"]]
+                        jr.in_flight -= e["n"]
+                        jr.consumed += e["n"]
+                        jr.tokens += e["tokens"]
+                        jr.stale_hist.extend(e["stalenesses"])
+                        jr.train_busy += e["t_train"]
+                        for rid_ in e["rids"]:
+                            if rid_ in consumed_rids:
+                                raise RecoveryError(
+                                    f"rollout {rid_} consumed twice "
+                                    f"across the crash boundary")
+                            consumed_rids.add(rid_)
+                    jr.steps += 1
+                    jr.version += 1
+                    if jr.steps >= jr.n_steps and jr.done_t is None:
+                        jr.done_t = e["t"]
+                        if control is not None:
+                            control.drain(jr.name, e["t"], "finished")
+                elif k == "fail":
+                    for d in e.get("devs", ()):
+                        down_until[d] = max(down_until.get(d, 0.0),
+                                            e["until"])
+                    if jr is None or e["idx"] >= jr.n_rep:
+                        continue
+                    jr.alive[e["idx"]] = False
+                    if (e["downtime"] is None and elastic is not None
+                            and elastic.replan_on_failure):
+                        jr.pending_dead.add(e["idx"])
+                        triggers.append(
+                            ReplanTrigger(e["t"], "failure", e["idx"]))
+                elif k == "straggle":
+                    if jr is None or e["idx"] >= len(jr.rate):
+                        continue
+                    jr.rate[e["idx"]] *= e["factor"]
+                    jr.cum_factor[e["idx"]] *= e["factor"]
+                    if (elastic is not None and jr.cum_factor[e["idx"]]
+                            <= elastic.straggler_threshold):
+                        jr.pending_dead.add(e["idx"])
+                        triggers.append(
+                            ReplanTrigger(e["t"], "straggler", e["idx"]))
+            # a consumption whose step never committed rolls back whole
+            lost_pre = 0
+            for name, jr in jobs.items():
+                pt = per_pt.get(name)
+                rolled_back = 0
+                if pt is not None:
+                    n = pt["n"]
+                    rolled_back = n
+                    jr.buffer[:0] = pt["batch"]
+                    jr.in_flight += n
+                    jr.consumed -= n
+                    jr.tokens -= pt["tokens"]
+                    del jr.stale_hist[-n:]
+                    jr.train_busy -= pt["t_train"]
+                    for rid_ in pt["rids"]:
+                        consumed_rids.discard(rid_)
+                # pre-snapshot in-flight that never completed: lost work
+                lost = jr.generating
+                if lost:
+                    jr.dropped += lost
+                    jr.in_flight -= lost
+                    jr.generating = 0
+                    lost_pre += lost
+                # --- prove the invariants across the crash boundary
+                if jr.in_flight != jr.generating + len(jr.buffer):
+                    raise RecoveryError(
+                        f"restore {name!r}: in_flight {jr.in_flight} != "
+                        f"generating {jr.generating} + "
+                        f"buffered {len(jr.buffer)}")
+                if jr.launched != jr.consumed + jr.dropped + jr.in_flight:
+                    raise RecoveryError(
+                        f"restore {name!r}: conservation broken: launched "
+                        f"{jr.launched} != {jr.consumed}+{jr.dropped}+"
+                        f"{jr.in_flight}")
+                # bounded transient overshoot after a consumption rollback
+                # (see the single-job do_crash note)
+                allowed = (jr.capacity + jr.cap_slack
+                           + max(rolled_back, live_pt_n.get(name, 0)))
+                if not 0 <= jr.in_flight <= allowed:
+                    raise RecoveryError(
+                        f"restore {name!r}: in_flight {jr.in_flight} "
+                        f"outside [0, {allowed}]")
+                jr.cap_slack = max(0, jr.in_flight - jr.capacity)
+                if jr.stale_hist and int(np.max(jr.stale_hist)) > jr.eta:
+                    raise RecoveryError(
+                        f"restore {name!r}: η bound violated: max "
+                        f"staleness {int(np.max(jr.stale_hist))} > "
+                        f"η={jr.eta}")
+            if not ledger.conserved:
+                raise RecoveryError(
+                    "restore: device ledger not conserved")
+            # --- schedule the comeback
+            lat = (c.restore_latency_s if c.restore_latency_s is not None
+                   else rmgr.cfg.restore_latency_s)
+            controller_down = True
+            resume_t = now + lat
+            for jr in jobs.values():
+                jr.trainer_busy_until = resume_t
+            q.push(resume_t, "resume", None)
+            steps_a, consumed_a = totals()
+            recoveries.append(RecoveryEvent(
+                t_crash=now, t_snapshot=snap_t, t_resume=resume_t,
+                mttr_s=lat, steps_before=steps_b, steps_after=steps_a,
+                consumed_before=consumed_b, consumed_after=consumed_a,
+                lost_inflight=lost_pre + lost_post,
+                lost_consumed=max(consumed_b - consumed_a, 0),
+                journal_replayed=len(entries)))
+            if tr is not None:
+                tr.span("recovery", "controller", "restore", now, lat,
+                        snapshot_t=snap_t, replayed=len(entries),
+                        lost_inflight=lost_pre + lost_post)
+            if mx is not None:
+                mx.counter("pool/crashes").inc()
+
+        def do_resume(now: float) -> None:
+            nonlocal controller_down
+            controller_down = False
+            # fresh base: a second crash must replay from a clean journal
+            rmgr.snapshot(now, capture())
+            for jr in jobs.values():
+                for i in range(jr.n_rep):
+                    launch(jr, i, now)
+            if replanner is not None and (
+                    any(jr.pending_dead for jr in jobs.values())
+                    or (control is not None and control.queued())
+                    or (cfg.depart_on_completion
+                        and any(jr.steps >= jr.n_steps
+                                for jr in jobs.values()))):
+                request_replan(now, "recovery")
+            if control is not None and retry_s is not None and (
+                    pending_submits or control.queued()):
+                q.push(now + retry_s, "admission_tick", None)
+            if mon is not None:
+                mon.reset()
+                q.push(now + mon.cfg.poll_interval_s, "monitor_poll", None)
+            q.push(now + rmgr.cfg.interval_s, "snapshot", None)
+
         for f in cfg.failures:
             q.push(f.t_fail, "fail", f)
         for s in cfg.stragglers:
@@ -1224,9 +2062,17 @@ class MultiJobSimulator:
                    if cfg.admission is not None else None)
         if control is not None and retry_s is not None:
             q.push(retry_s, "admission_tick", None)
+        for c in cfg.crashes:
+            q.push(c.t_crash, "crash", c)
+        if rmgr is not None:
+            # t=0 baseline: a crash before the first cadence snapshot
+            # restores here and replays the initial launches
+            rmgr.snapshot(0.0, capture())
         for jr in jobs.values():
             for i in range(jr.n_rep):
                 launch(jr, i, 0.0)
+        if rmgr is not None:
+            q.push(rmgr.cfg.interval_s, "snapshot", None)
         if mon is not None:
             q.push(mon.cfg.poll_interval_s, "monitor_poll", None)
 
@@ -1239,15 +2085,21 @@ class MultiJobSimulator:
             ev = q.pop()
             t = ev.time
             if ev.kind == "rollout_done":
-                name, ev_epoch, i, vtag, length = ev.payload
+                name, ev_epoch, i, vtag, length, rid = ev.payload
                 jr = jobs.get(name)             # None: job already departed
                 if jr is not None:
                     jr.generating -= 1
-                    if jr.version - vtag > jr.eta:
+                    admitted = jr.version - vtag <= jr.eta
+                    if not admitted:
                         jr.dropped += 1
                         jr.in_flight -= 1
                     else:
-                        jr.buffer.append((vtag, length))
+                        jr.buffer.append((vtag, length, rid))
+                    if journaling:
+                        rmgr.journal({"k": "rollout", "job": name,
+                                      "rid": rid, "vtag": vtag,
+                                      "length": length,
+                                      "admitted": admitted})
                     if ev_epoch == jr.epoch:   # old-epoch replicas stay down
                         launch(jr, i, t)
                     maybe_train(jr, t)
@@ -1256,6 +2108,12 @@ class MultiJobSimulator:
                 jr = jobs[name]
                 jr.steps += 1
                 jr.version += 1
+                if journaling and jr.pending_train is not None:
+                    # the commit point: this step survives a crash from
+                    # here on (replayed from the journal)
+                    jr.pending_train["t"] = t
+                    rmgr.journal(jr.pending_train)
+                    jr.pending_train = None
                 if jr.steps >= jr.n_steps:
                     if jr.done_t is None:
                         jr.done_t = t
@@ -1285,6 +2143,7 @@ class MultiJobSimulator:
                 jr = jobs.get(f.job)
                 if jr is not None and f.replica_idx < jr.n_rep:
                     jr.alive[f.replica_idx] = False
+                    devs: List[int] = []
                     if f.downtime is not None:
                         # transient: recovers in place; remember the outage
                         # per device so a swap can't cancel the downtime
@@ -1297,7 +2156,19 @@ class MultiJobSimulator:
                                     down_until[d.index] = max(
                                         down_until.get(d.index, 0.0),
                                         t + f.downtime)
-                    elif elastic is not None and elastic.replan_on_failure:
+                                    devs.append(d.index)
+                    if journaling:
+                        # hardware state is world state: it must survive
+                        # a controller crash via replay
+                        rmgr.journal({"k": "fail", "job": f.job,
+                                      "idx": f.replica_idx,
+                                      "downtime": f.downtime, "t": t,
+                                      "devs": devs,
+                                      "until": (t + f.downtime
+                                                if f.downtime is not None
+                                                else 0.0)})
+                    if (f.downtime is None and elastic is not None
+                            and elastic.replan_on_failure):
                         trigger_replan(t, jr, f.replica_idx)
             elif ev.kind == "job_recover":
                 name, ev_epoch, i = ev.payload
@@ -1312,16 +2183,29 @@ class MultiJobSimulator:
                 if jr is not None and s.replica_idx < jr.n_rep:
                     jr.rate[s.replica_idx] *= s.factor
                     jr.cum_factor[s.replica_idx] *= s.factor
+                    if journaling:
+                        rmgr.journal({"k": "straggle", "job": s.job,
+                                      "idx": s.replica_idx,
+                                      "factor": s.factor, "t": t})
                     if (elastic is not None and jr.cum_factor[s.replica_idx]
                             <= elastic.straggler_threshold):
                         trigger_replan(t, jr, s.replica_idx, "straggler")
             elif ev.kind == "job_submit":
                 a = ev.payload
-                pending_submits -= 1
-                dec = control.submit(a.spec, t, n_steps=a.n_steps,
-                                     cluster=replanner.surviving_cluster())
-                if dec.action == "queue":
-                    request_replan(t, f"arrival:{a.spec.name}")
+                if controller_down:
+                    # nobody to admit it: the request waits out the outage
+                    q.push(resume_t, "job_submit", a)
+                else:
+                    pending_submits -= 1
+                    dec = control.submit(a.spec, t, n_steps=a.n_steps,
+                                         cluster=replanner.surviving_cluster())
+                    if journaling:
+                        # submissions are world state: the request already
+                        # happened, its admission must survive the crash
+                        rmgr.journal({"k": "submit", "spec": a.spec,
+                                      "n_steps": a.n_steps, "t": t})
+                    if dec.action == "queue":
+                        request_replan(t, f"arrival:{a.spec.name}")
             elif ev.kind == "admission_tick":
                 due = control.tick(t, cluster=replanner.surviving_cluster())
                 if due:
@@ -1339,7 +2223,40 @@ class MultiJobSimulator:
                 q.push(t + elastic.replan_latency_s, "pool_ready", None)
             elif ev.kind == "pool_ready":
                 commit_pool(t)
+            elif ev.kind == "snapshot":
+                rmgr.snapshot(t, capture())
+                if rmgr.cfg.snapshot_cost_s > 0.0:
+                    # modeled stop-the-world capture: every trainer
+                    # pauses, and the pause gets its own wake-up (see
+                    # the single-job snapshot branch)
+                    for jr in jobs.values():
+                        jr.trainer_busy_until = max(
+                            jr.trainer_busy_until,
+                            t + rmgr.cfg.snapshot_cost_s)
+                    q.push(t + rmgr.cfg.snapshot_cost_s,
+                           "trainer_wake", None)
+                # re-arm only while the pool can still make progress (same
+                # liveness condition as the monitor poll chain)
+                if (drain_scheduled or state == "DRAINING"
+                        or any(jr.steps < jr.n_steps
+                               and (jr.generating > 0
+                                    or len(jr.buffer) >= jr.B)
+                               for jr in jobs.values())):
+                    q.push(t + rmgr.cfg.interval_s, "snapshot", None)
+                if rmgr.cfg.snapshot_cost_s <= 0.0:
+                    # pure observation: skip the trailing trainer probe so
+                    # a free snapshot cannot perturb stall accounting
+                    # (bit-identity with no manager attached)
+                    continue
+            elif ev.kind == "trainer_wake":
+                pass                     # falls to the trailing probe
+            elif ev.kind == "crash":
+                do_crash(ev.payload, t)
+            elif ev.kind == "resume":
+                do_resume(t)
             elif ev.kind == "monitor_poll":
+                if rmgr is not None:
+                    rmgr.observe_age(t)
                 for a in mon.poll(t):
                     if not cfg.monitor_replan or replanner is None:
                         continue
@@ -1398,4 +2315,5 @@ class MultiJobSimulator:
             excluded=set(ledger.excluded),
             records=dict(control.records) if control is not None else {},
             replan_triggers=triggers,
+            recoveries=recoveries,
         )

@@ -1,0 +1,512 @@
+"""Crash-consistent recovery (ISSUE 10): checkpoint durability, the
+snapshot/journal manager, controller-crash injection in both simulator
+loops with bounded-loss gates, engine quiesce token-identity, the
+monitor's snapshot-age detector, and the snapshot→restore→replay
+property test."""
+import copy
+import json
+import os
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:
+    from _prop import given, settings, st
+
+from repro.ckpt.checkpoint import (CheckpointManager, latest_step,
+                                   restore_checkpoint, save_checkpoint,
+                                   sweep_tmp)
+from repro.core.cluster import paper_heterogeneous
+from repro.core.cost_model import LengthDistribution
+from repro.core.model_spec import PAPER_MODELS
+from repro.core.pool import JobSpec, schedule_pool
+from repro.core.scheduler import SchedulerConfig, schedule
+from repro.core.staleness import PoolStalenessRegistry, StalenessConfig
+from repro.obs import HealthMonitor, MetricsRegistry, MonitorConfig
+from repro.recovery import (RecoveryConfig, RecoveryError, RecoveryManager,
+                            capture_buffers, capture_registry,
+                            replan_for_restore, restore_buffers,
+                            restore_registry, verify_restored)
+from repro.rl.buffer import JobBuffers, Rollout
+from repro.sim import (AsyncRLSimulator, ControllerCrash, MultiJobSimulator,
+                       MultiSimConfig, SimConfig)
+
+P = LengthDistribution(mean_len=1024, prompt_len=128)
+SCHED_CFG = SchedulerConfig(tokens_per_step=2 ** 18, stable_iters=3,
+                            max_iters=12, adapt_delta=False)
+SIM = dict(n_steps=8, rollouts_per_step=32, eta=4, reward_cost_s=0.1)
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return schedule(PAPER_MODELS["1.5B"], paper_heterogeneous(16, 16), P,
+                    SCHED_CFG)
+
+
+def _pool_and_cluster():
+    cluster = paper_heterogeneous(8, 24)
+    cfg4 = SchedulerConfig(tokens_per_step=2 ** 18, stable_iters=3,
+                           max_iters=12, adapt_delta=False,
+                           staleness=StalenessConfig(eta=4))
+    cfg2 = SchedulerConfig(tokens_per_step=2 ** 18, stable_iters=3,
+                           max_iters=12, adapt_delta=False,
+                           staleness=StalenessConfig(eta=2))
+    jobs = [JobSpec("j1.5b", PAPER_MODELS["1.5B"], P, cfg4, weight=1.0),
+            JobSpec("j7b", PAPER_MODELS["7B"], P, cfg2, weight=4.0)]
+    return schedule_pool(jobs, cluster), cluster
+
+
+@pytest.fixture(scope="module")
+def pool_cluster():
+    return _pool_and_cluster()
+
+
+# ==================================================== checkpoint durability
+def test_meta_present_and_parseable_in_every_retained_ckpt(tmp_path):
+    for step in range(1, 6):
+        save_checkpoint(tmp_path, step, {"params": np.arange(step),
+                                         "version": step}, keep=3)
+    kept = sorted(p for p in tmp_path.iterdir()
+                  if p.name.startswith("step-"))
+    assert len(kept) == 3                       # keep policy held
+    for p in kept:
+        with open(p / "META.json") as f:
+            meta = json.load(f)                 # parseable, not truncated
+        assert meta["step"] == int(p.name.split("-")[1])
+        assert meta["keys"] == ["params", "version"]
+    assert latest_step(tmp_path) == 5
+
+
+def test_sweep_tmp_on_manager_init_and_after_save(tmp_path):
+    # a save that died mid-write leaves its mkdtemp dir behind
+    leak = tmp_path / "tmp-7-deadbeef"
+    leak.mkdir(parents=True)
+    (leak / "state.pkl").write_bytes(b"partial")
+    CheckpointManager(tmp_path, every=1)
+    assert not leak.exists(), "init did not sweep stale tmp dirs"
+
+    leak2 = tmp_path / "tmp-9-cafebabe"
+    leak2.mkdir()
+    save_checkpoint(tmp_path, 1, {"x": 0}, keep=3)
+    assert not leak2.exists(), "save did not sweep stale tmp dirs"
+    assert (tmp_path / "step-00000001").exists()
+
+
+def test_sweep_tmp_returns_removed_and_ignores_missing(tmp_path):
+    assert sweep_tmp(tmp_path / "nope") == []
+    (tmp_path / "tmp-1-x").mkdir()
+    (tmp_path / "step-00000001").mkdir()
+    removed = sweep_tmp(tmp_path)
+    assert [p.name for p in removed] == ["tmp-1-x"]
+    assert (tmp_path / "step-00000001").exists()
+
+
+# ===================================================== RecoveryManager unit
+def test_retry_with_backoff_then_success():
+    m = RecoveryManager(RecoveryConfig(max_retries=4, backoff_s=0.1))
+    sleeps = []
+    m._sleep = sleeps.append
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("disk hiccup")
+        return "ok"
+
+    assert m._with_retry("write", flaky) == "ok"
+    assert sleeps == [0.1, 0.2]                 # exponential backoff
+
+
+def test_retry_exhaustion_raises_typed_error():
+    m = RecoveryManager(RecoveryConfig(max_retries=3, backoff_s=0.01))
+    m._sleep = lambda s: None
+
+    def always_fails():
+        raise OSError("full")
+
+    with pytest.raises(RecoveryError, match="3 attempts"):
+        m._with_retry("journal append", always_fails)
+
+
+def test_config_rejects_cost_at_or_above_cadence():
+    # a stop-the-world pause >= the cadence would starve the trainer:
+    # each snapshot re-arms the pause before the wake event fires
+    with pytest.raises(ValueError, match="snapshot_cost_s"):
+        RecoveryConfig(interval_s=5.0, snapshot_cost_s=5.0)
+    RecoveryConfig(interval_s=5.0, snapshot_cost_s=4.9)   # just below: fine
+
+
+def test_latest_without_snapshot_raises():
+    with pytest.raises(RecoveryError, match="no snapshot"):
+        RecoveryManager().latest()
+
+
+def test_file_mode_roundtrip_survives_process_death(tmp_path):
+    d = str(tmp_path / "rec")
+    m = RecoveryManager(RecoveryConfig(interval_s=5.0, directory=d))
+    m.snapshot(10.0, {"steps": 3, "buffer": [1, 2]})
+    m.journal({"k": "rollout", "rid": 7})
+    m.journal({"k": "train", "rids": [7]})
+
+    # a fresh manager on the same directory == a new process after a crash
+    m2 = RecoveryManager(RecoveryConfig(interval_s=5.0, directory=d))
+    t, state, entries = m2.latest()
+    assert t == 10.0
+    assert state == {"steps": 3, "buffer": [1, 2]}
+    assert entries == [{"k": "rollout", "rid": 7}, {"k": "train",
+                       "rids": [7]}]
+
+    # a new snapshot truncates the journal durably
+    m2.snapshot(20.0, {"steps": 4})
+    m3 = RecoveryManager(RecoveryConfig(interval_s=5.0, directory=d))
+    t, state, entries = m3.latest()
+    assert (t, state, entries) == (20.0, {"steps": 4}, [])
+
+
+def test_manager_age_and_stats():
+    m = RecoveryManager(RecoveryConfig(interval_s=5.0))
+    assert m.age(100.0) == float("inf")
+    m.snapshot(10.0, {})
+    assert m.age(13.5) == 3.5
+    s = m.stats()
+    assert s["n_snapshots"] == 1 and s["last_snapshot_t"] == 10.0
+
+
+def test_snapshot_feeds_metrics_and_monitor():
+    reg = MetricsRegistry()
+    mon = HealthMonitor(MonitorConfig(snapshot_interval_s=5.0))
+    m = RecoveryManager(RecoveryConfig(interval_s=5.0), metrics=reg,
+                        monitor=mon)
+    m.snapshot(10.0, {})
+    assert mon._last_snapshot_t == 10.0
+    snap = reg.snapshot()
+    assert snap["gauges"]["ckpt/snapshot_age_s"] == 0.0
+    m.observe_age(14.0)
+    assert reg.snapshot()["gauges"]["ckpt/snapshot_age_s"] == 4.0
+
+
+# ================================================ monitor snapshot-age alarm
+def test_monitor_snapshot_age_detector():
+    mon = HealthMonitor(MonitorConfig(snapshot_interval_s=10.0,
+                                      cooldown_s=1.0))
+    assert mon.poll(50.0) == []                 # no snapshot regime yet
+    mon.on_snapshot(0.0)
+    assert mon.poll(8.0) == []                  # within cadence
+    warn = mon.poll(15.0)
+    assert [a.detector for a in warn] == ["snapshot"]
+    assert warn[0].severity == "warn"
+    crit = mon.poll(25.0)                       # age > 2× interval
+    assert crit and crit[0].severity == "critical"
+    mon.on_snapshot(30.0)
+    assert mon.poll(35.0) == []                 # fresh snapshot clears it
+
+
+def test_monitor_snapshot_detector_disabled_by_default():
+    mon = HealthMonitor()                       # snapshot_interval_s == 0
+    mon.on_snapshot(0.0)
+    assert mon.poll(1e6) == []
+
+
+# =========================================== single-job simulator crash gates
+def test_single_job_bit_identical_with_recovery_attached(plan):
+    off = AsyncRLSimulator(plan, P, SimConfig(**SIM, seed=3)).run()
+    mgr = RecoveryManager(RecoveryConfig(interval_s=5.0))
+    on = AsyncRLSimulator(plan, P, SimConfig(**SIM, seed=3,
+                                             recovery=mgr)).run()
+    assert on == off                            # dataclass equality: all of it
+    assert mgr.n_snapshots > 1
+
+
+def test_single_job_snapshot_cost_pauses_but_completes(plan):
+    """A nonzero ``snapshot_cost_s`` stalls the trainer for the pause but
+    the run still finishes (the ``trainer_wake`` event re-runs the probe
+    once the pause ends — without it a fully capacity-paused queue would
+    spin on snapshots forever)."""
+    off = AsyncRLSimulator(plan, P, SimConfig(**SIM, seed=3)).run()
+    mgr = RecoveryManager(RecoveryConfig(interval_s=5.0,
+                                         snapshot_cost_s=2.0))
+    on = AsyncRLSimulator(plan, P, SimConfig(**SIM, seed=3,
+                                             recovery=mgr)).run()
+    assert on.steps == SIM["n_steps"]
+    assert on.wall_time_s >= off.wall_time_s    # pauses are never free speedups
+    assert on.tokens_consumed == off.tokens_consumed
+
+
+def test_single_job_crash_requires_manager(plan):
+    with pytest.raises(ValueError, match="recovery"):
+        AsyncRLSimulator(plan, P, SimConfig(
+            **SIM, seed=3, crashes=[ControllerCrash(5.0)])).run()
+
+
+@pytest.mark.parametrize("t_crash", [3.0, 7.5, 12.0, 20.0])
+def test_single_job_crash_bounded_loss(plan, t_crash):
+    """Gates (a)-(c): with the journal on, no consumed progress is lost,
+    the run still completes, invariants (η, conservation, capacity) are
+    re-checked at every subsequent event, and the snapshot the restore
+    used was at most one interval old."""
+    mgr = RecoveryManager(RecoveryConfig(interval_s=5.0,
+                                         restore_latency_s=2.0))
+    r = AsyncRLSimulator(plan, P, SimConfig(
+        **SIM, seed=3, recovery=mgr, check_invariants=True,
+        crashes=[ControllerCrash(t_crash)])).run()
+    assert r.steps == SIM["n_steps"]
+    [rv] = r.recoveries
+    assert rv.lost_consumed == 0                # journal: exactly-once replay
+    assert rv.snapshot_age_s <= mgr.cfg.interval_s + 1e-9
+    assert rv.mttr_s == 2.0
+    assert rv.t_resume == t_crash + 2.0
+    assert rv.lost_inflight >= 0
+
+
+def test_single_job_double_crash(plan):
+    mgr = RecoveryManager(RecoveryConfig(interval_s=5.0,
+                                         restore_latency_s=2.0))
+    r = AsyncRLSimulator(plan, P, SimConfig(
+        **SIM, seed=3, recovery=mgr, check_invariants=True,
+        crashes=[ControllerCrash(8.0), ControllerCrash(16.0)])).run()
+    assert r.steps == SIM["n_steps"]
+    assert len(r.recoveries) == 2
+    assert all(rv.lost_consumed == 0 for rv in r.recoveries)
+
+
+def test_single_job_crash_journal_off_loss_bounded_by_interval(plan):
+    """Gate (a) without the journal: loss is bounded by one snapshot
+    interval — everything consumed before the last snapshot survives."""
+    mgr = RecoveryManager(RecoveryConfig(interval_s=5.0,
+                                         restore_latency_s=2.0,
+                                         journal=False))
+    r = AsyncRLSimulator(plan, P, SimConfig(
+        **SIM, seed=3, recovery=mgr, check_invariants=True,
+        crashes=[ControllerCrash(12.0)])).run()
+    assert r.steps == SIM["n_steps"]            # lost work is re-done
+    [rv] = r.recoveries
+    assert rv.snapshot_age_s <= mgr.cfg.interval_s + 1e-9
+    assert rv.journal_replayed == 0
+    assert rv.consumed_after <= rv.consumed_before
+
+
+# ============================================ multi-job simulator crash gates
+def test_multi_job_bit_identical_with_recovery_attached(pool_cluster):
+    pool, _ = pool_cluster
+    base = dict(n_steps=6, rollouts_per_step=32, check_invariants=True)
+    off = MultiJobSimulator(pool, MultiSimConfig(**base)).run()
+    mgr = RecoveryManager(RecoveryConfig(interval_s=5.0))
+    on = MultiJobSimulator(pool, MultiSimConfig(**base,
+                                                recovery=mgr)).run()
+    assert on == off
+    assert mgr.n_snapshots > 1
+
+
+def test_multi_job_crash_requires_manager(pool_cluster):
+    pool, _ = pool_cluster
+    with pytest.raises(ValueError, match="recovery"):
+        MultiJobSimulator(pool, MultiSimConfig(
+            n_steps=2, rollouts_per_step=32,
+            crashes=[ControllerCrash(3.0)])).run()
+
+
+@pytest.mark.parametrize("t_crash", [4.0, 11.0, 17.0])
+def test_multi_job_crash_bounded_loss(pool_cluster, t_crash):
+    """Gates (a)-(c) pool-wide: every job completes, no consumed progress
+    lost, η + per-job conservation + the device-ledger partition are
+    proved inside the restore (a violation raises) and re-checked by
+    check_invariants for the rest of the run."""
+    pool, _ = pool_cluster
+    mgr = RecoveryManager(RecoveryConfig(interval_s=5.0,
+                                         restore_latency_s=2.0))
+    r = MultiJobSimulator(pool, MultiSimConfig(
+        n_steps=6, rollouts_per_step=32, check_invariants=True,
+        recovery=mgr, crashes=[ControllerCrash(t_crash)])).run()
+    assert all(j.steps == 6 for j in r.per_job.values())
+    [rv] = r.recoveries
+    assert rv.lost_consumed == 0
+    assert rv.snapshot_age_s <= mgr.cfg.interval_s + 1e-9
+    assert rv.mttr_s == 2.0
+    for j in r.per_job.values():                # conservation at the end
+        assert j.rollouts_launched == (j.rollouts_trained + j.dropped
+                                       + j.rollouts_in_buffer
+                                       + j.rollouts_generating)
+
+
+# ============================================================ changed pool
+def test_replan_for_restore_excludes_dead_devices(pool_cluster):
+    import dataclasses
+    pool, cluster = pool_cluster
+    dead = sorted(pool.job_devices("j1.5b"))[:2]
+    new = replan_for_restore(pool, cluster, dead_devices=dead)
+    assert not set(dead) & set(new.owner)       # nobody owns a dead device
+    surviving = dataclasses.replace(
+        cluster, devices=[d for d in cluster.devices
+                          if d.index not in set(dead)])
+    new.assert_partition(surviving)
+
+
+# ===================================================== engine quiesce gates
+def _tiny_engine(greedy):
+    import jax
+    from repro.data.tasks import MathTaskGenerator, Tokenizer
+    from repro.models.api import ModelConfig, get_model
+    from repro.rl.rollout import GenConfig
+    from repro.rl.weight_sync import WeightStore
+    from repro.serve import PagedEngine, ServeConfig
+
+    tok = Tokenizer()
+    tiny = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=32,
+                       n_heads=4, n_kv_heads=2, d_ff=64,
+                       vocab=tok.vocab_size, dtype="float32", remat=False)
+    model = get_model(tiny)
+    store = WeightStore()
+    store.publish(model.init(jax.random.PRNGKey(0), tiny))
+    gen = GenConfig(max_new_tokens=12, greedy=greedy)
+    # small prefill chunks so prompts take several steps to prefill —
+    # quiesce must actually find mid-prefill requests to drain
+    sc = ServeConfig(max_slots=4, max_len=96, prefill_chunk=2)
+    eng = PagedEngine(tiny, store, gen, sc, rng_seed=1)
+    tasks = MathTaskGenerator(seed=0).batch(6)
+    return eng, tasks
+
+
+def test_quiesce_leaves_no_half_prefilled_request():
+    eng, tasks = _tiny_engine(greedy=True)
+    eng.submit(tasks)
+    eng.step()                                  # admit + begin prefilling
+    assert any(r.state in ("PREFILL", "FORK")
+               for r in eng._active.values())
+    steps = eng.quiesce()
+    assert steps > 0
+    assert all(r.state == "DECODE" for r in eng._active.values())
+    assert eng._queue                            # unadmitted work stays queued
+
+
+def test_quiesce_resumed_run_token_identical():
+    """A run interrupted by quiesce (the drain-to-checkpoint boundary)
+    produces exactly the tokens of an uninterrupted run."""
+    eng_a, tasks = _tiny_engine(greedy=True)
+    eng_a.submit(tasks)
+    eng_a.drain()
+    plain, _ = eng_a.collect()
+
+    eng_b, tasks = _tiny_engine(greedy=True)
+    eng_b.submit(tasks)
+    eng_b.step()
+    eng_b.quiesce()                             # checkpointable boundary
+    eng_b.step()
+    eng_b.quiesce()                             # and again mid-run
+    eng_b.drain()
+    quiesced, _ = eng_b.collect()
+
+    assert [r.completion_ids for r in plain] == \
+        [r.completion_ids for r in quiesced]
+
+
+# =================================== property: snapshot → restore → replay
+_OPS = ["push_a", "push_b", "gen_a", "finish_a", "pop_a", "pop_b",
+        "bump_a", "bump_b", "handoff_ab", "handoff_ba", "swap_a",
+        "snap", "crash"]
+
+
+def _mk_state():
+    bufs, reg = JobBuffers(), PoolStalenessRegistry()
+    model = {}
+    for name, eta in (("a", 2), ("b", 1)):
+        cfg = StalenessConfig(eta=eta, rollouts_per_step=4)
+        bufs.add_job(name, cfg)
+        reg.add_job(name, cfg)
+        model[name] = {"launched": 0, "consumed": 0, "dropped": 0,
+                       "generating": 0}
+    return bufs, reg, model
+
+
+def _capture(bufs, reg, model):
+    return {"bufs": capture_buffers(bufs), "reg": capture_registry(reg),
+            "model": copy.deepcopy(model)}
+
+
+def _rollout(version):
+    return Rollout(prompt_ids=[1, 2], completion_ids=[3],
+                   behavior_logp=np.zeros(1, np.float32),
+                   version=version, group_id=0)
+
+
+def _check_conservation(bufs, reg, model):
+    counters = {}
+    for name in bufs.jobs():
+        b, m = bufs[name], model[name]
+        assert b.ctl.in_flight == len(b._items) + m["generating"], name
+        counters[name] = {"launched": m["launched"],
+                          "consumed": m["consumed"],
+                          "dropped": m["dropped"] + b.dropped,
+                          "in_flight": b.ctl.in_flight}
+    verify_restored(registry=reg, buffers=bufs, counters=counters)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.sampled_from(_OPS), min_size=1, max_size=60))
+def test_snapshot_restore_replay_property(ops):
+    """Under arbitrary interleavings of push/pop/bump/handoff/swap/crash,
+    a restore from the last snapshot (i) passes ``verify_restored``,
+    (ii) is idempotent (restoring twice gives the identical capture),
+    and (iii) keeps per-job conservation exact after every op."""
+    bufs, reg, model = _mk_state()
+    snap = _capture(bufs, reg, model)
+
+    def buf_dropped():                          # bump_version-evicted count
+        return {n: bufs[n].dropped for n in bufs.jobs()}
+
+    for op in ops:
+        if op in ("push_a", "push_b"):
+            name = op[-1]
+            b = bufs[name]
+            if b.can_launch(1):
+                b.launch(1)
+                reg.controller(name).launch(1)
+                b.push(_rollout(b.ctl.version))
+                model[name]["launched"] += 1
+        elif op == "gen_a":                     # launched, still generating
+            if bufs["a"].can_launch(1):
+                bufs["a"].launch(1)
+                reg.controller("a").launch(1)
+                model["a"]["launched"] += 1
+                model["a"]["generating"] += 1
+        elif op == "finish_a":                  # generation completes
+            if model["a"]["generating"] > 0:
+                bufs["a"].push(_rollout(bufs["a"].ctl.version))
+                model["a"]["generating"] -= 1
+        elif op in ("pop_a", "pop_b"):
+            name = op[-1]
+            b = bufs[name]
+            if b.ready(2):
+                batch = b.pop_batch(2)
+                reg.controller(name).consume([r.version for r in batch])
+                model[name]["consumed"] += 2
+        elif op in ("bump_a", "bump_b"):
+            name = op[-1]
+            before = bufs[name].dropped
+            bufs[name].bump_version()
+            evicted = bufs[name].dropped - before
+            reg.controller(name).bump_version()
+            if evicted:
+                reg.controller(name).drop(evicted)
+        elif op in ("handoff_ab", "handoff_ba"):
+            src, dst = op[-2], op[-1]
+            bufs.on_device_handoff(src, dst)
+            reg.record_handoff(src, dst)
+        elif op == "swap_a":
+            bufs["a"].on_plan_swap()
+        elif op == "snap":
+            snap = _capture(bufs, reg, model)
+        elif op == "crash":
+            bufs = restore_buffers(snap["bufs"])
+            reg = restore_registry(snap["reg"])
+            model = copy.deepcopy(snap["model"])
+            # idempotence: a second restore from the same capture is
+            # indistinguishable from the first
+            again = restore_buffers(snap["bufs"])
+            assert capture_buffers(again) == capture_buffers(bufs)
+            assert capture_registry(restore_registry(snap["reg"])) == \
+                capture_registry(reg)
+        _check_conservation(bufs, reg, model)
